@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: CSV/console emit + scale flags."""
+from __future__ import annotations
+
+import os
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+# BENCH_SCALE=full reproduces paper-scale sweeps (slow); default is a
+# reduced sweep that exercises identical code with smaller Ω/N/years.
+SCALE = os.environ.get("BENCH_SCALE", "quick")
+
+
+def emit(name: str, rows: list[dict], keys: list[str] | None = None):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    if keys is None:  # union of keys, first-row order first
+        keys = list(rows[0].keys())
+        for r in rows[1:]:
+            keys.extend(k for k in r if k not in keys)
+    path = RESULTS / f"{name}.csv"
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    width = {k: max(len(k), *(len(str(r.get(k, ""))) for r in rows))
+             for k in keys}
+    print(f"\n== {name} -> {path}")
+    print("  " + "  ".join(k.ljust(width[k]) for k in keys))
+    for r in rows:
+        print("  " + "  ".join(str(r.get(k, "")).ljust(width[k])
+                               for k in keys))

@@ -1,0 +1,41 @@
+"""Fig. 5: surviving honest fragments of one chunk group over 10 years,
+two inner-code configurations."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit
+from repro.core import simulation as S
+
+# (K_inner, R): the default and a lower-redundancy variant. With 1/3
+# Byzantine claimers a group of R keeps ~2R/3 honest fragments, so R=72
+# rides at ~48 — a visibly thinner margin above K_inner=32 (Fig. 5's
+# narrative) while remaining recoverable; R≤64 sits within 3σ of the
+# threshold and can absorb over a multi-year trace.
+CONFIGS = ((32, 80), (32, 72))
+
+
+def run():
+    years = 10.0 if SCALE == "full" else 3.0
+    rows = []
+    for k, r in CONFIGS:
+        tr = S.fragment_trace(k, r, byz_fraction=1 / 3, churn_per_year=26.0,
+                              years=years, seed=5)
+        sample = tr[:: max(1, len(tr) // 24)]
+        rows.append({
+            "config": f"({k},{r})",
+            "min": int(tr.min()),
+            "mean": round(float(tr.mean()), 1),
+            "max": int(tr.max()),
+            "recoverable": bool(tr.min() >= k),
+            "trace_sample": " ".join(str(int(x)) for x in sample),
+        })
+    emit("fig5_fragment_trace", rows,
+         keys=["config", "min", "mean", "max", "recoverable",
+               "trace_sample"])
+    assert all(r["recoverable"] for r in rows), "chunk lost — Fig.5 violated"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Run every benchmark harness (one per paper table/figure + roofline).
+
+    PYTHONPATH=src python -m benchmarks.run            # quick scale
+    BENCH_SCALE=full PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (
+        coding_micro,
+        durability_model,
+        fault_tolerance,
+        fragment_trace,
+        latency,
+        repair_traffic,
+        roofline,
+        selection_micro,
+    )
+
+    suites = [
+        ("fig4_repair_traffic", repair_traffic.run),
+        ("fig5_fragment_trace", fragment_trace.run),
+        ("fig6_fault_tolerance", fault_tolerance.run),
+        ("fig789_latency", latency.run),
+        ("fig10_coding_micro", coding_micro.run),
+        ("selection_micro", selection_micro.run),
+        ("durability_model", durability_model.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[done] {name} ({time.time() - t0:.1f}s)")
+        except Exception:
+            failures += 1
+            print(f"[FAIL] {name}:\n{traceback.format_exc()}")
+    print(f"\n{len(suites) - failures}/{len(suites)} benchmark suites OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

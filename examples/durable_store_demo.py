@@ -1,0 +1,83 @@
+"""Durability under attack: Byzantine claimers, churn, a targeted attack,
+and decentralized repair keeping objects alive — VAULT vs the replicated
+baseline on the SAME network.
+
+    PYTHONPATH=src python examples/durable_store_demo.py
+"""
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import group as G
+from repro.core import repair as R
+from repro.core.baseline import ReplicatedStore
+from repro.core.network import SimNetwork
+from repro.core.vault import VaultClient
+
+rng = np.random.default_rng(0)
+net = SimNetwork(seed=0)
+N, BYZ = 200, 66
+for i in range(N):
+    net.add_node(byzantine=i < BYZ, seed=i.to_bytes(4, "little"))
+print(f"network: {N} peers, {BYZ} byzantine ({BYZ/N:.0%})")
+
+params = C.CodeParams(k_outer=4, n_chunks=8, k_inner=8, r_inner=24)
+client = VaultClient(net, net.alive_nodes()[80])
+repl = ReplicatedStore(net, replication=3)
+
+objects = []
+for i in range(6):
+    data = rng.integers(0, 256, 20_000, np.uint8).tobytes()
+    oid, _ = client.store(data, params, cache_ttl=1e9)
+    rid, _ = repl.store(client.node, data)
+    objects.append((data, oid, rid))
+print(f"stored {len(objects)} objects in both systems "
+      f"(vault redundancy {params.redundancy:.2f}x vs 3x replication)")
+
+
+def survey(label):
+    v_ok = r_ok = 0
+    for data, oid, rid in objects:
+        try:
+            got, _ = client.query(oid)
+            v_ok += int(got == data)
+        except Exception:
+            pass
+        try:
+            got, _ = repl.query(client.node, rid)
+            r_ok += int(got == data)
+        except Exception:
+            pass
+    print(f"{label}: vault {v_ok}/{len(objects)} alive, "
+          f"replicated {r_ok}/{len(objects)} alive")
+
+
+survey("initial")
+
+# --- churn: 25% of peers leave; both systems repair -------------------
+alive = [n for n in net.alive_nodes() if n.nid != client.node.nid]
+for node in rng.choice(alive, size=len(alive) // 4, replace=False):
+    net.fail_node(node.nid)
+for node in list(net.alive_nodes()):
+    G.broadcast_claims(net, node)
+R.repair_all(net, cache_ttl=1e9)
+repl.repair_tick()
+survey("after 25% churn + repair")
+
+# --- targeted attack: adversary knows the replicated placement --------
+# (vault's chunk->object mapping is opaque; the attacker can only hit
+# random groups)
+for data, oid, rid in objects[:3]:
+    for nid in list(repl.placement.get(rid.ohash, [])):
+        if nid in net.nodes and net.nodes[nid].alive:
+            net.fail_node(nid)
+print("targeted attack: adversary disconnected every replica holder of 3 "
+      "replicated objects (9-ish nodes)")
+# two maintenance rounds: heartbeats -> membership convergence -> repair
+for _ in range(2):
+    for node in list(net.alive_nodes()):
+        G.broadcast_claims(net, node)
+    R.repair_all(net, cache_ttl=1e9)
+    repl.repair_tick()
+survey("after targeted attack + repair")
+print(f"repair traffic so far: {net.repair_traffic_bytes/2**20:.1f} MiB, "
+      f"{net.repair_count} fragments regenerated")

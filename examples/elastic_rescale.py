@@ -1,0 +1,104 @@
+"""Elastic rescale drill: lose hosts mid-run, resume on a smaller mesh.
+
+Runs in a subprocess with 8 placeholder devices:
+  1. train on a (4 data, 2 model) mesh, Vault-checkpoint at step 5,
+  2. "lose" half the hosts → re-plan to a (2, 2) mesh,
+  3. restore from Vault, reshard with the same logical rules, resume —
+     and verify the loss trajectory continues from the checkpoint.
+
+    PYTHONPATH=src python examples/elastic_rescale.py
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import configs
+from repro.checkpoint import VaultCheckpointer
+from repro.core import chunks as C
+from repro.core.network import SimNetwork
+from repro.data import SyntheticStream
+from repro.distributed import sharding as shd
+from repro.models import param_specs
+from repro.optim import AdamWConfig
+from repro.runtime.elastic import plan_mesh, reshard_state, state_shardings
+from repro.training import init_train_state, make_train_step
+
+cfg = configs.smoke_config("internlm2-20b")
+opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=20)
+stream = SyntheticStream(cfg, batch=4, seq=32, seed=0)
+step_fn = make_train_step(cfg, opt)
+
+def shardings_for(mesh, state_shapes):
+    named = state_shardings(param_specs(cfg), state_shapes["params"], mesh)
+    return {"params": named,
+            "opt": {"mu": named, "nu": named,
+                    "step": NamedSharding(mesh, P())}}
+
+# ---- phase 1: 8 devices as (4 data, 2 model)
+mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+shapes = jax.eval_shape(lambda: state)
+sh1 = shardings_for(mesh1, shapes)
+state = reshard_state(jax.tree_util.tree_map(np.asarray, state), sh1)
+losses = []
+with mesh1, shd.logical_axis_rules(None, mesh1):
+    f1 = jax.jit(step_fn, in_shardings=(sh1, None), out_shardings=(sh1, None))
+    for t in range(5):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(t).items()}
+        state, m = f1(state, batch)
+        losses.append(float(m["loss"]))
+print("phase1 losses:", [round(x, 4) for x in losses])
+
+net = SimNetwork(seed=1)
+for i in range(150):
+    net.add_node(seed=i.to_bytes(4, "little"))
+ck = VaultCheckpointer(net, params=C.CodeParams(k_outer=4, n_chunks=6,
+                                                k_inner=8, r_inner=20),
+                       object_bytes=1 << 18)
+host_state = jax.tree_util.tree_map(np.asarray, state)
+ck.save(host_state, step=5)
+print("checkpointed to vault at step 5")
+
+# ---- phase 2: half the fleet is gone; kill 40% of vault peers too
+rng = np.random.default_rng(2)
+for node in rng.choice(net.alive_nodes()[1:], size=60, replace=False):
+    net.fail_node(node.nid)
+d, mdl = plan_mesh(4, prefer_model=cfg.n_heads)
+mesh2 = jax.make_mesh((d, mdl), ("data", "model"))
+print(f"re-meshed to ({d},{mdl}) on 4 surviving devices; "
+      f"{len(net.alive_nodes())} vault peers alive")
+restored = ck.restore(5)
+sh2 = shardings_for(mesh2, shapes)
+state2 = reshard_state(restored, sh2)
+with mesh2, shd.logical_axis_rules(None, mesh2):
+    f2 = jax.jit(step_fn, in_shardings=(sh2, None), out_shardings=(sh2, None))
+    for t in range(5, 10):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(t).items()}
+        state2, m = f2(state2, batch)
+        losses.append(float(m["loss"]))
+print("resumed losses:", [round(x, 4) for x in losses[5:]])
+assert losses[5] < losses[0], "resumed run lost progress"
+print("ELASTIC RESCALE OK")
+"""
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run([sys.executable, "-c", CODE], env=env,
+                         capture_output=True, text=True, timeout=600)
+    print(out.stdout)
+    if out.returncode != 0:
+        print(out.stderr[-3000:])
+    return out.returncode
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

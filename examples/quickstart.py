@@ -1,0 +1,68 @@
+"""Quickstart: VAULT in 60 seconds.
+
+1. spin up a simulated decentralized network (1/3 Byzantine),
+2. STORE an object (outer rateless code -> opaque chunks -> VRF-selected
+   fragment groups), QUERY it back,
+3. evaluate the durability theory for the deployment,
+4. train a tiny LM whose checkpoints live in the vault.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import VaultCheckpointer
+from repro.core import chunks as C
+from repro.core import durability as D
+from repro.core.network import SimNetwork
+from repro.core.vault import VaultClient
+from repro import configs
+from repro.data import SyntheticStream
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+# ---------------------------------------------------------------- network
+net = SimNetwork(seed=0)
+for i in range(150):
+    net.add_node(byzantine=i < 50, seed=i.to_bytes(4, "little"))
+print(f"network: {net.n_nodes} peers, 50 byzantine (1/3)")
+
+# ------------------------------------------------------------ store/query
+params = C.CodeParams(k_outer=8, n_chunks=10, k_inner=16, r_inner=40)
+client = VaultClient(net, net.alive_nodes()[60])
+data = np.random.default_rng(0).integers(0, 256, 100_000, np.uint8).tobytes()
+oid, st = client.store(data, params)
+print(f"STORE 100KB: {len(oid.chunk_hashes)} chunks, "
+      f"redundancy {params.redundancy:.2f}x, latency {st.latency_s:.2f}s "
+      f"(modeled geo-RTT)")
+got, qt = client.query(oid)
+assert got == data
+print(f"QUERY OK: latency {qt.latency_s:.2f}s")
+
+# ------------------------------------------------------------- durability
+I = D.initial_state_vector(net.n_nodes, 50, params.r_inner, params.k_inner)
+theta = D.transition_matrix(net.n_nodes, 50, params.r_inner, params.k_inner,
+                            churn_mu=0.1, evict=1)
+p_group = D.absorb_probability(I, theta, 365)[-1]
+print(f"durability (CTMC, 1y): group absorb {p_group:.2e}, object bound "
+      f"{D.object_loss_bound(p_group, params.n_chunks):.2e}")
+
+# -------------------------------------------- vault-checkpointed training
+cfg = configs.smoke_config("codeqwen1.5-7b")
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                                total_steps=20)))
+stream = SyntheticStream(cfg, batch=4, seq=32, seed=0)
+ck = VaultCheckpointer(net, params=params, object_bytes=1 << 18)
+for t in range(10):
+    batch = {k: jnp.asarray(v) for k, v in stream.batch_at(t).items()}
+    state, m = step(state, batch)
+rep = ck.save(jax.tree_util.tree_map(np.asarray, state), step=10)
+print(f"trained 10 steps (loss {float(m['loss']):.3f}); checkpoint -> vault "
+      f"({rep.n_objects} objects, {rep.bytes/2**20:.1f} MiB)")
+restored = ck.restore(10)
+print("restore OK — bytes identical:",
+      all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(
+          jax.tree_util.tree_leaves(state),
+          jax.tree_util.tree_leaves(restored))))

@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch minicpm3-4b]
+"""
+import sys
+
+if len(sys.argv) == 1:
+    sys.argv += ["--arch", "minicpm3-4b", "--batch", "4",
+                 "--prompt-len", "48", "--decode-steps", "24"]
+
+from repro.launch.serve import main  # noqa: E402
+
+raise SystemExit(main())

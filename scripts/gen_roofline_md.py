@@ -1,0 +1,34 @@
+"""Emit the EXPERIMENTS.md §Roofline markdown table from dry-run JSONs.
+
+    PYTHONPATH=src python scripts/gen_roofline_md.py results/dryrun single
+"""
+import json
+import pathlib
+import sys
+
+
+def main(d: str, mesh: str):
+    rows = []
+    for p in sorted(pathlib.Path(d).glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            rows.append((r["arch"], r["shape"], "FAIL", 0, 0, 0, 0, 0))
+            continue
+        rl = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], rl["dominant"], rl["compute_s"],
+            rl["memory_s"], rl["collective_s"],
+            r.get("hlo_model_flops_ratio", 0),
+            r.get("state_bytes_per_device", 0) / 2**30,
+        ))
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| useful (6·N·D / HLO) | state GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a, s, d_, c, m, co, u, g in rows:
+        print(f"| {a} | {s} | {c:.3f} | {m:.2f} | {co:.3f} | **{d_}** | "
+              f"{u:.3f} | {g:.1f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun",
+         sys.argv[2] if len(sys.argv) > 2 else "single")

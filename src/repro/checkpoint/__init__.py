@@ -1,0 +1,9 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    LocalCheckpointer,
+    ReplicatedCheckpointer,
+    VaultCheckpointer,
+    flatten_state,
+    pack_objects,
+    unflatten_state,
+    unpack_objects,
+)

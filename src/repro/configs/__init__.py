@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape table."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.common import (  # noqa: F401
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ShapeDef,
+    apply_shape,
+    input_specs,
+)
+from repro.models import ModelConfig
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "internlm2-20b": "internlm2_20b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "llava-next-34b": "llava_next_34b",
+    "musicgen-medium": "musicgen_medium",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def full_config(arch: str, shape: str | None = None) -> ModelConfig:
+    cfg = _module(arch).full()
+    return apply_shape(cfg, shape) if shape else cfg
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; long_500k only for SSM/hybrid."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            skipped = (
+                shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+            )
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape) if not include_skipped
+                       else (arch, shape, skipped))
+    return out

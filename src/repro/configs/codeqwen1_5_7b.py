@@ -1,0 +1,34 @@
+"""codeqwen1.5-7b [dense] — HF Qwen/CodeQwen1.5-7B (qwen1.5 arch).
+
+32L, d_model 4096, 32 heads (MHA kv=32), QKV bias, d_ff 13440, vocab 92416.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "codeqwen1.5-7b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=92_416,
+        d_model=4_096,
+        n_heads=32,
+        n_kv_heads=32,
+        qkv_bias=True,
+        d_ff=13_440,
+        pattern=(LayerPattern(32, (("gqa", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        qkv_bias=True,
+        d_ff=192,
+        pattern=(LayerPattern(3, (("gqa", "dense"),)),),
+        max_cache_len=64,
+    )

@@ -1,0 +1,73 @@
+"""Shared config tooling: shape table, per-shape adaptation, input specs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeDef] = {
+    "train_4k": ShapeDef("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeDef("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeDef("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeDef("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM/hybrid archs
+# (DESIGN.md §5); pure full-attention archs skip it.
+LONG_CONTEXT_ARCHS = {"mamba2-2.7b", "jamba-1.5-large-398b"}
+
+
+def apply_shape(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Specialize a full config for one dry-run cell."""
+    sd = SHAPES[shape]
+    upd: dict = {
+        "dtype": "bfloat16",
+        "compute_dtype": "bfloat16",
+    }
+    if sd.kind == "train":
+        upd["remat"] = "dots"
+        upd["attn_chunk"] = 1024  # flash-style tiles; O(S²) never lives
+    elif sd.kind == "prefill":
+        upd["attn_chunk"] = 1024
+        upd["max_cache_len"] = sd.seq + cfg.extra_embed_len
+    else:  # decode
+        upd["attn_chunk"] = 0
+        upd["max_cache_len"] = sd.seq + cfg.extra_embed_len
+    return dataclasses.replace(cfg, **upd)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every step input (no allocation)."""
+    sd = SHAPES[shape]
+    b = sd.batch
+    i32 = jnp.int32
+    cd = cfg.cdtype()
+    if sd.kind in ("train", "prefill"):
+        s = sd.seq
+        specs: dict = {}
+        if cfg.embed_inputs:
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cd)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.extra_embed_len:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.extra_embed_len, cfg.d_model), cd
+            )
+        return specs
+    # decode: one new token against a populated cache
+    if cfg.embed_inputs:
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), cd)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}

@@ -1,0 +1,62 @@
+"""deepseek-v3-671b [moe] — arXiv:2412.19437 / HF deepseek-ai/DeepSeek-V3.
+
+61L, d_model 7168, 128 heads, MLA (q_lora 1536, kv_lora 512, nope 128,
+rope 64, v 128), first 3 layers dense (d_ff 18432), 58 MoE layers with
+256 routed experts (top-8, expert d_ff 2048 — the brief's "d_ff=2048") + 1
+shared expert, vocab 129280. MTP is simplified to standard next-token CE
+(DESIGN.md §5).
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "deepseek-v3-671b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=129_280,
+        d_model=7_168,
+        n_heads=128,
+        n_kv_heads=128,
+        q_lora_rank=1_536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        d_ff=18_432,
+        n_experts=256,
+        n_experts_per_tok=8,
+        moe_d_ff=2_048,
+        n_shared_experts=1,
+        shared_d_ff=2_048,
+        pattern=(
+            LayerPattern(3, (("mla", "dense"),)),
+            LayerPattern(58, (("mla", "moe"),)),
+        ),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        q_lora_rank=32,
+        kv_lora_rank=32,
+        qk_nope_dim=16,
+        qk_rope_dim=8,
+        v_head_dim=16,
+        d_ff=192,
+        n_experts=8,
+        n_experts_per_tok=2,
+        moe_d_ff=32,
+        n_shared_experts=1,
+        shared_d_ff=32,
+        pattern=(
+            LayerPattern(1, (("mla", "dense"),)),
+            LayerPattern(2, (("mla", "moe"),)),
+        ),
+        max_cache_len=64,
+    )

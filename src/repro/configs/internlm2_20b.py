@@ -1,0 +1,32 @@
+"""internlm2-20b [dense] — arXiv:2403.17297. GQA dense transformer.
+
+48L, d_model 6144, 48 heads, GQA kv=8, d_ff 16384, vocab 92544.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "internlm2-20b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=92_544,
+        d_model=6_144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16_384,
+        pattern=(LayerPattern(48, (("gqa", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=256,
+        pattern=(LayerPattern(3, (("gqa", "dense"),)),),
+        max_cache_len=64,
+    )

@@ -1,0 +1,67 @@
+"""jamba-1.5-large-398b [hybrid] — arXiv:2403.19887 / Jamba-1.5.
+
+72L, d_model 8192, 64 heads GQA kv=8, Mamba:attention 7:1 interleave
+(attention at offset 4 of each 8-layer period, as in the released config),
+MoE every other layer (16 experts top-2, expert d_ff 24576). The SSM mixer
+is our Mamba2/SSD block (state 128) — Jamba ships Mamba-1; the SSD form is
+the TPU-native equivalent (DESIGN.md §5). Runs long_500k (hybrid ⇒
+sub-quadratic decode cost dominated by the SSM layers).
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "jamba-1.5-large-398b"
+
+# one 8-layer period: mamba ×4 / attention at idx 4 / mamba ×3;
+# MoE at odd offsets (period 2, offset 1)
+_PERIOD = (
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+    ("gqa", "dense"),
+    ("mamba", "moe"),
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+)
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=65_536,
+        d_model=8_192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24_576,
+        n_experts=16,
+        n_experts_per_tok=2,
+        moe_d_ff=24_576,
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_groups=8,
+        ssm_conv=4,
+        ssm_chunk=256,
+        pattern=(LayerPattern(9, _PERIOD),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        n_experts=4,
+        n_experts_per_tok=2,
+        moe_d_ff=128,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_groups=2,
+        ssm_chunk=8,
+        pattern=(LayerPattern(1, _PERIOD),),
+        max_cache_len=64,
+    )

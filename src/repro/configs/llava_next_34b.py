@@ -1,0 +1,38 @@
+"""llava-next-34b [vlm] — LLaVA-NeXT backbone (34B-class LM).
+
+60L, d_model 7168, 56 heads, GQA kv=8, d_ff 20480, vocab 64000. The anyres
+vision frontend is a STUB per the brief: ``input_specs()`` provides 576
+precomputed patch embeddings (one 24×24 CLIP tile) prepended to the text
+sequence; the loss covers text positions only.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "llava-next-34b"
+N_PATCHES = 576
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=64_000,
+        d_model=7_168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=20_480,
+        extra_embed_len=N_PATCHES,
+        pattern=(LayerPattern(60, (("gqa", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        d_ff=192,
+        extra_embed_len=8,
+        pattern=(LayerPattern(3, (("gqa", "dense"),)),),
+        max_cache_len=96,
+    )

@@ -1,0 +1,40 @@
+"""mamba2-2.7b [ssm] — arXiv:2405.21060 (SSD). Attention-free.
+
+64L, d_model 2560, ssm_state 128, head_dim 64 (expand 2 → 80 heads),
+vocab 50280, tied embeddings. Runs the long_500k cell (sub-quadratic).
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "mamba2-2.7b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=50_280,
+        d_model=2_560,
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_groups=1,
+        ssm_conv=4,
+        ssm_chunk=256,
+        tie_embeddings=True,
+        pattern=(LayerPattern(64, (("mamba", None),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_groups=1,
+        ssm_chunk=8,
+        tie_embeddings=True,
+        pattern=(LayerPattern(3, (("mamba", None),)),),
+        max_cache_len=64,
+    )

@@ -1,0 +1,43 @@
+"""minicpm3-4b [dense] — HF openbmb/MiniCPM3-4B. Dense transformer with MLA.
+
+62L, d_model 2560, 40 heads, MLA (q_lora 768, kv_lora 256, nope 64, rope 32,
+v 64), d_ff 6400, vocab 73448.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "minicpm3-4b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=73_448,
+        d_model=2_560,
+        n_heads=40,
+        n_kv_heads=40,
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_dim=64,
+        qk_rope_dim=32,
+        v_head_dim=64,
+        d_ff=6_400,
+        pattern=(LayerPattern(62, (("mla", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        q_lora_rank=32,
+        kv_lora_rank=32,
+        qk_nope_dim=16,
+        qk_rope_dim=8,
+        v_head_dim=16,
+        d_ff=160,
+        pattern=(LayerPattern(3, (("mla", "dense"),)),),
+        max_cache_len=64,
+    )

@@ -1,0 +1,38 @@
+"""musicgen-medium [audio] — arXiv:2306.05284. Decoder-only over EnCodec.
+
+48L, d_model 1536, 24 heads (MHA), d_ff 6144, vocab 2048. The EnCodec
+frontend is a STUB per the brief: ``input_specs()`` provides precomputed
+frame embeddings (B,S,d) plus integer labels for the CE loss; the model's
+single head predicts one codebook stream (the 4-codebook delay pattern is a
+frontend concern, DESIGN.md §5).
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "musicgen-medium"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=2_048,
+        d_model=1_536,
+        n_heads=24,
+        n_kv_heads=24,
+        d_ff=6_144,
+        embed_inputs=True,
+        pattern=(LayerPattern(48, (("gqa", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=128,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=192,
+        embed_inputs=True,
+        pattern=(LayerPattern(3, (("gqa", "dense"),)),),
+        max_cache_len=64,
+    )

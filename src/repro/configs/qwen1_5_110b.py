@@ -1,0 +1,34 @@
+"""qwen1.5-110b [dense] — Qwen1.5 architecture (QKV bias) at 110B.
+
+80L, d_model 8192, 64 heads, GQA kv=8, d_ff 49152, vocab 152064.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "qwen1.5-110b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=152_064,
+        d_model=8_192,
+        n_heads=64,
+        n_kv_heads=8,
+        qkv_bias=True,
+        d_ff=49_152,
+        pattern=(LayerPattern(80, (("gqa", "dense"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=8,
+        n_kv_heads=2,
+        qkv_bias=True,
+        d_ff=256,
+        pattern=(LayerPattern(3, (("gqa", "dense"),)),),
+        max_cache_len=64,
+    )

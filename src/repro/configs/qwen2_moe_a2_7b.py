@@ -1,0 +1,45 @@
+"""qwen2-moe-a2.7b [moe] — HF Qwen/Qwen1.5-MoE-A2.7B.
+
+24L, d_model 2048, 16 heads (MHA, kv=16), QKV bias, 60 routed experts top-4
+(expert d_ff 1408) + 4 shared experts (total shared d_ff 5632), vocab 151936.
+"""
+from repro.models import LayerPattern, ModelConfig
+
+ARCH = "qwen2-moe-a2.7b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH,
+        vocab=151_936,
+        d_model=2_048,
+        n_heads=16,
+        n_kv_heads=16,
+        qkv_bias=True,
+        d_ff=1_408,
+        n_experts=60,
+        n_experts_per_tok=4,
+        moe_d_ff=1_408,
+        n_shared_experts=4,
+        shared_d_ff=5_632,
+        pattern=(LayerPattern(24, (("gqa", "moe"),)),),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke",
+        vocab=512,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        qkv_bias=True,
+        d_ff=96,
+        n_experts=6,
+        n_experts_per_tok=2,
+        moe_d_ff=48,
+        n_shared_experts=2,
+        shared_d_ff=96,
+        pattern=(LayerPattern(2, (("gqa", "moe"),)),),
+        max_cache_len=64,
+    )

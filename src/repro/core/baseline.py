@@ -1,0 +1,176 @@
+"""Comparison systems the paper evaluates against.
+
+* ``ReplicatedStore`` — the "Ceph-like" simulation baseline (§6.1): each
+  object replicated on 3 randomly selected peers, repair immediately after a
+  replica fails (one object of traffic per repair). Used by the Fig. 4/6
+  benchmarks.
+* ``IPFSLikeStore`` — the physical-deployment baseline (§6.2): the object is
+  split into ``K_inner * K_outer`` records; each record is PUT on the
+  ``replication``-closest peers on the DHT ring (Kademlia PUT_RECORD
+  semantics). Used by the Fig. 7–9 latency/scalability benchmarks.
+
+Both run on the same ``SimNetwork`` (same latency model, same failure
+injection) so comparisons isolate the protocol difference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.network import Node, SimNetwork
+from repro.core.vault import OpStats
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaID:
+    ohash: bytes
+    length: int
+
+
+class ReplicatedStore:
+    """Ceph-like: r=3 replication on random peers, eager repair."""
+
+    def __init__(self, net: SimNetwork, replication: int = 3):
+        self.net = net
+        self.replication = replication
+        # ohash -> list of holder nids (alive or not; repair prunes)
+        self.placement: dict[bytes, list[int]] = {}
+        self.objects: dict[bytes, int] = {}  # ohash -> length
+
+    def store(self, client: Node, data: bytes) -> tuple[ReplicaID, OpStats]:
+        ohash = hashlib.sha256(b"repl" + data).digest()
+        alive = self.net.alive_nodes()
+        idx = self.net.rng.choice(len(alive), size=self.replication,
+                                  replace=False)
+        holders = [alive[int(i)] for i in idx]
+        for h in holders:
+            if not h.byzantine:
+                h.fragments[(ohash, 0)] = data
+        self.placement[ohash] = [h.nid for h in holders]
+        self.objects[ohash] = len(data)
+        # replicas pushed in parallel; latency = slowest push
+        lat = float(np.max(self.net.rtts(client, holders)))
+        return ReplicaID(ohash, len(data)), OpStats(
+            latency_s=lat, coding_s=0.0,
+            bytes_sent=len(data) * self.replication,
+        )
+
+    def query(self, client: Node, rid: ReplicaID) -> tuple[bytes, OpStats]:
+        holders = [
+            self.net.nodes[nid] for nid in self.placement.get(rid.ohash, [])
+            if nid in self.net.nodes and self.net.nodes[nid].alive
+        ]
+        for h in sorted(holders, key=lambda h: self.net.rtt(client, h)):
+            data = h.fragments.get((rid.ohash, 0))
+            if data is not None:
+                # query goes to the *closest* replica (one RTT)
+                return data, OpStats(
+                    latency_s=self.net.rtt(client, h), coding_s=0.0,
+                    bytes_sent=0,
+                )
+        raise KeyError("all replicas lost")
+
+    def repair_tick(self) -> int:
+        """Eager repair: replace dead holders immediately. Returns bytes."""
+        traffic = 0
+        for ohash, nids in self.placement.items():
+            alive = [n for n in nids
+                     if n in self.net.nodes and self.net.nodes[n].alive]
+            dead = len(nids) - len(alive)
+            if dead == 0:
+                continue
+            srcs = [
+                self.net.nodes[n] for n in alive
+                if (ohash, 0) in self.net.nodes[n].fragments
+            ]
+            if not srcs:
+                self.placement[ohash] = alive
+                continue  # object permanently lost
+            data = srcs[0].fragments[(ohash, 0)]
+            pool = [n for n in self.net.alive_nodes() if n.nid not in alive]
+            self.net.rng.shuffle(pool)
+            for new in pool[:dead]:
+                if not new.byzantine:
+                    new.fragments[(ohash, 0)] = data
+                alive.append(new.nid)
+                traffic += len(data)
+            self.placement[ohash] = alive
+        self.net.repair_traffic_bytes += traffic
+        return traffic
+
+    def lost_objects(self) -> int:
+        lost = 0
+        for ohash, nids in self.placement.items():
+            ok = any(
+                n in self.net.nodes
+                and self.net.nodes[n].alive
+                and (ohash, 0) in self.net.nodes[n].fragments
+                for n in nids
+            )
+            lost += 0 if ok else 1
+        return lost
+
+
+@dataclasses.dataclass(frozen=True)
+class IPFSObjectID:
+    ohash: bytes
+    length: int
+    record_hashes: tuple[bytes, ...]
+
+
+class IPFSLikeStore:
+    """IPFS-like: object split into records, each PUT to the ring-closest
+    peers (replication factor 3 → redundancy comparable to VAULT's 3.125)."""
+
+    def __init__(self, net: SimNetwork, replication: int = 3,
+                 records_per_object: int = 256):
+        self.net = net
+        self.replication = replication
+        self.records_per_object = records_per_object
+
+    def _record_hash(self, ohash: bytes, i: int) -> bytes:
+        return hashlib.sha256(ohash + i.to_bytes(4, "big")).digest()
+
+    def store(self, client: Node, data: bytes) -> tuple[IPFSObjectID, OpStats]:
+        ohash = hashlib.sha256(b"ipfs" + data).digest()
+        n_rec = self.records_per_object
+        rec_len = -(-len(data) // n_rec)
+        rhashes = []
+        worst = 0.0
+        sent = 0
+        for i in range(n_rec):
+            rec = data[i * rec_len : (i + 1) * rec_len]
+            rh = self._record_hash(ohash, i)
+            rhashes.append(rh)
+            point = int.from_bytes(rh, "big")
+            holders = self.net.candidates(point, self.replication)
+            for h in holders:
+                if not h.byzantine:
+                    h.fragments[(rh, 0)] = rec
+                sent += len(rec)
+            if holders:
+                # records PUT in parallel; each PUT completes at its slowest
+                # replica (DHT PUT_RECORD waits for the replication set)
+                worst = max(worst, float(np.max(self.net.rtts(client, holders))))
+        return IPFSObjectID(ohash, len(data), tuple(rhashes)), OpStats(
+            latency_s=worst, coding_s=0.0, bytes_sent=sent,
+        )
+
+    def query(self, client: Node, oid: IPFSObjectID) -> tuple[bytes, OpStats]:
+        parts = []
+        worst = 0.0
+        for rh in oid.record_hashes:
+            point = int.from_bytes(rh, "big")
+            holders = [
+                h for h in self.net.candidates(point, self.replication * 2)
+                if (rh, 0) in h.fragments
+            ]
+            if not holders:
+                raise KeyError("record lost")
+            # fastest replica wins for each record; records in parallel
+            worst = max(worst, float(np.min(self.net.rtts(client, holders))))
+            parts.append(holders[0].fragments[(rh, 0)])
+        data = b"".join(parts)[: oid.length]
+        return data, OpStats(latency_s=worst, coding_s=0.0, bytes_sent=0)

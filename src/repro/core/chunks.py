@@ -1,0 +1,169 @@
+"""Object <-> chunk <-> fragment coding pipeline (paper §4.2, Fig. 1).
+
+Outer code: RLNC seeded by the *object hash* (public function), with the
+chunk indices drawn privately from the owner's secret key — the opacity
+property: fragments/chunks are indistinguishable across objects, so targeted
+attacks degrade to random attacks (§3.2).
+
+Inner code: RLNC seeded by the *chunk hash* (publicly known), so any node can
+generate or verify fragment ``i`` of a chunk — consensus-free repair (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.rateless import RLNC, prf_u64
+
+LEN_HEADER = 8
+INDEX_SPACE = 1 << 62  # chunk/fragment stream index space
+
+
+def obj_hash(data: bytes) -> bytes:
+    return hashlib.sha256(b"vault-obj" + data).digest()
+
+
+def chunk_hash(payload: bytes) -> bytes:
+    return hashlib.sha256(b"vault-chunk" + payload).digest()
+
+
+def hash_point(h: bytes) -> int:
+    return int.from_bytes(h, "big")
+
+
+def fragment_hash(chash: bytes, index: int) -> int:
+    return hash_point(
+        hashlib.sha256(b"vault-frag" + chash + index.to_bytes(8, "big")).digest()
+    )
+
+
+def split_blocks(data: bytes, k: int) -> np.ndarray:
+    """Split ``data`` into k equal blocks (8-byte length header + padding)."""
+    payload = len(data).to_bytes(LEN_HEADER, "big") + data
+    block_len = -(-len(payload) // k)
+    payload += b"\x00" * (k * block_len - len(payload))
+    return np.frombuffer(payload, np.uint8).reshape(k, block_len).copy()
+
+
+def join_blocks(blocks: np.ndarray) -> bytes:
+    raw = np.asarray(blocks, np.uint8).tobytes()
+    n = int.from_bytes(raw[:LEN_HEADER], "big")
+    return raw[LEN_HEADER : LEN_HEADER + n]
+
+
+def derive_chunk_indices(sk: bytes, ohash: bytes, n_chunks: int) -> list[int]:
+    """Private, deterministic chunk indices (paper: sk + object hash)."""
+    key = hashlib.sha256(b"vault-outer-idx" + sk + ohash).digest()
+    seen: list[int] = []
+    i = 0
+    while len(seen) < n_chunks:
+        idx = prf_u64(key, i) % INDEX_SPACE
+        if idx not in seen:
+            seen.append(idx)
+        i += 1
+    return seen
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeParams:
+    """Coding configuration (paper defaults: §6)."""
+
+    k_outer: int = 8
+    n_chunks: int = 10
+    k_inner: int = 32
+    r_inner: int = 80  # threshold group size R
+
+    @property
+    def redundancy(self) -> float:
+        return (self.n_chunks / self.k_outer) * (self.r_inner / self.k_inner)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectID:
+    """Returned by STORE; private to the owner (content addressing)."""
+
+    ohash: bytes
+    length: int
+    chunk_indices: tuple[int, ...]
+    chunk_hashes: tuple[bytes, ...]
+    params: CodeParams
+
+
+def outer_encode(
+    data: bytes, sk: bytes, params: CodeParams, backend: str = "numpy"
+) -> tuple[ObjectID, list[bytes]]:
+    """OuterEncode of Alg. 1: object -> n privately-selected chunks."""
+    ohash = obj_hash(data)
+    blocks = split_blocks(data, params.k_outer)
+    code = RLNC(k=params.k_outer, seed=ohash)
+    indices = derive_chunk_indices(sk, ohash, params.n_chunks)
+    payloads = code.encode(blocks, indices, backend=backend)
+    chunks = [payloads[i].tobytes() for i in range(params.n_chunks)]
+    oid = ObjectID(
+        ohash=ohash,
+        length=len(data),
+        chunk_indices=tuple(indices),
+        chunk_hashes=tuple(chunk_hash(c) for c in chunks),
+        params=params,
+    )
+    return oid, chunks
+
+
+def outer_decode(oid: ObjectID, recovered: dict[bytes, bytes]) -> bytes:
+    """OuterDecode: any K_outer recovered chunks -> object (verified)."""
+    code = RLNC(k=oid.params.k_outer, seed=oid.ohash)
+    idx, syms = [], []
+    for i, ch in zip(oid.chunk_indices, oid.chunk_hashes):
+        if ch in recovered:
+            idx.append(i)
+            syms.append(np.frombuffer(recovered[ch], np.uint8))
+        if len(idx) >= oid.params.k_outer:
+            break
+    if len(idx) < oid.params.k_outer:
+        from repro.core.rateless import InsufficientFragments
+
+        raise InsufficientFragments(
+            f"need {oid.params.k_outer} chunks, recovered {len(idx)}"
+        )
+    blocks = code.decode(idx, np.stack(syms))
+    data = join_blocks(blocks)[: oid.length]
+    if obj_hash(data) != oid.ohash:
+        raise ValueError("decoded object failed content-address verification")
+    return data
+
+
+def inner_code(chash: bytes, k_inner: int) -> RLNC:
+    return RLNC(k=k_inner, seed=chash)
+
+
+def inner_encode_fragment(
+    chunk: bytes, chash: bytes, k_inner: int, index: int, backend: str = "numpy"
+) -> bytes:
+    blocks = split_blocks(chunk, k_inner)
+    code = inner_code(chash, k_inner)
+    return code.encode(blocks, [index], backend=backend)[0].tobytes()
+
+
+def inner_encode_many(
+    chunk: bytes, chash: bytes, k_inner: int, indices, backend: str = "numpy"
+) -> list[bytes]:
+    blocks = split_blocks(chunk, k_inner)
+    code = inner_code(chash, k_inner)
+    payloads = code.encode(blocks, indices, backend=backend)
+    return [payloads[i].tobytes() for i in range(len(indices))]
+
+
+def inner_decode(
+    chash: bytes, k_inner: int, fragments: dict[int, bytes]
+) -> bytes:
+    code = inner_code(chash, k_inner)
+    items = list(fragments.items())
+    idx = [i for i, _ in items]
+    syms = np.stack([np.frombuffer(f, np.uint8) for _, f in items])
+    blocks = code.decode(idx, syms)
+    chunk = join_blocks(blocks)
+    if chunk_hash(chunk) != chash:
+        raise ValueError("decoded chunk failed content-address verification")
+    return chunk

@@ -1,0 +1,211 @@
+"""VAULT durability theory (paper §4.4 + Appendix A).
+
+Implements, with numerics that hold up at the paper's parameter scale:
+
+* the hypergeometric **initial-state** vector ``I`` and its Hoeffding bound
+  (A.1.2, eqs. 3–5);
+* the CTMC **transition matrix** ``Θ`` over group states (A.1.3, eqs. 8–11)
+  with churn (Poisson), a fixed eviction rate ``Υ``, and repair-refill, and
+  the absorbing-state probability ``Σ_T (IΘ^T)_{n-k+1}`` (Lemma A.1);
+* the per-object bound ``1 - (1 - p_group)^(K+R)`` (Lemma 4.1 / A.2);
+* the **targeted-attack** birthday bound (Lemma 4.2 / A.3, eqs. 16–17),
+  evaluated in log space because ``C(Φ·g, R+1)`` overflows float64 quickly.
+
+State convention: a group nominally holds ``n`` members; state ``b`` counts
+Byzantine/faulty members, transient for ``b ∈ [0, n-k]``, absorbing once
+fewer than ``k`` honest members remain. Repair refills the group to ``n``
+each step (the protocol's steady-state behaviour), so ``Θ`` composes
+churn → eviction → refill exactly as A.1.3 does.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+# ------------------------------------------------------------ combinatorics
+def log_comb(n: float, k: float) -> float:
+    """log C(n, k) via lgamma; -inf when the coefficient is zero."""
+    if k < 0 or k > n:
+        return -math.inf
+    return (
+        math.lgamma(n + 1) - math.lgamma(k + 1) - math.lgamma(n - k + 1)
+    )
+
+
+def hypergeom_pmf(b: int, N: int, F: int, n: int) -> float:
+    """Pr[B = b] drawing n from N with F marked (eq. 6)."""
+    lg = log_comb(F, b) + log_comb(N - F, n - b) - log_comb(N, n)
+    return 0.0 if lg == -math.inf else math.exp(lg)
+
+
+def poisson_pmf(c: int, mu: float) -> float:
+    if mu <= 0:
+        return 1.0 if c == 0 else 0.0
+    return math.exp(c * math.log(mu) - mu - math.lgamma(c + 1))
+
+
+# ---------------------------------------------------------- initial state
+def initial_state_vector(N: int, F: int, n: int, k: int) -> np.ndarray:
+    """I: Pr[B=0..n-k] + aggregated absorbing mass (eq. 6)."""
+    n_trans = n - k + 1
+    out = np.zeros(n_trans + 1)
+    for b in range(n_trans):
+        out[b] = hypergeom_pmf(b, N, F, n)
+    out[-1] = max(0.0, 1.0 - out[:-1].sum())
+    return out
+
+
+def hoeffding_initial_bound(n: int, k: int) -> float:
+    """Eq. 4: Pr[b > n-k] <= exp(-2 (2n/3 - k)^2 / n), for F = N/3."""
+    margin = 2.0 * n / 3.0 - k
+    if margin <= 0:
+        return 1.0
+    return math.exp(-2.0 * margin * margin / n)
+
+
+# ------------------------------------------------------- transition matrix
+def transition_matrix(
+    N: int, F: int, n: int, k: int, churn_mu: float, evict: int = 0,
+) -> np.ndarray:
+    """Θ over states [0..n-k] + absorbing (eqs. 8–13).
+
+    ``churn_mu``: expected honest members lost per group per step (the
+    paper's Poisson churn, eq. 7, expressed per-group). ``evict``: the fixed
+    eviction count Υ. Each step composes churn → eviction → refill-to-n
+    (repair), with refills drawn hypergeometrically from the population.
+    """
+    n_trans = n - k + 1
+    S = n_trans + 1
+    theta = np.zeros((S, S))
+    for i in range(n_trans):  # current byzantine count
+        honest = n - i
+        for c in range(0, honest - k + 1):  # honest churned, stays transient
+            pc = poisson_pmf(c, churn_mu)
+            if pc == 0.0:
+                continue
+            # after churn: group size n-c, byz i, honest honest-c
+            size_ac = n - c
+            max_v = min(evict, honest - c - k)  # honest evictable
+            if evict > size_ac:
+                continue  # cannot evict more than the group holds
+            for v in range(0, max_v + 1):
+                bz_ev = evict - v
+                if bz_ev > i:
+                    continue
+                if evict == 0:
+                    pe = 1.0 if v == 0 else 0.0
+                else:
+                    pe = math.exp(
+                        log_comb(honest - c, v) + log_comb(i, bz_ev)
+                        - log_comb(size_ac, evict)
+                    )
+                if pe == 0.0:
+                    continue
+                # after eviction: size n-c-evict, byz i-bz_ev
+                byz_ae = i - bz_ev
+                size_ae = size_ac - evict
+                refill = n - size_ae  # c + evict
+                pop = N - size_ae
+                pop_byz = F - byz_ae
+                for a in range(0, refill + 1):  # byzantine added back
+                    j = byz_ae + a
+                    pa = math.exp(
+                        log_comb(pop_byz, a)
+                        + log_comb(pop - pop_byz, refill - a)
+                        - log_comb(pop, refill)
+                    )
+                    if pa == 0.0:
+                        continue
+                    tgt = j if j <= n - k else n_trans  # overfull refill
+                    theta[i, tgt] += pc * pe * pa
+        # transient -> absorbing absorbs all remaining mass (eq. 13)
+        theta[i, n_trans] += max(0.0, 1.0 - theta[i].sum())
+    theta[n_trans, n_trans] = 1.0  # absorbing -> absorbing (eq. 12 note)
+    return theta
+
+
+def absorb_probability(
+    I: np.ndarray, theta: np.ndarray, t: int
+) -> np.ndarray:
+    """Cumulative absorbing probability after steps 1..t (Lemma A.1).
+
+    The absorbing state accumulates, so (IΘ^T)_{abs} is already the
+    cumulative probability at step T; we return the whole trajectory.
+    """
+    out = np.zeros(t)
+    v = I.copy()
+    for step in range(t):
+        v = v @ theta
+        out[step] = v[-1]
+    return out
+
+
+def object_loss_bound(p_group_absorb: float, n_chunks: int) -> float:
+    """Lemma 4.1 / A.2: any of the K+R chunk groups absorbing loses opacity
+    margin; bound = 1 - (1-p)^(K+R)."""
+    if p_group_absorb >= 1.0:
+        return 1.0
+    return -math.expm1(n_chunks * math.log1p(-p_group_absorb))
+
+
+def group_durability_horizon(
+    N: int, F: int, n: int, k: int, churn_mu: float, evict: int = 0,
+    eps_log2: float = -128.0, max_steps: int = 10_000,
+) -> int:
+    """Largest t with cumulative absorb probability <= 2^eps_log2."""
+    I = initial_state_vector(N, F, n, k)
+    theta = transition_matrix(N, F, n, k, churn_mu, evict)
+    limit = 2.0 ** eps_log2
+    v = I.copy()
+    for step in range(1, max_steps + 1):
+        v = v @ theta
+        if v[-1] > limit:
+            return step - 1
+    return max_steps
+
+
+# -------------------------------------------------------- targeted attacks
+def targeted_attack_bound(
+    K: int, R: int, omega: int, phi_groups: int, g: int = 1,
+) -> float:
+    """Lemma 4.2 / A.3 (eqs. 16–17): probability an attacker that can absorb
+    ``phi_groups`` groups (each node holding ``g`` fragments) kills >= R+1
+    chunks of one object among ``omega`` objects of K+R chunks each.
+
+    Evaluated fully in log space: C(Φ·g, R+1) and the product both reach
+    1e±hundreds at paper scale.
+    """
+    total_chunks = omega * (K + R)
+    attacked = phi_groups * g
+    if attacked < R + 1:
+        return 0.0
+    # log p_single = sum_i log((K+R-i) / (omega(K+R)-i)), i=1..R
+    log_p = 0.0
+    for i in range(1, R + 1):
+        num = K + R - i
+        den = total_chunks - i
+        if num <= 0 or den <= 0:
+            return 0.0 if num <= 0 else 1.0
+        log_p += math.log(num) - math.log(den)
+    log_trials = log_comb(attacked, R + 1)
+    # P = 1 - (1 - p)^trials;  log(1-p) ~ -p for tiny p
+    p = math.exp(log_p) if log_p > -700 else 0.0
+    if p == 0.0:
+        # exponent * p in logs
+        log_exp_p = log_trials + log_p
+        if log_exp_p < -40:
+            return math.exp(log_exp_p)  # ~ trials * p
+        return -math.expm1(-math.exp(log_exp_p))
+    log1m = math.log1p(-p)
+    x = math.exp(log_trials) * log1m if log_trials < 700 else -math.inf
+    return -math.expm1(x) if x > -700 else 1.0
+
+
+def attacker_groups(phi_nodes: int, n: int, k: int) -> int:
+    """A.3: average groups an attacker can absorb with phi node removals —
+    each kill needs (n/3 - k + 1) honest removals on average; worst case
+    (groups already at exactly k honest) is phi itself."""
+    per_group = max(1, int(n / 3) - k + 1)
+    return phi_nodes // per_group

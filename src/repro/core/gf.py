@@ -1,0 +1,127 @@
+"""GF(256) and GF(2) arithmetic used by VAULT's rateless codes.
+
+Two multiply implementations are provided:
+
+* table-based (log/exp) — fast on host, used by the pure-jnp/numpy reference
+  paths and by the Gaussian-elimination decoder;
+* bit-sliced Russian-peasant — 8 rounds of AND/XOR/shift, no gathers, the
+  form used inside the Pallas TPU kernels (VPU-friendly).
+
+Field: GF(2^8) with the AES-adjacent primitive polynomial x^8+x^4+x^3+x^2+1
+(0x11D), generator 2 — the same field wirehair uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+GF_POLY = 0x11D  # x^8 + x^4 + x^3 + x^2 + 1 (primitive)
+GF_GEN = 2
+
+
+def _build_tables() -> tuple[np.ndarray, np.ndarray]:
+    exp = np.zeros(512, dtype=np.uint8)  # doubled to avoid mod-255 in mul
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= GF_POLY
+    exp[255:510] = exp[:255]
+    return exp, log
+
+
+GF_EXP, GF_LOG = _build_tables()
+
+
+# ---------------------------------------------------------------- table path
+def gf_mul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Elementwise GF(256) multiply via log/exp tables (numpy, host)."""
+    a = np.asarray(a, dtype=np.uint8)
+    b = np.asarray(b, dtype=np.uint8)
+    out = GF_EXP[GF_LOG[a] + GF_LOG[b]]
+    return np.where((a == 0) | (b == 0), np.uint8(0), out)
+
+
+def gf_inv_np(a: np.ndarray) -> np.ndarray:
+    a = np.asarray(a, dtype=np.uint8)
+    if np.any(a == 0):
+        raise ZeroDivisionError("gf_inv(0)")
+    return GF_EXP[255 - GF_LOG[a]]
+
+
+def gf_div_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return gf_mul_np(a, gf_inv_np(b))
+
+
+def gf_matmul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """GF(256) matmul: (m,k) x (k,n) -> (m,n) via table lookups (host)."""
+    a = np.asarray(a, dtype=np.uint8)
+    b = np.asarray(b, dtype=np.uint8)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out = np.zeros((m, n), dtype=np.uint8)
+    for j in range(k):  # k is small (<=256) on every VAULT path
+        out ^= gf_mul_np(a[:, j : j + 1], b[j : j + 1, :])
+    return out
+
+
+# ------------------------------------------------------------ bit-sliced path
+def gf_mul_bitsliced(a, b):
+    """Elementwise GF(256) multiply via 8-round Russian peasant (jnp).
+
+    Operates on integer arrays holding byte values in [0,256). Pure
+    AND/XOR/shift/select — the exact sequence the Pallas kernel runs on the
+    TPU VPU. Inputs may be any integer dtype; computation is int32.
+    """
+    a = jnp.asarray(a).astype(jnp.int32)
+    b = jnp.asarray(b).astype(jnp.int32)
+    res = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), jnp.int32)
+    for _ in range(8):
+        res = res ^ jnp.where((b & 1) != 0, a, 0)
+        hi = a & 0x80
+        a = (a << 1) & 0xFF
+        a = jnp.where(hi != 0, a ^ (GF_POLY & 0xFF), a)
+        b = b >> 1
+    return res
+
+
+def gf_mul_jnp_tables(a, b):
+    """Elementwise GF(256) multiply via tables (jnp gathers; host/ref use)."""
+    exp = jnp.asarray(GF_EXP)
+    log = jnp.asarray(GF_LOG)
+    a = jnp.asarray(a).astype(jnp.int32)
+    b = jnp.asarray(b).astype(jnp.int32)
+    out = exp[log[a] + log[b]].astype(jnp.int32)
+    return jnp.where((a == 0) | (b == 0), 0, out)
+
+
+# ----------------------------------------------------------------- GF(2) bits
+def pack_bits_to_words(data: np.ndarray) -> np.ndarray:
+    """Pack a uint8 array (..., L) into int32 words (..., ceil(L/4))."""
+    data = np.asarray(data, dtype=np.uint8)
+    L = data.shape[-1]
+    pad = (-L) % 4
+    if pad:
+        data = np.concatenate(
+            [data, np.zeros(data.shape[:-1] + (pad,), np.uint8)], axis=-1
+        )
+    return data.reshape(data.shape[:-1] + (-1, 4)).view(np.int32).reshape(
+        data.shape[:-1] + (-1,)
+    )
+
+
+def unpack_words_to_bytes(words: np.ndarray, length: int) -> np.ndarray:
+    words = np.asarray(words, dtype=np.int32)
+    b = words.astype(np.uint32).view(np.uint8).reshape(words.shape[:-1] + (-1,))
+    return b[..., :length]
+
+
+@functools.lru_cache(maxsize=None)
+def _identity(k: int) -> np.ndarray:
+    return np.eye(k, dtype=np.uint8)

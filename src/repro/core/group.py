@@ -1,0 +1,126 @@
+"""Chunk-group maintenance (paper §4.3.3): persistence claims + membership.
+
+Group members periodically broadcast *persistence claims* — (chunk hash,
+fragment index, selection proof) — to peers in their local membership view.
+Receivers verify the selection proof (Alg. 2) before refreshing the sender's
+liveness; unverifiable claims are ignored, so Byzantine nodes cannot inject
+themselves into groups they were not selected for.
+
+``MembershipTimer`` re-runs Locate() so views *eventually* converge even when
+the client-issued bootstrap membership was missed (§4.3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import chunks as C
+from repro.core import selection as sel
+from repro.core.network import Node, SimNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class PersistenceClaim:
+    """Heartbeat a member broadcasts for one stored fragment (§4.3.3)."""
+
+    chash: bytes
+    index: int
+    proof: sel.SelectionProof  # stored alongside the fragment (paper: cached)
+    sender_nid: int
+
+
+def make_claims(node: Node) -> list[PersistenceClaim]:
+    """Build persistence claims for every fragment ``node`` stores.
+
+    Byzantine nodes in the Fig. 6 adversary model *do* send claims for
+    fragments they discarded — that is exactly the attack the durability
+    analysis covers — so claims are built from group views, not payloads.
+    """
+    claims = []
+    for chash, view in node.groups.items():
+        for (ch, idx), proof in node.claim_proofs.items():
+            if ch == chash:
+                claims.append(
+                    PersistenceClaim(
+                        chash=chash, index=idx, proof=proof,
+                        sender_nid=node.nid,
+                    )
+                )
+    return claims
+
+
+def receive_claim(net: SimNetwork, receiver: Node, claim: PersistenceClaim) -> bool:
+    """Handle one incoming claim: verify proof, refresh sender liveness.
+
+    Returns True iff the claim was accepted (verification passed and the
+    receiver tracks that group).
+    """
+    view = receiver.groups.get(claim.chash)
+    if view is None:
+        return False
+    anchor = C.hash_point(claim.chash)
+    ok = sel.verify_selection(
+        net.registry, claim.proof, anchor, view.meta.r_target, net.n_nodes
+    )
+    if not ok:
+        return False  # forged or stale proof — ignored (§4.3.3)
+    view.members[claim.sender_nid] = net.now
+    return True
+
+
+def broadcast_claims(net: SimNetwork, node: Node) -> int:
+    """One heartbeat round for ``node``; returns #claims accepted anywhere."""
+    accepted = 0
+    for claim in make_claims(node):
+        view = node.groups.get(claim.chash)
+        if view is None:
+            continue
+        for peer_nid in list(view.members):
+            peer = net.nodes.get(peer_nid)
+            if peer is None or not peer.alive or peer.nid == node.nid:
+                continue
+            if receive_claim(net, peer, claim):
+                accepted += 1
+    return accepted
+
+
+def prune_dead_members(net: SimNetwork, node: Node, timeout_s: float) -> None:
+    """Expire members whose last claim is older than ``timeout_s``."""
+    for view in node.groups.values():
+        dead = [
+            nid for nid, last in view.members.items()
+            if nid != node.nid and net.now - last > timeout_s
+        ]
+        for nid in dead:
+            del view.members[nid]
+
+
+def membership_timer(net: SimNetwork, node: Node, chash: bytes) -> None:
+    """MembershipTimer() of §4.3.3: merge Locate() results into the view."""
+    view = node.groups.get(chash)
+    if view is None:
+        return
+    anchor = C.hash_point(chash)
+    cands = net.candidates(anchor, min(4 * view.meta.r_target, net.n_nodes))
+    for cand in cands:
+        peer_view = cand.groups.get(chash)
+        if peer_view is None:
+            continue
+        # peers who can present a verifiable claim are (re)admitted
+        for (ch, idx), proof in cand.claim_proofs.items():
+            if ch != chash:
+                continue
+            if sel.verify_selection(
+                net.registry, proof, anchor, view.meta.r_target, net.n_nodes
+            ):
+                view.members[cand.nid] = net.now
+                break
+
+
+def alive_members(net: SimNetwork, node: Node, chash: bytes) -> list[int]:
+    view = node.groups.get(chash)
+    if view is None:
+        return []
+    return [
+        nid for nid in view.members
+        if nid in net.nodes and net.nodes[nid].alive
+    ]

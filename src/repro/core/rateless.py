@@ -1,0 +1,269 @@
+"""Rateless erasure codes for VAULT.
+
+Two codes are provided behind one interface:
+
+* ``RLNC`` — random linear network code over GF(256). Every stream index
+  ``i`` deterministically maps (via a keyed PRF) to a dense coefficient row
+  over the ``k`` source blocks. Any ``k`` symbols whose coefficient matrix is
+  full-rank decode; dense random rows over GF(256) are full-rank with
+  probability ``>= prod_{j=1..k}(1-256^-j) ~= 0.996``, so the expected
+  overhead matches the paper's wirehair figure (``k + ~0.02k`` worst case,
+  usually ``k``). This is the default inner/outer code.
+* ``LTCode`` — Luby-transform code over GF(2) with a robust-soliton degree
+  distribution, XOR encode (bit-packed words), peeling decoder with a
+  GF(2) Gaussian-elimination fallback.
+
+Encoding hot path is delegated to ``repro.kernels.ops`` (Pallas on TPU,
+interpret-mode on CPU) when ``backend="kernel"``; the numpy table path is the
+reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core import gf
+
+
+class InsufficientFragments(Exception):
+    """Raised when the provided symbols cannot reconstruct the source."""
+
+
+# --------------------------------------------------------------------- PRF
+def prf_bytes(key: bytes, index: int, n: int) -> bytes:
+    """Deterministic pseudo-random bytes for stream index ``index``."""
+    out = b""
+    counter = 0
+    while len(out) < n:
+        h = hashlib.blake2b(
+            index.to_bytes(8, "little") + counter.to_bytes(4, "little"),
+            key=key[:64],
+            digest_size=64,
+        )
+        out += h.digest()
+        counter += 1
+    return out[:n]
+
+
+def prf_u64(key: bytes, index: int) -> int:
+    return int.from_bytes(prf_bytes(key, index, 8), "little")
+
+
+# -------------------------------------------------------------------- RLNC
+@dataclasses.dataclass(frozen=True)
+class RLNC:
+    """Random linear fountain code over GF(256).
+
+    ``k``: number of source blocks. ``seed``: public or private key material
+    that defines the (infinite) coefficient stream.
+    """
+
+    k: int
+    seed: bytes
+
+    def coeff_row(self, index: int) -> np.ndarray:
+        """Dense GF(256) coefficient row for stream symbol ``index``."""
+        row = np.frombuffer(prf_bytes(self.seed, index, self.k), np.uint8).copy()
+        if not row.any():  # all-zero row is useless; bump deterministically
+            row[index % self.k] = 1
+        return row
+
+    def coeff_matrix(self, indices: list[int] | np.ndarray) -> np.ndarray:
+        return np.stack([self.coeff_row(int(i)) for i in indices], axis=0)
+
+    # encode ---------------------------------------------------------------
+    def encode(
+        self,
+        blocks: np.ndarray,
+        indices: list[int] | np.ndarray,
+        backend: str = "numpy",
+    ) -> np.ndarray:
+        """Encode ``blocks`` (k, L) uint8 into symbols at ``indices`` (m, L)."""
+        blocks = np.asarray(blocks, dtype=np.uint8)
+        assert blocks.ndim == 2 and blocks.shape[0] == self.k, blocks.shape
+        coeffs = self.coeff_matrix(indices)
+        if backend == "kernel":
+            from repro.kernels import ops
+
+            return np.asarray(ops.gf256_encode(coeffs, blocks))
+        return gf.gf_matmul_np(coeffs, blocks)
+
+    # decode ---------------------------------------------------------------
+    def decode(
+        self, indices: list[int] | np.ndarray, symbols: np.ndarray
+    ) -> np.ndarray:
+        """Recover the (k, L) source blocks from >=k symbols."""
+        symbols = np.asarray(symbols, dtype=np.uint8)
+        coeffs = self.coeff_matrix(indices)
+        return gf256_gaussian_solve(coeffs, symbols, self.k)
+
+
+def gf256_gaussian_solve(
+    coeffs: np.ndarray, symbols: np.ndarray, k: int
+) -> np.ndarray:
+    """Solve ``coeffs @ X = symbols`` over GF(256); returns X (k, L).
+
+    ``coeffs``: (m, k) with m >= k. Raises InsufficientFragments if the
+    matrix is rank-deficient.
+    """
+    a = np.asarray(coeffs, dtype=np.uint8).copy()
+    y = np.asarray(symbols, dtype=np.uint8).copy()
+    m = a.shape[0]
+    if m < k:
+        raise InsufficientFragments(f"need >= {k} symbols, got {m}")
+    row = 0
+    for col in range(k):
+        piv = None
+        for r in range(row, m):
+            if a[r, col]:
+                piv = r
+                break
+        if piv is None:
+            raise InsufficientFragments(f"rank-deficient at column {col}")
+        if piv != row:
+            a[[row, piv]] = a[[piv, row]]
+            y[[row, piv]] = y[[piv, row]]
+        inv = gf.gf_inv_np(a[row, col])
+        a[row] = gf.gf_mul_np(a[row], inv)
+        y[row] = gf.gf_mul_np(y[row], inv)
+        mask = a[:, col].copy()
+        mask[row] = 0
+        nz = np.nonzero(mask)[0]
+        if nz.size:
+            a[nz] ^= gf.gf_mul_np(mask[nz, None], a[row][None, :])
+            y[nz] ^= gf.gf_mul_np(mask[nz, None], y[row][None, :])
+        row += 1
+    return y[:k]
+
+
+# ------------------------------------------------------------------ LT code
+def robust_soliton(k: int, c: float = 0.1, delta: float = 0.05) -> np.ndarray:
+    """Robust soliton degree distribution (probabilities over degree 1..k)."""
+    s = c * np.log(k / delta) * np.sqrt(k)
+    rho = np.zeros(k + 1)
+    rho[1] = 1.0 / k
+    d = np.arange(2, k + 1)
+    rho[2:] = 1.0 / (d * (d - 1))
+    tau = np.zeros(k + 1)
+    pivot = max(1, min(k, int(round(k / s))))
+    dd = np.arange(1, pivot)
+    tau[1:pivot] = s / (k * dd)
+    tau[pivot] = s * np.log(s / delta) / k
+    mu = rho + tau
+    mu = mu[1:]
+    return mu / mu.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class LTCode:
+    """LT fountain code over GF(2) with robust-soliton degrees."""
+
+    k: int
+    seed: bytes
+    c: float = 0.1
+    delta: float = 0.05
+
+    def __post_init__(self):
+        object.__setattr__(self, "_dist", robust_soliton(self.k, self.c, self.delta))
+        object.__setattr__(self, "_cdf", np.cumsum(self._dist))
+
+    def neighbors(self, index: int) -> np.ndarray:
+        """Source-block indices XORed into stream symbol ``index``."""
+        u = prf_u64(self.seed, index * 2 + 1) / 2**64
+        degree = int(np.searchsorted(self._cdf, u) + 1)
+        degree = min(degree, self.k)
+        # choose `degree` distinct blocks via PRF-seeded permutation
+        rng = np.random.Generator(
+            np.random.Philox(key=prf_u64(self.seed, index * 2))
+        )
+        return np.sort(rng.choice(self.k, size=degree, replace=False))
+
+    def mask_matrix(self, indices) -> np.ndarray:
+        m = np.zeros((len(indices), self.k), dtype=np.uint8)
+        for r, i in enumerate(indices):
+            m[r, self.neighbors(int(i))] = 1
+        return m
+
+    def encode(
+        self, blocks: np.ndarray, indices, backend: str = "numpy"
+    ) -> np.ndarray:
+        blocks = np.asarray(blocks, dtype=np.uint8)
+        assert blocks.shape[0] == self.k
+        masks = self.mask_matrix(indices)
+        if backend == "kernel":
+            from repro.kernels import ops
+
+            words = gf.pack_bits_to_words(blocks)
+            out = np.asarray(ops.gf2_encode(masks, words))
+            return gf.unpack_words_to_bytes(out, blocks.shape[1])
+        out = np.zeros((len(indices), blocks.shape[1]), dtype=np.uint8)
+        for r in range(len(indices)):
+            nz = np.nonzero(masks[r])[0]
+            for j in nz:
+                out[r] ^= blocks[j]
+        return out
+
+    def decode(self, indices, symbols: np.ndarray) -> np.ndarray:
+        """Peeling decoder; falls back to GF(2) Gaussian elimination."""
+        orig_symbols = np.asarray(symbols, dtype=np.uint8)
+        symbols = orig_symbols.copy()
+        masks = self.mask_matrix(indices).astype(bool)
+        k, L = self.k, symbols.shape[1]
+        out = np.zeros((k, L), dtype=np.uint8)
+        known = np.zeros(k, dtype=bool)
+        progress = True
+        while progress:
+            progress = False
+            deg = masks.sum(axis=1)
+            for r in np.nonzero(deg == 1)[0]:
+                js = np.nonzero(masks[r])[0]
+                if js.size != 1:
+                    continue  # this row was peeled earlier in the sweep
+                j = int(js[0])
+                if not known[j]:
+                    out[j] = symbols[r]
+                    known[j] = True
+                    progress = True
+                # peel block j out of every symbol that references it
+                refs = np.nonzero(masks[:, j])[0]
+                symbols[refs] ^= out[j][None, :]
+                masks[refs, j] = False
+        if known.all():
+            return out
+        # peeling stalled: solve the original full system exactly
+        return self.decode_gaussian(indices, orig_symbols)
+
+    def decode_gaussian(self, indices, symbols: np.ndarray) -> np.ndarray:
+        masks = self.mask_matrix(indices)
+        return gf2_gaussian_solve(masks, np.asarray(symbols, np.uint8), self.k)
+
+
+def gf2_gaussian_solve(masks: np.ndarray, symbols: np.ndarray, k: int) -> np.ndarray:
+    """Solve XOR system masks @ X = symbols over GF(2)."""
+    a = np.asarray(masks, dtype=np.uint8).copy()
+    y = np.asarray(symbols, dtype=np.uint8).copy()
+    m = a.shape[0]
+    if m < k:
+        raise InsufficientFragments(f"need >= {k} symbols, got {m}")
+    row = 0
+    for col in range(k):
+        piv = None
+        for r in range(row, m):
+            if a[r, col]:
+                piv = r
+                break
+        if piv is None:
+            raise InsufficientFragments(f"GF(2) rank-deficient at column {col}")
+        if piv != row:
+            a[[row, piv]] = a[[piv, row]]
+            y[[row, piv]] = y[[piv, row]]
+        mask = a[:, col].copy()
+        mask[row] = 0
+        nz = np.nonzero(mask)[0]
+        if nz.size:
+            a[nz] ^= a[row][None, :]
+            y[nz] ^= y[row][None, :]
+        row += 1
+    return y[:k]

@@ -1,0 +1,259 @@
+"""Vectorized discrete-event simulation of VAULT at paper scale (§6.1).
+
+The protocol-level simulator (``SimNetwork`` + ``repair.py``) executes real
+coding and real selection proofs — ideal for correctness, too slow for the
+paper's 100K-node × 10K-object × 1-year sweeps. This module simulates the
+same dynamics at *group granularity* with numpy array updates, exactly the
+abstraction the paper's own discrete-event simulator uses:
+
+* each chunk group is (honest members, byzantine claimers, cache timestamp);
+* churn is Poisson per node ⇒ binomial thinning per step;
+* repair refills groups to ``R`` when membership (honest + byzantine claims)
+  drops below it, drawing new members i.i.d. from the population mix — valid
+  because VRF selection is uniform (§3.3);
+* a chunk dies when honest fragments < K_inner (decode impossible ⇒
+  absorbing, per the CTMC model);
+* repair traffic: ``K_inner`` fragments per repaired fragment on cache miss
+  (the repairer then caches the chunk), one fragment on cache hit — see
+  repair.py docstring for why this is the Fig.4-consistent reading.
+
+Traffic is reported in *object-size units* (the paper's unit). The Ceph-like
+replicated baseline (§6.1) is simulated under identical churn.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+HOURS_PER_YEAR = 24 * 365.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    n_nodes: int = 100_000
+    n_objects: int = 1_000
+    byz_fraction: float = 0.0
+    churn_per_year: float = 4.0  # expected failures per node-year
+    k_outer: int = 8
+    n_chunks: int = 10
+    k_inner: int = 32
+    r_inner: int = 80
+    cache_ttl_hours: float = 0.0
+    step_hours: float = 6.0
+    years: float = 1.0
+    seed: int = 0
+
+    @property
+    def frag_units(self) -> float:
+        """Fragment size in object units."""
+        return 1.0 / (self.k_outer * self.k_inner)
+
+    @property
+    def chunk_units(self) -> float:
+        return 1.0 / self.k_outer
+
+    @property
+    def redundancy(self) -> float:
+        return (self.n_chunks / self.k_outer) * (self.r_inner / self.k_inner)
+
+
+@dataclasses.dataclass
+class SimResult:
+    repair_traffic_units: float
+    lost_objects: int
+    n_objects: int
+    repairs: int
+    cache_hits: int
+    final_honest_mean: float
+
+    @property
+    def lost_fraction(self) -> float:
+        return self.lost_objects / max(self.n_objects, 1)
+
+
+def simulate_vault(p: SimParams) -> SimResult:
+    """One VAULT run: returns repair traffic + object losses."""
+    rng = np.random.default_rng(p.seed)
+    n_groups = p.n_objects * p.n_chunks
+    # initial placement: R members drawn from the population mix
+    byz = rng.binomial(p.r_inner, p.byz_fraction, size=n_groups)
+    honest = p.r_inner - byz
+    alive = honest >= p.k_inner
+    cache_t = np.zeros(n_groups)  # client seeds caches at store time (t=0)
+    has_cache = p.cache_ttl_hours > 0.0
+    p_fail = -np.expm1(-p.churn_per_year / HOURS_PER_YEAR * p.step_hours)
+    steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
+    traffic = 0.0
+    repairs = 0
+    cache_hits = 0
+    now = 0.0
+    for _ in range(steps):
+        now += p.step_hours
+        # --- churn: binomial thinning of members (honest & byzantine churn)
+        lost_h = rng.binomial(honest, p_fail)
+        lost_b = rng.binomial(byz, p_fail)
+        honest = honest - lost_h
+        byz = byz - lost_b
+        # --- absorbing check: decode impossible below K_inner honest
+        alive &= honest >= p.k_inner
+        # --- repair: refill to R where membership dropped (alive groups)
+        deficit = np.where(alive, p.r_inner - (honest + byz), 0)
+        deficit = np.maximum(deficit, 0)
+        new_b = rng.binomial(deficit, p.byz_fraction)
+        honest = honest + (deficit - new_b)
+        byz = byz + new_b
+        repaired = deficit  # fragments regenerated this step
+        n_rep = int(repaired.sum())
+        if n_rep:
+            repairs += n_rep
+            if has_cache:
+                warm = (now - cache_t) <= p.cache_ttl_hours
+                hit_frags = np.where(warm, repaired, np.maximum(repaired - 1, 0))
+                miss_pulls = np.where(~warm & (repaired > 0), 1, 0)
+                traffic += float(hit_frags.sum()) * p.frag_units
+                traffic += float(miss_pulls.sum()) * p.chunk_units
+                cache_hits += int(hit_frags.sum())
+                # a cache miss makes the repairer cache the chunk afresh
+                cache_t = np.where(miss_pulls > 0, now, cache_t)
+            else:
+                traffic += float(repaired.sum()) * p.k_inner * p.frag_units
+    chunks_alive = alive.reshape(p.n_objects, p.n_chunks).sum(axis=1)
+    lost = int((chunks_alive < p.k_outer).sum())
+    return SimResult(
+        repair_traffic_units=traffic,
+        lost_objects=lost,
+        n_objects=p.n_objects,
+        repairs=repairs,
+        cache_hits=cache_hits,
+        final_honest_mean=float(honest[alive].mean()) if alive.any() else 0.0,
+    )
+
+
+def simulate_replicated(p: SimParams, replication: int = 3) -> SimResult:
+    """Ceph-like baseline under identical churn: r random replicas, eager
+    repair (one object of traffic per re-replication).
+
+    Byzantine model: replicas are *not verifiable* (no content addressing of
+    repair sources in a plain replicated store), so a repair that copies
+    from a Byzantine claimer — indistinguishable from an honest holder —
+    yields a bad replica. Good-replica count therefore decays contagiously;
+    the object is lost when no good replica remains. This is what collapses
+    the baseline at small Byzantine fractions in Fig. 6, while VAULT is
+    immune: its fragments are content-verified against the chunk hash, so
+    Byzantine peers can only *withhold*, never poison.
+    """
+    rng = np.random.default_rng(p.seed + 1)
+    good = replication - rng.binomial(
+        replication, p.byz_fraction, size=p.n_objects
+    )
+    bad = replication - good  # byzantine-claimed or poisoned slots
+    alive = good >= 1
+    p_fail = -np.expm1(-p.churn_per_year / HOURS_PER_YEAR * p.step_hours)
+    steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
+    traffic = 0.0
+    repairs = 0
+    for _ in range(steps):
+        lost_g = rng.binomial(good, p_fail)
+        lost_b = rng.binomial(bad, p_fail)
+        good = good - lost_g
+        bad = bad - lost_b
+        alive &= good >= 1  # no good replica left ⇒ object gone
+        deficit = np.where(alive, replication - (good + bad), 0)
+        deficit = np.maximum(deficit, 0)
+        # each repair copies from a uniformly chosen claimed replica and
+        # lands on a uniformly chosen node: good iff source good AND new
+        # holder honest
+        remaining = np.maximum(good + bad, 1)
+        src_good_p = np.where(alive, good / remaining, 0.0)
+        p_good_new = src_good_p * (1.0 - p.byz_fraction)
+        new_good = rng.binomial(deficit, np.clip(p_good_new, 0.0, 1.0))
+        good = good + new_good
+        bad = bad + (deficit - new_good)
+        n_rep = int(deficit.sum())
+        repairs += n_rep
+        traffic += float(n_rep) * 1.0  # full object copy per repair
+    lost = int((~alive).sum())
+    return SimResult(
+        repair_traffic_units=traffic,
+        lost_objects=lost,
+        n_objects=p.n_objects,
+        repairs=repairs,
+        cache_hits=0,
+        final_honest_mean=float(good[alive].mean()) if alive.any() else 0.0,
+    )
+
+
+# ------------------------------------------------------------- Fig 5 trace
+def fragment_trace(
+    k_inner: int, r_inner: int, byz_fraction: float, churn_per_year: float,
+    years: float = 10.0, step_hours: float = 6.0,
+    repair_interval_hours: float = 24.0, seed: int = 0,
+) -> np.ndarray:
+    """Honest-fragment count of one chunk group over time (Fig. 5)."""
+    rng = np.random.default_rng(seed)
+    byz = int(rng.binomial(r_inner, byz_fraction))
+    honest = r_inner - byz
+    p_fail = -np.expm1(-churn_per_year / HOURS_PER_YEAR * step_hours)
+    steps = int(round(years * HOURS_PER_YEAR / step_hours))
+    out = np.zeros(steps, dtype=np.int64)
+    since_repair = 0.0
+    for t in range(steps):
+        honest -= int(rng.binomial(honest, p_fail))
+        byz -= int(rng.binomial(byz, p_fail))
+        since_repair += step_hours
+        if honest < k_inner:
+            out[t:] = honest
+            return out  # absorbed (never happens at paper parameters)
+        if since_repair >= repair_interval_hours:
+            deficit = max(0, r_inner - (honest + byz))
+            nb = int(rng.binomial(deficit, byz_fraction))
+            honest += deficit - nb
+            byz += nb
+            since_repair = 0.0
+        out[t] = honest
+    return out
+
+
+# --------------------------------------------------- Fig 6 targeted attacks
+def targeted_attack_vault(
+    p: SimParams, attacked_fraction: float, fragments_per_node: int = 1,
+    seed: int = 0,
+) -> float:
+    """Fraction of objects lost to an adversary disconnecting
+    ``attacked_fraction * n_nodes`` nodes (Fig. 6 bottom).
+
+    The adversary sees every group's composition (worst case, A.2) but NOT
+    the chunk→object mapping (outer-code opacity): it greedily kills the
+    cheapest groups — cost of a kill is (honest − K_inner + 1) removals,
+    amortized by ``fragments_per_node`` co-located fragments (A.3 eq. 17) —
+    and the kills land on objects *uniformly at random*.
+    """
+    rng = np.random.default_rng(seed)
+    n_groups = p.n_objects * p.n_chunks
+    byz = rng.binomial(p.r_inner, p.byz_fraction, size=n_groups)
+    honest = p.r_inner - byz
+    cost = np.maximum(honest - p.k_inner + 1, 0).astype(np.float64)
+    cost /= max(fragments_per_node, 1)
+    budget = attacked_fraction * p.n_nodes
+    # cheapest groups first; ties broken uniformly at random — the outer
+    # code's opacity means equal-cost groups are indistinguishable, so the
+    # attacker cannot concentrate kills on one object
+    perm = rng.permutation(n_groups)
+    order = perm[np.argsort(cost[perm], kind="stable")]
+    csum = np.cumsum(cost[order])
+    n_killed = int(np.searchsorted(csum, budget, side="right"))
+    killed = np.zeros(n_groups, dtype=bool)
+    killed[order[:n_killed]] = True
+    chunks_alive = (~killed).reshape(p.n_objects, p.n_chunks).sum(axis=1)
+    return float((chunks_alive < p.k_outer).mean())
+
+
+def targeted_attack_replicated(
+    p: SimParams, attacked_fraction: float, replication: int = 3,
+) -> float:
+    """Baseline under targeted attack: placement is public, so the attacker
+    erases whole replica sets at a cost of ``replication`` nodes each."""
+    budget = attacked_fraction * p.n_nodes
+    killed = min(p.n_objects, int(budget // replication))
+    return killed / max(p.n_objects, 1)

@@ -1,0 +1,195 @@
+"""VAULT client protocol (Algorithm 1): STORE and QUERY.
+
+Latency accounting: coding time is measured for real (wall clock on this
+box); network time composes sampled per-link RTTs with the parallelism
+structure of Alg. 1 (all chunk/fragment operations run in parallel; a store
+round is one selection RTT plus one store RTT; a query takes the K-th order
+statistic of the parallel fragment fetches — which is why QUERY beats the
+replicated baseline in the paper, Fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import selection as sel
+from repro.core.network import GroupMeta, Node, SimNetwork
+from repro.core.rateless import InsufficientFragments
+
+MAX_ROUNDS_FACTOR = 6  # fragment-index rounds per required member
+
+
+@dataclasses.dataclass
+class OpStats:
+    latency_s: float
+    coding_s: float
+    bytes_sent: int
+
+
+class VaultClient:
+    """A participating node issuing client operations (paper §4.3.1)."""
+
+    def __init__(self, net: SimNetwork, node: Node, backend: str = "numpy"):
+        self.net = net
+        self.node = node
+        self.backend = backend
+
+    # ------------------------------------------------------------------ STORE
+    def store(
+        self, data: bytes, params: C.CodeParams | None = None,
+        cache_ttl: float = 0.0,
+    ) -> tuple[C.ObjectID, OpStats]:
+        params = params or C.CodeParams()
+        t0 = time.perf_counter()
+        oid, chunk_payloads = C.outer_encode(
+            data, self.node.kp.sk, params, backend=self.backend
+        )
+        coding = time.perf_counter() - t0
+        lat_chunks = []
+        sent = 0
+        for chash, payload in zip(oid.chunk_hashes, chunk_payloads):
+            lat, nbytes, cs = self._store_chunk(chash, payload, params, cache_ttl)
+            lat_chunks.append(lat)
+            sent += nbytes
+            coding += cs
+        # chunks are stored in parallel (Alg. 1): latency = slowest chunk
+        stats = OpStats(
+            latency_s=coding + (max(lat_chunks) if lat_chunks else 0.0),
+            coding_s=coding,
+            bytes_sent=sent,
+        )
+        return oid, stats
+
+    def _store_chunk(
+        self, chash: bytes, payload: bytes, params: C.CodeParams,
+        cache_ttl: float,
+    ) -> tuple[float, int, float]:
+        anchor = C.hash_point(chash)
+        t0 = time.perf_counter()
+        blocks = C.split_blocks(payload, params.k_inner)
+        code = C.inner_code(chash, params.k_inner)
+        coding = time.perf_counter() - t0
+        frag_len = blocks.shape[1] + 0  # symbols have block length
+        meta = GroupMeta(
+            chash=chash, k_inner=params.k_inner, r_target=params.r_inner,
+            frag_len=frag_len,
+        )
+        members: dict[int, float] = {}
+        stored: list[tuple[Node, int, bytes]] = []
+        round_lat: list[float] = []
+        sent = 0
+        max_rounds = params.r_inner * MAX_ROUNDS_FACTOR
+        cand_count = min(4 * params.r_inner, self.net.n_nodes)
+        cands = self.net.candidates(anchor, cand_count)
+        for i in range(max_rounds):
+            if len(members) >= params.r_inner:
+                break
+            fhash = C.fragment_hash(chash, i)
+            # ask candidates for selection proofs (one parallel RPC round)
+            picked: Node | None = None
+            best_d = None
+            picked_proof = None
+            for cand in cands:
+                if cand.nid in members or not cand.alive:
+                    continue
+                proof, selected = cand.selection_proof(
+                    fhash, anchor, params.r_inner
+                )
+                if not selected:
+                    continue
+                if not sel.verify_selection(
+                    self.net.registry, proof, anchor, params.r_inner,
+                    self.net.n_nodes,
+                ):
+                    continue  # forged / stale proof — never admitted
+                d = sel.ring_distance(anchor, cand.nid)
+                if best_d is None or d < best_d:
+                    picked, best_d, picked_proof = cand, d, proof
+            if picked is None:
+                continue
+            t0 = time.perf_counter()
+            frag = code.encode(blocks, [i], backend=self.backend)[0].tobytes()
+            coding += time.perf_counter() - t0
+            members[picked.nid] = self.net.now
+            picked.store_fragment(meta, i, frag, dict(members), picked_proof)
+            stored.append((picked, i, frag))
+            sent += len(frag)
+            # selection round + store round, fragments in parallel:
+            round_lat.append(
+                float(np.max(self.net.rtts(self.node, cands[: 8]))) +
+                self.net.rtt(self.node, picked)
+            )
+        if len(members) < params.k_inner:
+            raise InsufficientFragments(
+                f"could only place {len(members)} fragments"
+            )
+        # forward final membership to every member (bootstraps group views)
+        for node_, _, _ in stored:
+            view = node_.groups[chash]
+            view.members.update(members)
+            if cache_ttl > 0:
+                node_.cache_chunk(chash, payload, cache_ttl)
+        lat = max(round_lat) if round_lat else 0.0
+        return lat, sent, coding
+
+    # ------------------------------------------------------------------ QUERY
+    def query(self, oid: C.ObjectID) -> tuple[bytes, OpStats]:
+        t_net: list[float] = []
+        coding = 0.0
+        recovered: dict[bytes, bytes] = {}
+        # chunk retrievals run in parallel; we need the fastest K_outer
+        per_chunk: list[tuple[float, bytes, bytes]] = []
+        for chash in oid.chunk_hashes:
+            try:
+                chunk, lat, cs = self._retrieve_chunk(chash, oid.params)
+            except (InsufficientFragments, ValueError):
+                # unreachable fragments OR content-verification failure
+                # (corrupted/forged fragments): skip — any K_outer of the
+                # n_chunks chunks reconstruct the object
+                continue
+            coding += cs
+            per_chunk.append((lat, chash, chunk))
+        if len(per_chunk) < oid.params.k_outer:
+            raise InsufficientFragments(
+                f"only {len(per_chunk)}/{oid.params.k_outer} chunks recoverable"
+            )
+        per_chunk.sort(key=lambda t: t[0])
+        for lat, chash, chunk in per_chunk[: oid.params.k_outer]:
+            recovered[chash] = chunk
+            t_net.append(lat)
+        t0 = time.perf_counter()
+        data = C.outer_decode(oid, recovered)
+        coding += time.perf_counter() - t0
+        return data, OpStats(
+            latency_s=max(t_net) + coding, coding_s=coding,
+            bytes_sent=0,
+        )
+
+    def _retrieve_chunk(
+        self, chash: bytes, params: C.CodeParams
+    ) -> tuple[bytes, float, float]:
+        anchor = C.hash_point(chash)
+        cands = self.net.candidates(anchor, min(4 * params.r_inner, self.net.n_nodes))
+        lookup_rtt = float(np.max(self.net.rtts(self.node, cands[:8]))) if cands else 0.0
+        frags: dict[int, bytes] = {}
+        holders: list[Node] = []
+        for cand in cands:
+            served = cand.serve_fragments(chash)
+            if served:
+                holders.append(cand)
+                for idx, payload in served.items():
+                    frags.setdefault(idx, payload)
+        if len(frags) < params.k_inner:
+            raise InsufficientFragments(
+                f"{len(frags)}/{params.k_inner} fragments reachable"
+            )
+        # parallel fetches: chunk ready at the K-th fastest response
+        rtts = np.sort(self.net.rtts(self.node, holders))
+        kth = rtts[min(params.k_inner, len(rtts)) - 1]
+        t0 = time.perf_counter()
+        chunk = C.inner_decode(chash, params.k_inner, frags)
+        coding = time.perf_counter() - t0
+        return chunk, lookup_rtt + float(kth), coding

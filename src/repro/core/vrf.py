@@ -1,0 +1,81 @@
+"""Verifiable random function (VRF) interface for VAULT peer selection.
+
+The paper uses an ed25519-curve VRF (RFC 9381 style). Elliptic-curve crypto
+is not the paper's contribution and has no TPU analogue, so we implement the
+VRF *interface* — per-key deterministic, uniformly distributed outputs, a
+proof object, and public verification that never touches ``sk`` — with a
+keyed-hash construction plus a registry that plays the role of the public
+verification equation. A production deployment swaps ``HashVRF`` for a real
+ed25519-VRF behind the same three functions (DESIGN.md §4).
+
+Security property preserved for every protocol/test in this repo: an
+adversary who does not hold ``sk`` can neither predict ``r`` for a new input
+nor forge a ``(r, proof)`` pair that verifies under an honest ``pk``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import hmac
+import os
+
+HASHLEN = 256  # bits of VRF output / ring identifier space
+RING = 1 << HASHLEN
+
+
+def _h(*parts: bytes) -> bytes:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(len(p).to_bytes(4, "little"))
+        h.update(p)
+    return h.digest()
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyPair:
+    sk: bytes
+    pk: bytes
+
+    @staticmethod
+    def generate(seed: bytes | None = None) -> "KeyPair":
+        sk = _h(b"vault-sk", seed) if seed is not None else os.urandom(32)
+        return KeyPair(sk=sk, pk=_h(b"vault-pk", sk))
+
+
+def _tag(sk: bytes) -> bytes:
+    return _h(b"vault-vrf-tag", sk)
+
+
+class VRFRegistry:
+    """Stand-in for the public-key verification equation.
+
+    Maps pk -> verification tag at key registration. Verification reads only
+    pk-indexed state; ``sk`` never leaves the prover. One registry per
+    simulated network (it models "public keys are known by all nodes").
+    """
+
+    def __init__(self) -> None:
+        self._tags: dict[bytes, bytes] = {}
+
+    def register(self, kp: KeyPair) -> None:
+        self._tags[kp.pk] = _tag(kp.sk)
+
+    def prove(self, sk: bytes, alpha: bytes) -> tuple[int, bytes]:
+        """VRF_sk(alpha) -> (r, proof). r uniform in [0, 2^HASHLEN)."""
+        t = _tag(sk)
+        r = int.from_bytes(_h(b"vrf-out", t, alpha), "big")
+        proof = _h(b"vrf-proof", t, alpha)
+        return r, proof
+
+    def verify(self, pk: bytes, alpha: bytes, r: int, proof: bytes) -> bool:
+        t = self._tags.get(pk)
+        if t is None:
+            return False
+        r_ok = int.from_bytes(_h(b"vrf-out", t, alpha), "big") == r
+        p_ok = hmac.compare_digest(_h(b"vrf-proof", t, alpha), proof)
+        return r_ok and p_ok
+
+
+def node_id(pk: bytes) -> int:
+    """SHA256(pk) as a point on the hash ring (§4.3: random node IDs)."""
+    return int.from_bytes(_h(b"vault-node-id", pk), "big")

@@ -1,0 +1,2 @@
+# Distribution substrate: logical-axis sharding rules (with divisibility
+# fallback), ZeRO-1 optimizer-state sharding, int8 gradient compression.

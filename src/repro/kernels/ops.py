@@ -1,0 +1,98 @@
+"""Jitted public wrappers around the Pallas encode kernels.
+
+Handles dtype conversion (uint8 <-> int32 lanes), tile padding, and
+interpret-mode selection (interpret=True off-TPU so the kernel body runs —
+and is validated — on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gf256_encode import gf256_encode_kernel
+from repro.kernels.gf2_encode import gf2_encode_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray, axis: int, multiple: int) -> np.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def _pick_tile(size: int, preferred: int, align: int) -> int:
+    if size >= preferred:
+        return preferred
+    return max(align, ((size + align - 1) // align) * align)
+
+
+def gf256_encode(coeffs, blocks, tile_r: int = 8, tile_l: int = 512):
+    """coeffs (R, K) uint8, blocks (K, L) uint8 -> fragments (R, L) uint8."""
+    coeffs = np.asarray(coeffs, np.uint8)
+    blocks = np.asarray(blocks, np.uint8)
+    r, l = coeffs.shape[0], blocks.shape[1]
+    tl = _pick_tile(l, tile_l, 128)
+    tr = min(tile_r, max(1, r))
+    c = _pad_to(coeffs.astype(np.int32), 0, tr)
+    d = _pad_to(blocks.astype(np.int32), 1, tl)
+    out = gf256_encode_kernel(
+        jnp.asarray(c), jnp.asarray(d), tile_r=tr, tile_l=tl,
+        interpret=_interpret(),
+    )
+    return np.asarray(out)[:r, :l].astype(np.uint8)
+
+
+def prf_select(tags, fhashes, tile_n: int = 8, tile_f: int = 128):
+    """tags (N,2) int32, fhashes (F,2) int32 -> (N,F) int32 PRF matrix."""
+    from repro.kernels.prf_select import prf_select_kernel
+
+    tags = np.asarray(tags, np.int32)
+    fhashes = np.asarray(fhashes, np.int32)
+    n, f = tags.shape[0], fhashes.shape[0]
+    tn = min(tile_n, max(1, n))
+    tf = _pick_tile(f, tile_f, 128)
+    t = _pad_to(tags, 0, tn)
+    h = _pad_to(fhashes, 0, tf)
+    out = prf_select_kernel(jnp.asarray(t), jnp.asarray(h), tile_n=tn,
+                            tile_f=tf, interpret=_interpret())
+    return np.asarray(out)[:n, :f]
+
+
+def selection_mask(tags, fhashes, distances, r_target: int):
+    """Batch Alg.2 selection: uniform u from the PRF, select iff
+    u < exp(-2(d-1)/R) (same rule as core/selection.py).
+
+    distances: (N,) or (N,F) ring-distance metric values (>= 1).
+    """
+    r = prf_select(tags, fhashes)
+    # top 24 bits -> uniform in [0,1)
+    u = (np.right_shift(r.view(np.uint32), 8)).astype(np.float64) / 2**24
+    d = np.asarray(distances, np.float64)
+    if d.ndim == 1:
+        d = d[:, None]
+    p = np.exp(-2.0 * (d - 1.0) / max(r_target, 1))
+    return u < p
+
+
+def gf2_encode(masks, words, tile_r: int = 8, tile_w: int = 512):
+    """masks (R, K) uint8/int, words (K, W) int32 -> (R, W) int32."""
+    masks = np.asarray(masks)
+    words = np.asarray(words, np.int32)
+    r, w = masks.shape[0], words.shape[1]
+    tw = _pick_tile(w, tile_w, 128)
+    tr = min(tile_r, max(1, r))
+    m = _pad_to(masks.astype(np.int32), 0, tr)
+    d = _pad_to(words, 1, tw)
+    out = gf2_encode_kernel(
+        jnp.asarray(m), jnp.asarray(d), tile_r=tr, tile_w=tw,
+        interpret=_interpret(),
+    )
+    return np.asarray(out)[:r, :w]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: batched PRF evaluation for randomized peer selection.
+
+When a node with many fragments fails, every affected chunk group re-runs
+Locate() — a repair storm evaluates selection hashes for (candidate node ×
+fragment) pairs in bulk. This kernel computes an ARX (add-rotate-xor,
+ChaCha-quarter-round-style) keyed PRF over a (nodes × fragments) grid:
+
+    out[n, f] = ARX8(tag0[n], tag1[n], fh0[f], fh1[f])
+
+Pure int32 add/xor/rotate on the VPU — no gathers, no multiplies — with the
+node-tag tile resident across the fragment dimension. This is the *batch*
+variant of the VRF interface used by the vectorized simulator and the
+selection-throughput studies; the protocol-level registry keeps its own
+keyed-hash construction (DESIGN.md §4) — the two are independent PRFs with
+the same contract (deterministic per key, uniform, unforgeable without the
+tag), not byte-compatible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 8
+DEFAULT_TILE_F = 128
+ROUNDS = 8
+
+
+def _rotl(x, k: int):
+    return (x << k) | jax.lax.shift_right_logical(x, 32 - k)
+
+
+def arx_mix(a, b, c, d):
+    """8 ChaCha-style quarter-rounds over broadcastable int32 lanes."""
+    for _ in range(ROUNDS):
+        a = a + b
+        d = _rotl(d ^ a, 16)
+        c = c + d
+        b = _rotl(b ^ c, 12)
+        a = a + b
+        d = _rotl(d ^ a, 8)
+        c = c + d
+        b = _rotl(b ^ c, 7)
+    return a ^ _rotl(b, 13) ^ _rotl(c, 7) ^ d
+
+
+def _prf_kernel(t_ref, f_ref, o_ref):
+    tags = t_ref[...]  # (TN, 2) int32
+    fh = f_ref[...]  # (TF, 2) int32
+    a = tags[:, 0:1]  # (TN, 1)
+    b = tags[:, 1:2]
+    c = fh[:, 0:1].T  # (1, TF)
+    d = fh[:, 1:2].T
+    o_ref[...] = arx_mix(a, b, c, d)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_f", "interpret"))
+def prf_select_kernel(
+    tags: jax.Array, fhashes: jax.Array,
+    tile_n: int = DEFAULT_TILE_N, tile_f: int = DEFAULT_TILE_F,
+    interpret: bool = True,
+) -> jax.Array:
+    """tags (N,2) int32, fhashes (F,2) int32 -> (N,F) int32 PRF values."""
+    n = tags.shape[0]
+    f = fhashes.shape[0]
+    assert n % tile_n == 0 and f % tile_f == 0, (n, f, tile_n, tile_f)
+    grid = (n // tile_n, f // tile_f)
+    return pl.pallas_call(
+        _prf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_f, 2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, tile_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.int32),
+        interpret=interpret,
+    )(tags, fhashes)

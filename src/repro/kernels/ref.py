@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the encode kernels (shape/dtype-identical)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gf import gf_mul_jnp_tables
+
+
+def gf256_encode_ref(coeffs: jax.Array, data: jax.Array) -> jax.Array:
+    """coeffs (R, K) int32, data (K, L) int32 -> (R, L) int32."""
+    coeffs = jnp.asarray(coeffs, jnp.int32)
+    data = jnp.asarray(data, jnp.int32)
+    k = coeffs.shape[1]
+
+    def body(j, acc):
+        a = jax.lax.dynamic_slice_in_dim(coeffs, j, 1, axis=1)  # (R, 1)
+        b = jax.lax.dynamic_slice_in_dim(data, j, 1, axis=0)  # (1, L)
+        return acc ^ gf_mul_jnp_tables(a, b)
+
+    acc = jnp.zeros((coeffs.shape[0], data.shape[1]), jnp.int32)
+    return jax.lax.fori_loop(0, k, body, acc)
+
+
+def prf_select_ref(tags: jax.Array, fhashes: jax.Array) -> jax.Array:
+    """tags (N,2) int32, fhashes (F,2) int32 -> (N,F) int32 (ARX PRF)."""
+    from repro.kernels.prf_select import arx_mix
+
+    tags = jnp.asarray(tags, jnp.int32)
+    fhashes = jnp.asarray(fhashes, jnp.int32)
+    a = tags[:, 0:1]
+    b = tags[:, 1:2]
+    c = fhashes[:, 0:1].T
+    d = fhashes[:, 1:2].T
+    return arx_mix(a, b, c, d)
+
+
+def gf2_encode_ref(masks: jax.Array, words: jax.Array) -> jax.Array:
+    """masks (R, K) int32, words (K, W) int32 -> (R, W) int32."""
+    masks = jnp.asarray(masks, jnp.int32)
+    words = jnp.asarray(words, jnp.int32)
+    k = masks.shape[1]
+
+    def body(j, acc):
+        sel = jax.lax.dynamic_slice_in_dim(masks, j, 1, axis=1)  # (R, 1)
+        row = jax.lax.dynamic_slice_in_dim(words, j, 1, axis=0)  # (1, W)
+        return acc ^ jnp.where(sel != 0, row, 0)
+
+    acc = jnp.zeros((masks.shape[0], words.shape[1]), jnp.int32)
+    return jax.lax.fori_loop(0, k, body, acc)

@@ -1,0 +1,117 @@
+"""Extract roofline terms from a compiled (SPMD-partitioned) module.
+
+* FLOPs / bytes-accessed: ``compiled.cost_analysis()`` (per-device program).
+* Collective bytes: not in cost_analysis — parsed from the post-partitioning
+  HLO text (``compiled.as_text()``): we sum operand sizes of every
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+  op (shapes in partitioned HLO are already per-device), and also keep a
+  wire-bytes model per op kind (all-reduce moves ~2× its operand bytes on a
+  ring; a gather's wire bytes are its output).
+
+Hardware constants: TPU v5e-class chip — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (brief-specified).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# result then opcode:  %x = bf16[1,2]{...} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict  # sum of result (per-device) shape bytes
+    wire_bytes_by_kind: dict  # ring wire model
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes_by_kind.values())
+
+    def to_json(self):
+        return {
+            "counts": self.counts,
+            "bytes_by_kind": self.bytes_by_kind,
+            "wire_bytes_by_kind": self.wire_bytes_by_kind,
+            "total_bytes": self.total_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in COLLECTIVES}
+    nbytes = {k: 0 for k in COLLECTIVES}
+    wire = {k: 0 for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind, suffix = m.groups()
+        if suffix == "-done":
+            continue  # async pair: the -start op already carried the shape
+        counts[kind] += 1
+        if tuple_body is not None:
+            size = sum(
+                _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_body)
+            )
+        else:
+            size = _shape_bytes(dtype, dims)
+        nbytes[kind] += size
+        # ring wire model per device
+        if kind == "all-reduce":
+            wire[kind] += 2 * size
+        else:
+            wire[kind] += size
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes,
+                           wire_bytes_by_kind=wire)
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, collective_bytes: float,
+) -> dict:
+    """Three per-device roofline terms, in seconds."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = collective_bytes / LINK_BW
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant.replace("_s", "")
+    terms["bound_s"] = terms[dominant]
+    return terms

@@ -1,0 +1,12 @@
+from repro.models.common import LayerPattern, ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    active_param_count,
+    cache_specs,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    param_count,
+    param_specs,
+    train_loss,
+)

@@ -1,0 +1,379 @@
+"""Attention mixers: GQA/MHA and MLA (DeepSeek-style multi-head latent).
+
+Both support three modes through one code path:
+
+* train/forward — full sequence, causal, no cache;
+* prefill — full sequence, causal, returns the populated KV cache;
+* decode — S=1 with absolute positions against a fixed-capacity cache.
+
+The score/weighted-sum core (``attend``) has an optional *chunked
+online-softmax* path (``attn_chunk``) that scans KV blocks with running
+(max, denom, acc) — O(S·C) live memory instead of O(S²) — required for the
+32K/500K shapes.
+
+MLA decode uses the *weight-absorbed* form: queries are projected into the
+compressed KV space (q·W_uk), attention runs against the (kv_lora + rope)
+cache directly, and values are re-expanded after the weighted sum — the
+cache stays at (kv_lora + rope) per token regardless of head count, which is
+the whole point of MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (
+    KeyGen,
+    ModelConfig,
+    apply_rope,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- core
+def _attend_full(q, k, v, mask, scale):
+    """q:(B,S,N,G,D) k:(B,T,N,D) v:(B,T,N,Dv) mask:(B,S,T) -> (B,S,N,G,Dv)."""
+    scores = jnp.einsum("bsngd,btnd->bngst", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bngst,btnd->bsngd", w, v)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, scale, chunk: int,
+                    unroll: bool = False):
+    """Flash-style double chunking: sequential q blocks (lax.map), online
+    softmax over kv blocks (lax.scan). Live memory is one (qc × kc) score
+    tile per head — O(S²) never materializes.
+
+    ``unroll=True`` replaces both loops with python loops so that
+    ``cost_analysis`` (which counts scan bodies once) sees every tile —
+    used only by the dry-run depth-analysis variants.
+
+    q:(B,S,N,G,D) k:(B,T,N,D) v:(B,T,N,Dv) q_pos:(B,S) k_pos:(B,T).
+    """
+    b, t, n, dv = v.shape
+    s, g = q.shape[1], q.shape[3]
+    kc = chunk
+    qc = min(chunk, s)
+    pad_t = (-t) % kc
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_t)), constant_values=2**30)
+    pad_s = (-s) % qc
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_s)), constant_values=-1)
+    nkb = k.shape[1] // kc
+    nqb = q.shape[1] // qc
+    kb = k.reshape(b, nkb, kc, n, k.shape[-1]).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nkb, kc, n, dv).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(b, nkb, kc).transpose(1, 0, 2)
+    qb = q.reshape(b, nqb, qc, n, g, q.shape[-1]).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(b, nqb, qc).transpose(1, 0, 2)
+
+    def one_q_block(args):
+        qi, qpi = args  # (B,qc,N,G,D), (B,qc)
+
+        def step(carry, blk):
+            m, l, acc = carry  # (B,N,G,qc) ×2, (B,qc,N,G,Dv)
+            kci, vci, kpi = blk
+            sc = jnp.einsum(
+                "bsngd,btnd->bngst", qi, kci
+            ).astype(jnp.float32) * scale
+            msk = kpi[:, None, :] <= qpi[:, :, None]  # (B,qc,kc)
+            sc = jnp.where(msk.transpose(0, 1, 2)[:, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bngst,btnd->bsngd", p.astype(vci.dtype), vci)
+            acc_new = (
+                acc * corr.transpose(0, 3, 1, 2)[..., None].astype(acc.dtype)
+                + pv
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, n, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, qc, n, g, dv), v.dtype)
+        carry = (m0, l0, a0)
+        if unroll:
+            for i in range(nkb):
+                carry, _ = step(carry, (kb[i], vb[i], kpb[i]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(step, carry, (kb, vb, kpb))
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return (acc / denom.astype(acc.dtype)).astype(v.dtype)
+
+    if unroll:
+        out = jnp.stack([one_q_block((qb[i], qpb[i])) for i in range(nqb)])
+    else:
+        out = jax.lax.map(one_q_block, (qb, qpb))  # (nqb,B,qc,N,G,Dv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nqb * qc, n, g, dv)
+    return out[:, :s]
+
+
+def attend(q, k, v, q_pos, k_pos, *, scale: float, chunk: int = 0,
+           unroll: bool = False):
+    """Grouped causal attention.
+
+    q: (B,S,H,D) with H = N·G query heads; k: (B,T,N,D); v: (B,T,N,Dv);
+    q_pos: (B,S) absolute positions; k_pos: (T,) or (B,T).
+    """
+    b, s, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    qg = q.reshape(b, s, n, g, d)
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None, :], (b, k_pos.shape[0]))
+    if chunk and k.shape[1] > chunk:
+        out = _attend_chunked(qg, k, v, q_pos, k_pos, scale, chunk,
+                              unroll=unroll)
+    else:
+        mask = k_pos[:, None, :] <= q_pos[:, :, None]  # causal, absolute
+        out = _attend_full(qg, k, v, mask, scale)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+# -------------------------------------------------------------------- GQA
+def gqa_init(key, cfg: ModelConfig):
+    kg = KeyGen(key)
+    d, h, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype()
+    p = {
+        "wq": dense_init(kg(), (d, h, hd), dt, fan_in=d),
+        "wk": dense_init(kg(), (d, nkv, hd), dt, fan_in=d),
+        "wv": dense_init(kg(), (d, nkv, hd), dt, fan_in=d),
+        "wo": dense_init(kg(), (h, hd, d), dt, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((nkv, hd), dt)
+        p["bv"] = jnp.zeros((nkv, hd), dt)
+    return p
+
+
+def gqa_spec(cfg: ModelConfig):
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("heads", "head_dim")
+        s["bk"] = ("kv_heads", "head_dim")
+        s["bv"] = ("kv_heads", "head_dim")
+    return s
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, dtype):
+    t = cfg.max_cache_len
+    return {
+        "k": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def gqa_cache_spec(cfg: ModelConfig):
+    return {
+        "k": ("batch", "cache_len", "kv_heads", "head_dim"),
+        "v": ("batch", "cache_len", "kv_heads", "head_dim"),
+    }
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions, cache=None, cur_len=None):
+    """x: (B,S,d). cache: dict or None. cur_len: scalar write offset.
+
+    Returns (out (B,S,d), new_cache_or_None).
+    """
+    b, s, _ = x.shape
+    cd = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dnk->bsnk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dnk->bsnk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    # pin head sharding: rope's trig chain can drop the propagated sharding
+    # and SPMD then replicates the whole attention (EXPERIMENTS.md §Perf)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if cache is not None:
+        off = cur_len if cur_len is not None else 0
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0)
+        )
+        cache = {"k": kc, "v": vc}
+        k_all, v_all = kc.astype(cd), vc.astype(cd)
+        k_pos = jnp.arange(kc.shape[1], dtype=positions.dtype)
+    else:
+        k_all, v_all = k, v
+        k_pos = positions if positions.ndim == 1 else positions[0]
+    scale = 1.0 / (cfg.hd ** 0.5)
+    out = attend(q, k_all, v_all, positions, k_pos, scale=scale,
+                 chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, cache
+
+
+# -------------------------------------------------------------------- MLA
+def mla_init(key, cfg: ModelConfig):
+    kg = KeyGen(key)
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = cfg.pdtype()
+    p = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(kg(), (d, cfg.q_lora_rank), dt)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dt)
+        p["w_uq"] = dense_init(
+            kg(), (cfg.q_lora_rank, h, nope + rope_d), dt, fan_in=cfg.q_lora_rank
+        )
+    else:
+        p["w_q"] = dense_init(kg(), (d, h, nope + rope_d), dt, fan_in=d)
+    p["w_dkv"] = dense_init(kg(), (d, cfg.kv_lora_rank + rope_d), dt)
+    p["kv_norm"] = rmsnorm_init(cfg.kv_lora_rank, dt)
+    p["w_uk"] = dense_init(
+        kg(), (cfg.kv_lora_rank, h, nope), dt, fan_in=cfg.kv_lora_rank
+    )
+    p["w_uv"] = dense_init(
+        kg(), (cfg.kv_lora_rank, h, vd), dt, fan_in=cfg.kv_lora_rank
+    )
+    p["wo"] = dense_init(kg(), (h, vd, d), dt, fan_in=h * vd)
+    return p
+
+
+def mla_spec(cfg: ModelConfig):
+    s = {
+        "w_dkv": ("embed", "lora"),
+        "kv_norm": (None,),
+        "w_uk": ("lora", "heads", "head_dim"),
+        "w_uv": ("lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.q_lora_rank:
+        s["w_dq"] = ("embed", "lora")
+        s["q_norm"] = (None,)
+        s["w_uq"] = ("lora", "heads", "head_dim")
+    else:
+        s["w_q"] = ("embed", "heads", "head_dim")
+    return s
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, dtype):
+    t = cfg.max_cache_len
+    return {
+        "ckv": jnp.zeros((batch, t, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, t, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_cache_spec(cfg: ModelConfig):
+    return {
+        "ckv": ("batch", "cache_len", "lora"),
+        "krope": ("batch", "cache_len", "head_dim"),
+    }
+
+
+def _mla_queries(p, cfg: ModelConfig, x, positions, cd):
+    if cfg.q_lora_rank:
+        cq = rmsnorm(x @ p["w_dq"].astype(cd), p["q_norm"].astype(cd))
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"].astype(cd))
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(
+        q[..., cfg.qk_nope_dim :].swapaxes(1, 2), positions[:, None, :],
+        cfg.rope_theta,
+    ).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def _mla_compress(p, cfg: ModelConfig, x, positions, cd):
+    ckv_full = x @ p["w_dkv"].astype(cd)
+    ckv = rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"].astype(cd))
+    krope = apply_rope(
+        ckv_full[..., cfg.kv_lora_rank :], positions, cfg.rope_theta
+    )  # (B,S,rope) — one shared rope key head (DeepSeek-V2/V3)
+    return ckv, krope
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, cache=None, cur_len=None):
+    """Naive-expand path used for train/prefill. Returns (out, new_cache)."""
+    cd = cfg.cdtype()
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions, cd)
+    ckv, krope = _mla_compress(p, cfg, x, positions, cd)
+    if cache is not None:
+        off = cur_len if cur_len is not None else 0
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, off, 0)
+        )
+        kr = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, off, 0)
+        )
+        cache = {"ckv": cc, "krope": kr}
+    k_nope = jnp.einsum("btr,rhk->bthk", ckv, p["w_uk"].astype(cd))
+    v = jnp.einsum("btr,rhk->bthk", ckv, p["w_uv"].astype(cd))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pin head sharding: the shared-rope broadcast + concat makes the head
+    # dim look "produced by broadcast" to SPMD, which then replicates the
+    # entire attention (a 1 TiB/step all-gather on deepseek prefill before
+    # this constraint — EXPERIMENTS.md §Perf)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    out = attend(q, k, v, positions, positions if positions.ndim == 1 else positions[0],
+                 scale=scale, chunk=cfg.attn_chunk, unroll=cfg.scan_unroll)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, cache
+
+
+def mla_decode(p, cfg: ModelConfig, x, positions, cache, cur_len):
+    """Weight-absorbed decode: attention in compressed-KV space."""
+    cd = cfg.cdtype()
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions, cd)
+    ckv, krope = _mla_compress(p, cfg, x, positions, cd)
+    cc = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cur_len, 0)
+    )
+    kr = jax.lax.dynamic_update_slice(
+        cache["krope"], krope.astype(cache["krope"].dtype), (0, cur_len, 0)
+    )
+    cache = {"ckv": cc, "krope": kr}
+    # absorb W_uk into the query: q_c = q_nope · W_uk  -> (B,S,H,R)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(cd))
+    t = cc.shape[1]
+    k_pos = jnp.arange(t, dtype=positions.dtype)
+    mask = k_pos[None, None, :] <= positions[:, :, None]  # (B,S,T)
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    sc = (
+        jnp.einsum("bshr,btr->bhst", q_c, cc.astype(cd))
+        + jnp.einsum("bshk,btk->bhst", q_rope, kr.astype(cd))
+    ).astype(jnp.float32) * scale
+    sc = jnp.where(mask[:, None, :, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1).astype(cd)
+    ctx_c = jnp.einsum("bhst,btr->bshr", w, cc.astype(cd))  # compressed ctx
+    out = jnp.einsum("bshr,rhk->bshk", ctx_c, p["w_uv"].astype(cd))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, cache

@@ -1,0 +1,186 @@
+"""Shared model plumbing: config, norms, RoPE, init, logical-axis metadata.
+
+No flax/haiku in this environment — models are pure pytrees (nested dicts of
+jnp arrays) plus init/apply functions. Every parameter carries a parallel
+*logical axis* annotation (built by ``*_spec`` functions mirroring the init
+tree) which ``repro.distributed.sharding`` resolves to mesh ``PartitionSpec``s
+with divisibility fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree of jnp arrays
+Specs = Any  # same structure, leaves = tuple[str | None, ...]
+
+
+# ------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class LayerPattern:
+    """One scanned segment: ``repeat`` copies of a block of sub-layers.
+
+    Each sub-layer is ``(mixer, ffn)`` where mixer ∈ {"gqa", "mla",
+    "mamba", None} and ffn ∈ {"dense", "moe", None}.
+    """
+
+    repeat: int
+    block: tuple[tuple[str | None, str | None], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    vocab: int = 32_000
+    d_model: int = 512
+    n_layers: int = 4
+    # attention
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # MLA (used when a pattern names "mla")
+    q_lora_rank: int = 0  # 0 -> direct q projection
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # dense FFN
+    d_ff: int = 2048
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 2
+    moe_d_ff: int = 0  # routed expert hidden size
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0  # total shared-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    moe_constrain: str = "be"  # "be": buffer sharded (batch, experts) | "none"
+    # combine strategy: "scatter" keeps the combine in expert-major space
+    # (scatter-add to token space + all-reduce over the expert shards —
+    # B·S·d wire bytes); "gather" is the naive inverse-gather (forces an
+    # all-gather of the (B,E,C,d) expert outputs). See EXPERIMENTS.md §Perf.
+    moe_combine: str = "scatter"
+    # Mamba2 / SSD
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # layer pattern; () -> n_layers x (default_mixer, default_ffn)
+    pattern: tuple[LayerPattern, ...] = ()
+    default_mixer: str = "gqa"
+    default_ffn: str = "dense"
+    # embeddings
+    embed_inputs: bool = False  # modality stub: consume (B,S,d) embeddings
+    extra_embed_len: int = 0  # vlm: prepended patch embeddings
+    tie_embeddings: bool = False
+    # numerics / memory
+    dtype: str = "float32"  # parameter dtype
+    compute_dtype: str = "float32"
+    attn_chunk: int = 0  # 0 -> unchunked; else online-softmax KV block
+    remat: str = "none"  # none | full | dots
+    max_cache_len: int = 0  # serve: KV cache capacity
+    # analysis: python-loop the layer stacks instead of lax.scan so that
+    # compiled.cost_analysis() sees every layer (it counts scan bodies ONCE,
+    # ignoring trip count — launch/dryrun.py measures per-layer costs from
+    # shallow unrolled variants and reconstructs full-depth totals)
+    scan_unroll: bool = False
+
+    # ------------------------------------------------------------ derived
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def patterns(self) -> tuple[LayerPattern, ...]:
+        if self.pattern:
+            return self.pattern
+        return (
+            LayerPattern(self.n_layers, ((self.default_mixer, self.default_ffn),)),
+        )
+
+    @property
+    def total_layers(self) -> int:
+        return sum(p.repeat * len(p.block) for p in self.patterns)
+
+    def pdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float64) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- init
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fi = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fi, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic fresh-key dispenser (avoids threading key tuples)."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ------------------------------------------------------------ pytree utils
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

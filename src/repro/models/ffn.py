@@ -1,0 +1,193 @@
+"""Feed-forward blocks: dense SwiGLU and Mixture-of-Experts.
+
+MoE uses sort-based capacity dispatch — the TPU-native pattern (static
+shapes, no per-token gathers of weight matrices):
+
+1. router top-k → (token, expert) assignments;
+2. stable-sort assignments by expert, compute each one's slot within its
+   expert via counts/cumsum;
+3. scatter tokens into an (E, C, d) buffer (slots ≥ capacity drop — standard
+   token dropping, capacity_factor controls the drop rate);
+4. batched expert einsum (E,C,d)×(E,d,f) — shardable over the expert axis
+   (expert parallelism) or the hidden axis (tensor parallelism), chosen by
+   the sharding rules' divisibility fallback;
+5. gather back, weighted-combine over the k assignments.
+
+Aux losses (load-balance + router-z) are returned to the caller and summed
+into the training objective.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import KeyGen, ModelConfig, dense_init
+
+
+def swiglu(x, wg, wi, wo):
+    h = jax.nn.silu(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+# ------------------------------------------------------------------- dense
+def dense_ffn_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    return {
+        "wg": dense_init(kg(), (d, f), dt),
+        "wi": dense_init(kg(), (d, f), dt),
+        "wo": dense_init(kg(), (f, d), dt),
+    }
+
+
+def dense_ffn_spec(cfg: ModelConfig):
+    return {"wg": ("embed", "mlp"), "wi": ("embed", "mlp"),
+            "wo": ("mlp", "embed")}
+
+
+def dense_ffn_forward(p, cfg: ModelConfig, x):
+    cd = cfg.cdtype()
+    return swiglu(x, p["wg"].astype(cd), p["wi"].astype(cd),
+                  p["wo"].astype(cd))
+
+
+# --------------------------------------------------------------------- MoE
+def moe_init(key, cfg: ModelConfig):
+    kg = KeyGen(key)
+    d, e = cfg.d_model, cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    p = {
+        "router": dense_init(kg(), (d, e), jnp.float32),  # fp32 routing
+        "wg": dense_init(kg(), (e, d, f), dt, fan_in=d),
+        "wi": dense_init(kg(), (e, d, f), dt, fan_in=d),
+        "wo": dense_init(kg(), (e, f, d), dt, fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.shared_d_ff or f * cfg.n_shared_experts
+        p["shared"] = dense_ffn_init(kg(), cfg, d_ff=sf)
+    return p
+
+
+def moe_spec(cfg: ModelConfig):
+    s = {
+        "router": ("embed", None),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = dense_ffn_spec(cfg)
+    return s
+
+
+def moe_capacity(tokens_per_row: int, cfg: ModelConfig) -> int:
+    """Per-row expert capacity. Dispatch is per batch row (see
+    ``moe_forward``), so capacity scales with S, not B·S — the (B,E,C,d)
+    buffer keeps its sharded batch dim and no global sort/scatter exists.
+
+    Capped at S: top-k experts are DISTINCT per token, so one expert can
+    receive at most S tokens from a row. For decode (S=1) this makes the
+    capacity exactly 1 — the naive max(8,·) floor wasted 8× expert compute
+    and buffer traffic on every decode step of a many-expert model
+    (EXPERIMENTS.md §Perf, deepseek decode)."""
+    s = tokens_per_row
+    tk = s * cfg.n_experts_per_tok
+    c = math.ceil(tk / cfg.n_experts * cfg.capacity_factor)
+    return min(s, max(8, c))
+
+
+def _dispatch_row(cfg: ModelConfig, xs, topi, topw, cap: int):
+    """One batch row: xs (S,d), topi/topw (S,k) -> (buf (E,C,d),
+    e_sorted, pos, order, gate, tok_map (E,C), gate_map (E,C))."""
+    s, d = xs.shape
+    k = cfg.n_experts_per_tok
+    e = cfg.n_experts
+    sk = s * k
+    eids = topi.reshape(sk)
+    tok_ix = jnp.repeat(jnp.arange(s), k)
+    gate = topw.reshape(sk)
+    order = jnp.argsort(eids, stable=True)
+    e_sorted = eids[order]
+    counts = jnp.zeros((e,), jnp.int32).at[eids].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(sk, dtype=jnp.int32) - starts[e_sorted]
+    x_sorted = xs[tok_ix[order]]
+    buf = jnp.zeros((e, cap, d), xs.dtype).at[e_sorted, pos].set(x_sorted)
+    # inverse maps for the scatter combine: slot -> (token, gate); dropped
+    # slots keep token=s (scattered into a scratch row, discarded)
+    tok_map = jnp.full((e, cap), s, jnp.int32).at[e_sorted, pos].set(
+        tok_ix[order]
+    )
+    gate_map = jnp.zeros((e, cap), jnp.float32).at[e_sorted, pos].set(
+        gate[order]
+    )
+    return buf, e_sorted, pos, order, gate, tok_map, gate_map
+
+
+def _combine_row(y_e, e_sorted, pos, order, gate, s: int, k: int):
+    """Inverse of _dispatch_row: y_e (E,C,d) -> (S,d)."""
+    d = y_e.shape[-1]
+    y_sorted = y_e.at[e_sorted, pos].get(mode="fill", fill_value=0)
+    y_assign = jnp.zeros((s * k, d), y_e.dtype).at[order].set(y_sorted)
+    return (y_assign * gate[:, None].astype(y_e.dtype)).reshape(
+        s, k, d
+    ).sum(axis=1)
+
+
+def moe_forward(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (y, aux_losses dict). Per-row capacity dispatch."""
+    cd = cfg.cdtype()
+    b, s, d = x.shape
+    k = cfg.n_experts_per_tok
+    e = cfg.n_experts
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    topw, topi = jax.lax.top_k(probs, k)  # (B,S,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # ---- aux losses (fp32 router path, global statistics)
+    assign_frac = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    assign_frac = assign_frac / (b * s * k)
+    mean_prob = probs.reshape(-1, e).mean(axis=0)
+    aux = {
+        "load_balance": e * jnp.sum(assign_frac * mean_prob),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    cap = moe_capacity(s, cfg)
+    buf, e_sorted, pos, order, gate, tok_map, gate_map = jax.vmap(
+        lambda xs, ti, tw: _dispatch_row(cfg, xs, ti, tw, cap)
+    )(x.astype(cd), topi, topw)
+    if cfg.moe_constrain == "be":
+        buf = constrain(buf, "batch", "experts", None, None)
+    # ---- batched expert SwiGLU: (B,E,C,d) x (E,d,f)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"].astype(cd)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["wi"].astype(cd))
+    y_e = jnp.einsum("becf,efd->becd", h, p["wo"].astype(cd))
+    if cfg.moe_constrain == "be":
+        y_e = constrain(y_e, "batch", "experts", None, None)
+    if cfg.moe_combine == "scatter":
+        # expert-major combine: weight in expert space, scatter-add into
+        # token space. With E sharded, each shard contributes a partial
+        # (B,S,d) sum and XLA reduces partials with ONE all-reduce of
+        # B·S·d — instead of all-gathering the (B,E,C,d) expert outputs
+        # (≈ E·C/S·k ≈ capacity_factor·k × larger) for a per-token gather.
+        yw = y_e * gate_map[..., None].astype(cd)
+
+        def comb(ye_row, tmap_row):
+            return jnp.zeros((s + 1, d), ye_row.dtype).at[
+                tmap_row.reshape(-1)
+            ].add(ye_row.reshape(-1, d))[:s]
+
+        y = jax.vmap(comb)(yw, tok_map)
+    else:  # "gather": the naive inverse-permutation path
+        y = jax.vmap(
+            lambda ye, es, po, od, ga: _combine_row(ye, es, po, od, ga, s, k)
+        )(y_e, e_sorted, pos, order, gate)
+    if cfg.n_shared_experts:
+        y = y + dense_ffn_forward(p["shared"], cfg, x)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,259 @@
+"""Mamba2 (SSD — state-space duality) mixer, arXiv:2405.21060.
+
+TPU-adapted chunked algorithm: the sequence is split into chunks of
+``ssm_chunk``; each chunk does an attention-like intra-chunk matmul (MXU
+work, (Q,Q) score tile) plus a rank-N inter-chunk state handoff carried by a
+``lax.scan``. The per-chunk tile is the only O(Q²) live buffer — memory is
+O(L·Q) not O(L²) — which is what makes the 500K-token decode/train shapes
+feasible for the SSM/hybrid architectures.
+
+Decode keeps (conv window, SSM state) as the cache: state update is a rank-1
+outer-product accumulate per head — O(H·P·N) per token, independent of
+context length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, ModelConfig, dense_init, rmsnorm
+
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    dt = cfg.pdtype()
+    proj_out = 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + h
+    p = {
+        "in_proj": dense_init(kg(), (d, proj_out), dt),
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, conv_dim), dt,
+                             fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        # A in (-exp) parametrization; init in [1, 16] as in the paper
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(kg(), (d_inner, d), dt, fan_in=d_inner),
+    }
+    return p
+
+
+def mamba_spec(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": ("heads",),
+        "d_skip": ("heads",),
+        "dt_bias": ("heads",),
+        "norm": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_inner, h, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def mamba_cache_spec(cfg: ModelConfig):
+    return {
+        "conv": ("batch", None, "mlp"),
+        "ssm": ("batch", "heads", None, None),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_inner, h, _ = _dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over the sequence axis. xbc: (B,L,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for j in range(k):  # k is 4 — unrolled taps vectorize cleanly
+        out = out + pad[:, j : j + xbc.shape[1], :] * w[j]
+    return jax.nn.silu(out + b)
+
+
+def _expand_groups(t, h):
+    """(B,L,G,N) -> (B,L,H,N) by repeating each group's B/C to its heads."""
+    g = t.shape[2]
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def _ssd_chunked(cfg: ModelConfig, x, b_mat, c_mat, dt, a, init_state):
+    """Chunked SSD. x:(B,L,H,P) b/c:(B,L,H,N) dt:(B,L,H) a:(H,)<0.
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(cfg.ssm_chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    def chunk(t):  # (B, L', ...) -> (nc, B, q, ...)
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunk(x), chunk(b_mat), chunk(c_mat), chunk(dt))
+
+    def step(state, inp):
+        xc, bc, cc, dtc = inp  # (B,q,H,P/N/·)
+        da = dtc * a  # (B,q,H), negative
+        cs = jnp.cumsum(da, axis=1)
+        # NOTE: never clamp the cumulative log-decay — every exponent below
+        # is a *difference* of cs values (≤ 0 by construction), so exp() can
+        # only underflow to 0, which is exact; clamping cs itself corrupts
+        # relative decays within a chunk when |a|·dt is large.
+        seg = cs[:, :, None, :] - cs[:, None, :, :]  # (B,q,q,H) i-j
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        # mask BEFORE exp: upper-triangular seg is positive and would
+        # overflow inside the where's untaken branch, poisoning the
+        # backward pass with inf·0 = NaN
+        decay = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", cc, bc)  # (B,q,q,H)
+        m = scores * decay * dtc[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xc)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", cc, state) * jnp.exp(
+            cs
+        )[..., None]
+        tail = cs[:, -1:, :] - cs  # decay from j to chunk end, ≤ 0
+        sloc = jnp.einsum(
+            "bjhn,bjhp,bjh->bhpn", bc, xc, jnp.exp(tail) * dtc
+        )
+        state = state * jnp.exp(cs[:, -1, :])[:, :, None, None] + sloc
+        return state, y_intra + y_inter
+
+    if cfg.scan_unroll:  # dry-run analysis: expose every chunk to HLO
+        state = init_state
+        ys_l = []
+        for i in range(nc):
+            state, yi = step(state, tuple(t[i] for t in xs))
+            ys_l.append(yi)
+        ys = jnp.stack(ys_l)
+    else:
+        state, ys = jax.lax.scan(step, init_state, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * q, h, p)[:, :l]
+    return y, state
+
+
+def mamba_forward(p, cfg: ModelConfig, x, positions=None, cache=None,
+                  cur_len=None):
+    """Full-sequence path (train/prefill). Returns (out, new_cache)."""
+    cd = cfg.cdtype()
+    bsz, l, _ = x.shape
+    d_inner, h, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(cd)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    if cache is not None and cur_len is not None:
+        # splice the cached conv window ahead of this segment
+        win = cache["conv"].astype(cd)
+        xbc_ext = jnp.concatenate([win, xbc], axis=1)
+        conv_out = _causal_conv(xbc_ext, p["conv_w"].astype(cd),
+                                p["conv_b"].astype(cd))[:, win.shape[1]:]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"].astype(cd),
+                                p["conv_b"].astype(cd))
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xs = conv_out[..., :d_inner].reshape(bsz, l, h, cfg.ssm_head_dim)
+    b_mat = conv_out[..., d_inner : d_inner + gn].reshape(
+        bsz, l, cfg.ssm_groups, cfg.ssm_state
+    )
+    c_mat = conv_out[..., d_inner + gn :].reshape(
+        bsz, l, cfg.ssm_groups, cfg.ssm_state
+    )
+    b_mat = _expand_groups(b_mat, h)
+    c_mat = _expand_groups(c_mat, h)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"]
+    )  # (B,L,H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    state0 = (
+        cache["ssm"] if cache is not None
+        else jnp.zeros((bsz, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    )
+    y, state = _ssd_chunked(
+        cfg, xs.astype(jnp.float32), b_mat.astype(jnp.float32),
+        c_mat.astype(jnp.float32), dt, a, state0
+    )
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"].astype(cd))
+    out = y @ p["out_proj"].astype(cd)
+    if cache is not None:
+        k = cfg.ssm_conv - 1
+        win = jnp.concatenate([cache["conv"].astype(cd), xbc], axis=1)[:, -k:]
+        cache = {"conv": win.astype(cache["conv"].dtype), "ssm": state}
+    return out, cache
+
+
+def mamba_decode(p, cfg: ModelConfig, x, positions, cache, cur_len):
+    """Single-token recurrent step. x: (B,1,d)."""
+    cd = cfg.cdtype()
+    bsz = x.shape[0]
+    d_inner, h, conv_dim = _dims(cfg)
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(cd)  # (B, ·)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    # conv: window is the last (k-1) inputs
+    win = cache["conv"].astype(cd)  # (B, k-1, C)
+    full = jnp.concatenate([win, xbc[:, None, :]], axis=1)  # (B,k,C)
+    w = p["conv_w"].astype(cd)
+    conv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", full, w) + p["conv_b"].astype(cd)
+    )
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xt = conv[:, :d_inner].reshape(bsz, h, cfg.ssm_head_dim)
+    b_t = _expand_groups(
+        conv[:, d_inner : d_inner + gn].reshape(
+            bsz, 1, cfg.ssm_groups, cfg.ssm_state),
+        h,
+    )[:, 0]
+    c_t = _expand_groups(
+        conv[:, d_inner + gn :].reshape(bsz, 1, cfg.ssm_groups, cfg.ssm_state),
+        h,
+    )[:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)  # (B,H); ≤ 1, underflow-safe
+    state = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xt.astype(jnp.float32), b_t.astype(jnp.float32),
+        dt,
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", c_t.astype(jnp.float32), state)
+    y = y + xt.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_inner).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"].astype(cd))
+    out = (y @ p["out_proj"].astype(cd))[:, None, :]
+    new_cache = {
+        "conv": full[:, 1:].astype(cache["conv"].dtype),
+        "ssm": state,
+    }
+    return out, new_cache

@@ -1,0 +1,371 @@
+"""LM assembly: embeddings → scanned layer segments → norm → logits.
+
+An architecture is a sequence of ``LayerPattern`` segments; each segment is
+``repeat`` copies of a *block* of sub-layers ((mixer, ffn) pairs) whose
+parameters are stacked on a leading layer axis and driven by ``lax.scan`` —
+one HLO body per segment regardless of depth (61–80-layer configs compile in
+seconds instead of minutes, and remat applies per-block).
+
+Three modes share the block code:
+* ``train``   — full sequence, no cache;
+* ``prefill`` — full sequence, writes a fixed-capacity cache;
+* ``decode``  — S=1 against the cache (MLA uses the absorbed path, Mamba the
+  recurrent path).
+
+Caches are pytrees mirroring the segment structure with a leading repeat
+axis, so the same ``lax.scan`` threads them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import mamba2 as M
+from repro.models.common import (
+    KeyGen,
+    ModelConfig,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+MIXERS = {"gqa", "mla", "mamba"}
+FFNS = {"dense", "moe"}
+
+
+# ------------------------------------------------------------------- init
+def _sublayer_init(key, cfg: ModelConfig, mixer: str | None, ffn: str | None):
+    kg = KeyGen(key)
+    p: dict[str, Any] = {}
+    if mixer == "gqa":
+        p["mixer_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+        p["mixer"] = A.gqa_init(kg(), cfg)
+    elif mixer == "mla":
+        p["mixer_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+        p["mixer"] = A.mla_init(kg(), cfg)
+    elif mixer == "mamba":
+        p["mixer_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+        p["mixer"] = M.mamba_init(kg(), cfg)
+    if ffn == "dense":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+        p["ffn"] = F.dense_ffn_init(kg(), cfg)
+    elif ffn == "moe":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+        p["ffn"] = F.moe_init(kg(), cfg)
+    return p
+
+
+def _sublayer_spec(cfg: ModelConfig, mixer: str | None, ffn: str | None):
+    s: dict[str, Any] = {}
+    if mixer in ("gqa", "mla", "mamba"):
+        s["mixer_norm"] = (None,)
+        s["mixer"] = {
+            "gqa": A.gqa_spec, "mla": A.mla_spec, "mamba": M.mamba_spec
+        }[mixer](cfg)
+    if ffn == "dense":
+        s["ffn_norm"] = (None,)
+        s["ffn"] = F.dense_ffn_spec(cfg)
+    elif ffn == "moe":
+        s["ffn_norm"] = (None,)
+        s["ffn"] = F.moe_spec(cfg)
+    return s
+
+
+def _block_init(key, cfg: ModelConfig, block):
+    kg = KeyGen(key)
+    return {
+        f"sub{j}": _sublayer_init(kg(), cfg, mixer, ffn)
+        for j, (mixer, ffn) in enumerate(block)
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg = KeyGen(key)
+    params: dict[str, Any] = {}
+    if not cfg.embed_inputs:
+        params["embed"] = embed_init(kg(), (cfg.vocab, cfg.d_model),
+                                     cfg.pdtype())
+    segs = []
+    for pat in cfg.patterns:
+        keys = jax.random.split(kg(), pat.repeat)
+        segs.append(jax.vmap(
+            functools.partial(_block_init, cfg=cfg, block=pat.block)
+        )(keys))
+    params["segments"] = segs
+    params["final_norm"] = rmsnorm_init(cfg.d_model, cfg.pdtype())
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(kg(), (cfg.d_model, cfg.vocab),
+                                       cfg.pdtype())
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs: dict[str, Any] = {}
+    if not cfg.embed_inputs:
+        specs["embed"] = ("vocab", "embed")
+    segs = []
+    for pat in cfg.patterns:
+        blk = {
+            f"sub{j}": _sublayer_spec(cfg, mixer, ffn)
+            for j, (mixer, ffn) in enumerate(pat.block)
+        }
+        # leading stacked-layer axis
+        segs.append(jax.tree_util.tree_map(
+            lambda t: ("layers",) + t,
+            blk,
+            is_leaf=lambda t: isinstance(t, tuple),
+        ))
+    specs["segments"] = segs
+    specs["final_norm"] = (None,)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("embed", "vocab")
+    return specs
+
+
+# ------------------------------------------------------------------ cache
+def init_cache(cfg: ModelConfig, batch: int, dtype=None) -> list:
+    dtype = dtype or cfg.cdtype()
+    segs = []
+    for pat in cfg.patterns:
+        blk = {}
+        for j, (mixer, _ffn) in enumerate(pat.block):
+            if mixer == "gqa":
+                c = A.gqa_cache_init(cfg, batch, dtype)
+            elif mixer == "mla":
+                c = A.mla_cache_init(cfg, batch, dtype)
+            elif mixer == "mamba":
+                c = M.mamba_cache_init(cfg, batch, dtype)
+            else:
+                continue
+            blk[f"sub{j}"] = c
+        segs.append(jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (pat.repeat,) + x.shape),
+            blk,
+        ))
+    return segs
+
+
+def cache_specs(cfg: ModelConfig) -> list:
+    segs = []
+    for pat in cfg.patterns:
+        blk = {}
+        for j, (mixer, _ffn) in enumerate(pat.block):
+            if mixer == "gqa":
+                s = A.gqa_cache_spec(cfg)
+            elif mixer == "mla":
+                s = A.mla_cache_spec(cfg)
+            elif mixer == "mamba":
+                s = M.mamba_cache_spec(cfg)
+            else:
+                continue
+            blk[f"sub{j}"] = s
+        segs.append(jax.tree_util.tree_map(
+            lambda t: ("layers",) + t,
+            blk,
+            is_leaf=lambda t: isinstance(t, tuple),
+        ))
+    return segs
+
+
+# ---------------------------------------------------------------- forward
+def _mixer_apply(mixer: str, mode: str):
+    if mixer == "gqa":
+        return A.gqa_forward  # full attend handles decode via cache
+    if mixer == "mla":
+        return A.mla_forward if mode != "decode" else A.mla_decode
+    if mixer == "mamba":
+        return M.mamba_forward if mode != "decode" else M.mamba_decode
+    raise ValueError(mixer)
+
+
+def _block_apply(cfg: ModelConfig, block, mode: str):
+    """Returns body(x, positions, cur_len, blk_params, blk_cache) ->
+    (x, aux_lb, aux_rz, new_cache)."""
+
+    def body(x, positions, cur_len, blk_params, blk_cache):
+        lb = jnp.zeros((), jnp.float32)
+        rz = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        for j, (mixer, ffn) in enumerate(block):
+            p = blk_params[f"sub{j}"]
+            if mixer in MIXERS:
+                h = rmsnorm(x, p["mixer_norm"].astype(x.dtype))
+                c = blk_cache.get(f"sub{j}") if blk_cache else None
+                fn = _mixer_apply(mixer, mode)
+                y, c2 = fn(p["mixer"], cfg, h, positions, c, cur_len)
+                x = x + y
+                if c is not None:
+                    new_cache[f"sub{j}"] = c2
+            if ffn in FFNS:
+                h = rmsnorm(x, p["ffn_norm"].astype(x.dtype))
+                if ffn == "dense":
+                    y = F.dense_ffn_forward(p["ffn"], cfg, h)
+                else:
+                    y, aux = F.moe_forward(p["ffn"], cfg, h)
+                    lb = lb + aux["load_balance"]
+                    rz = rz + aux["router_z"]
+                x = x + y
+            x = constrain(x, "batch", None, None)
+        return x, lb, rz, new_cache
+
+    return body
+
+
+def forward(
+    params: dict, cfg: ModelConfig, batch: dict, mode: str = "train",
+    cache: list | None = None, cur_len=None,
+):
+    """Returns (logits (B,S,V) fp32, aux dict, new_cache)."""
+    cd = cfg.cdtype()
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(cd)
+    else:
+        x = params["embed"].astype(cd)[batch["tokens"]]
+    if cfg.extra_embed_len and mode != "decode":
+        x = jnp.concatenate([batch["patches"].astype(cd), x], axis=1)
+    b, s, _ = x.shape
+    x = constrain(x, "batch", None, None)
+    if mode == "decode":
+        positions = jnp.broadcast_to(
+            jnp.asarray(cur_len, jnp.int32)[None, None], (b, 1)
+        )
+    else:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :], (b, s)
+        )
+        if cur_len is None and mode == "prefill":
+            cur_len = 0
+    lb = jnp.zeros((), jnp.float32)
+    rz = jnp.zeros((), jnp.float32)
+    new_cache: list | None = [] if cache is not None else None
+    for si, pat in enumerate(cfg.patterns):
+        body = _block_apply(cfg, pat.block, mode)
+        seg_p = params["segments"][si]
+        seg_c = cache[si] if cache is not None else None
+
+        if cfg.scan_unroll:
+            blk_fn = body
+            if cfg.remat != "none":
+                blk_fn = jax.checkpoint(body, policy=_remat_policy(cfg.remat))
+            ncs = []
+            for i in range(pat.repeat):
+                bp = jax.tree_util.tree_map(lambda a: a[i], seg_p)
+                bc = (
+                    jax.tree_util.tree_map(lambda a: a[i], seg_c)
+                    if seg_c is not None else None
+                )
+                x, l2, r2, nc = blk_fn(x, positions, cur_len, bp, bc)
+                lb, rz = lb + l2, rz + r2
+                ncs.append(nc)
+            if seg_c is not None:
+                new_cache.append(
+                    jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+                )
+            continue
+
+        if seg_c is not None:
+            def step(carry, xs):
+                xx, l1, r1 = carry
+                bp, bc = xs
+                xx, l2, r2, nc = body(xx, positions, cur_len, bp, bc)
+                return (xx, l1 + l2, r1 + r2), nc
+
+            if cfg.remat != "none":
+                step = jax.checkpoint(
+                    step, policy=_remat_policy(cfg.remat)
+                )
+            (x, lb, rz), nc = jax.lax.scan(step, (x, lb, rz), (seg_p, seg_c))
+            new_cache.append(nc)
+        else:
+            def step(carry, bp):
+                xx, l1, r1 = carry
+                xx, l2, r2, _ = body(xx, positions, cur_len, bp, None)
+                return (xx, l1 + l2, r1 + r2), None
+
+            if cfg.remat != "none":
+                step = jax.checkpoint(
+                    step, policy=_remat_policy(cfg.remat)
+                )
+            (x, lb, rz), _ = jax.lax.scan(step, (x, lb, rz), seg_p)
+    x = rmsnorm(x, params["final_norm"].astype(cd))
+    if cfg.tie_embeddings:
+        unembed = params["embed"].T
+    else:
+        unembed = params["unembed"]
+    logits = (x @ unembed.astype(cd)).astype(jnp.float32)
+    # vocab-shard the logits: (B,S,V) fp32 replicated over model would be
+    # the largest activation in every train cell (e.g. 34 GiB/device for
+    # deepseek train_4k); the CE loss reduces over the sharded V cleanly
+    logits = constrain(logits, "batch", None, "vocab")
+    aux = {"load_balance": lb, "router_z": rz}
+    return logits, aux, new_cache
+
+
+def _remat_policy(kind: str):
+    if kind == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if kind == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- loss
+def lm_loss(cfg: ModelConfig, logits, tokens):
+    """Next-token CE. ``tokens``: the text token ids (B,S). Handles the
+    vlm case where ``extra_embed_len`` patch positions are prepended."""
+    p = cfg.extra_embed_len
+    if p:
+        preds = logits[:, p - 1 : p - 1 + tokens.shape[1]]
+        targets = tokens
+    else:
+        preds = logits[:, :-1]
+        targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(preds, axis=-1)
+    ll = jnp.take_along_axis(preds, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def train_loss(params, cfg: ModelConfig, batch):
+    logits, aux, _ = forward(params, cfg, batch, mode="train")
+    tokens = batch.get("labels", batch.get("tokens"))
+    loss = lm_loss(cfg, logits, tokens)
+    total = (
+        loss
+        + cfg.router_aux_coef * aux["load_balance"]
+        + cfg.router_z_coef * aux["router_z"]
+    )
+    metrics = {"ce": loss, **aux}
+    return total, metrics
+
+
+# ------------------------------------------------------------ param count
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameters, computed analytically from the config."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k of routed experts)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    moe_layers = sum(
+        pat.repeat * sum(1 for (_m, fn) in pat.block if fn == "moe")
+        for pat in cfg.patterns
+    )
+    inactive = (
+        moe_layers * (cfg.n_experts - cfg.n_experts_per_tok) * per_expert
+    )
+    return total - inactive

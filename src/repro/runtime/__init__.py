@@ -1,0 +1,2 @@
+from repro.runtime.failure import HeartbeatMonitor, StragglerDetector  # noqa: F401
+from repro.runtime.elastic import plan_mesh, reshard_state  # noqa: F401

@@ -1,0 +1,61 @@
+"""Elastic re-meshing: resume a job on a different device count.
+
+The restart path after host loss (or a straggler drop):
+
+  1. the latest Vault checkpoint is QUERYed (survives the lost hosts by
+     construction — that is the paper's guarantee);
+  2. ``plan_mesh`` picks a (data, model) factorization of the surviving
+     device count;
+  3. ``reshard_state`` re-places the host-resident state onto the new mesh
+     using the same logical rules — the divisibility fallback makes every
+     intermediate mesh compilable (DESIGN.md §6);
+  4. the data pipeline resumes from the checkpointed step cursor
+     (bit-identical batches — ``data.pipeline`` is a pure function of step).
+
+Global batch is preserved (gradient accumulation increases per-device work
+on smaller meshes), so training curves are comparable across re-meshes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def plan_mesh(n_devices: int, prefer_model: int = 0) -> tuple[int, int]:
+    """Largest (data, model) grid with model | prefer_model if given.
+
+    model axis defaults to the largest power-of-two divisor ≤ √n that also
+    divides ``prefer_model`` (typically the head count) when provided.
+    """
+    best = (n_devices, 1)
+    m = 1
+    while True:
+        nxt = m * 2
+        if n_devices % nxt != 0:
+            break
+        if prefer_model and prefer_model % nxt != 0:
+            break
+        if nxt > n_devices:
+            break
+        m = nxt
+        if m * m >= n_devices:
+            break
+    return (n_devices // m, m)
+
+
+def state_shardings(spec_tree, shapes, mesh: Mesh, rules=None):
+    resolved = shd.tree_specs(spec_tree, shapes, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), resolved,
+        is_leaf=lambda t: isinstance(t, P),
+    )
+
+
+def reshard_state(state_host, shardings):
+    """Place host (numpy) state onto devices per ``shardings``."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state_host, shardings
+    )

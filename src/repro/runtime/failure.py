@@ -1,0 +1,84 @@
+"""Failure detection + straggler mitigation (pure logic; the launcher wires
+it to real heartbeats in a deployment, tests drive it synthetically).
+
+* ``HeartbeatMonitor`` — per-host last-seen tracking with a timeout; the
+  same primitive VAULT's chunk groups use for persistence claims, reused at
+  the job-control layer for host liveness.
+* ``StragglerDetector`` — per-host EWMA of step durations. A host whose
+  EWMA exceeds ``threshold ×`` the fleet median is flagged; policy:
+  "warn" → log only; "drop" → recommend elastic restart without the host
+  (synchronous data-parallel steps are gated by the slowest host, so one
+  2× straggler halves fleet goodput — dropping 1/256 hosts costs 0.4%
+  throughput and returns ~50%).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float):
+        self.timeout_s = timeout_s
+        self._last: dict[str, float] = {}
+
+    def beat(self, host: str, now: float) -> None:
+        self._last[host] = now
+
+    def alive(self, now: float) -> list[str]:
+        return [h for h, t in self._last.items()
+                if now - t <= self.timeout_s]
+
+    def dead(self, now: float) -> list[str]:
+        return [h for h, t in self._last.items() if now - t > self.timeout_s]
+
+
+@dataclasses.dataclass
+class StragglerDecision:
+    host: str
+    ewma_s: float
+    median_ewma_s: float
+    action: str  # "ok" | "warn" | "drop"
+
+
+class StragglerDetector:
+    def __init__(self, alpha: float = 0.2, warn_factor: float = 1.5,
+                 drop_factor: float = 2.5, min_samples: int = 5):
+        self.alpha = alpha
+        self.warn_factor = warn_factor
+        self.drop_factor = drop_factor
+        self.min_samples = min_samples
+        self._ewma: dict[str, float] = {}
+        self._count: dict[str, int] = {}
+
+    def record(self, host: str, step_s: float) -> None:
+        prev = self._ewma.get(host)
+        self._ewma[host] = (
+            step_s if prev is None
+            else self.alpha * step_s + (1 - self.alpha) * prev
+        )
+        self._count[host] = self._count.get(host, 0) + 1
+
+    def median(self) -> float:
+        vals = sorted(self._ewma.values())
+        if not vals:
+            return 0.0
+        n = len(vals)
+        return vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
+
+    def decisions(self) -> list[StragglerDecision]:
+        med = self.median()
+        out = []
+        for host, e in self._ewma.items():
+            if self._count[host] < self.min_samples or med == 0.0:
+                action = "ok"
+            elif e > self.drop_factor * med:
+                action = "drop"
+            elif e > self.warn_factor * med:
+                action = "warn"
+            else:
+                action = "ok"
+            out.append(StragglerDecision(host, e, med, action))
+        return out
+
+    def to_drop(self) -> list[str]:
+        return [d.host for d in self.decisions() if d.action == "drop"]

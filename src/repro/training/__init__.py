@@ -1,0 +1,7 @@
+from repro.training.steps import (  # noqa: F401
+    TrainState,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,98 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with explicit shardings (the dry-run path) or plain
+jit on one device (smoke tests). Optional gradient accumulation scans
+microbatches with a summed-grad carry — the standard memory lever when the
+per-device batch does not fit.
+
+Serve steps follow vLLM-ish structure: ``prefill`` consumes the prompt and
+returns (last-token logits, populated cache); ``decode`` advances one token.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, forward, init_cache, init_params, train_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+TrainState = dict  # {"params": ..., "opt": {"mu","nu","step"}}
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            train_loss, has_aux=True
+        )(params, cfg, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: dict[str, Any]):
+        params = state["params"]
+        if accum <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, grads)
+                return (acc_g, acc_l + loss), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), metrics = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics)
+        new_params, new_opt, om = adamw_update(
+            params, grads, state["opt"], opt_cfg
+        )
+        metrics = {"loss": loss, **metrics, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        cache = init_cache(cfg, _batch_size(cfg, batch))
+        logits, _aux, cache = forward(
+            params, cfg, batch, mode="prefill", cache=cache, cur_len=0
+        )
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, cache, batch, cur_len):
+        logits, _aux, cache = forward(
+            params, cfg, batch, mode="decode", cache=cache, cur_len=cur_len
+        )
+        return logits, cache
+
+    return decode
+
+
+def _batch_size(cfg: ModelConfig, batch) -> int:
+    key = "embeds" if cfg.embed_inputs else "tokens"
+    return batch[key].shape[0]

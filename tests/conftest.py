@@ -1,0 +1,35 @@
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_py(code: str, devices: int = 1, timeout: int = 300) -> str:
+    """Run a python snippet in a subprocess with N host devices.
+
+    Used by tests that need >1 device: the main pytest process must keep
+    the default single-device jax (smoke tests measure that world), so
+    multi-device checks fork with XLA_FLAGS set pre-init.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+        )
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_py

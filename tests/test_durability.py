@@ -1,0 +1,110 @@
+"""Durability theory (App. A): CTMC, Hoeffding, targeted-attack bound."""
+import math
+
+import numpy as np
+
+from repro.core import durability as D
+
+
+def test_initial_state_vector_normalized():
+    I = D.initial_state_vector(100_000, 33_333, 80, 32)
+    assert abs(I.sum() - 1.0) < 1e-9
+    assert np.all(I >= 0)
+    # absorbing mass at t=0 is tiny at paper parameters
+    assert I[-1] < 1e-5
+
+
+def test_hoeffding_bounds_exact_tail():
+    """Eq. 4 upper-bounds the exact hypergeometric tail (eq. 3)."""
+    N, n, k = 100_000, 80, 32
+    F = N // 3
+    I = D.initial_state_vector(N, F, n, k)
+    exact_tail = I[-1]
+    bound = D.hoeffding_initial_bound(n, k)
+    assert exact_tail <= bound
+    assert bound < 1e-3
+
+
+def test_transition_matrix_stochastic():
+    theta = D.transition_matrix(10_000, 3_333, 40, 16, churn_mu=0.4,
+                                evict=0)
+    rows = theta.sum(axis=1)
+    assert np.allclose(rows, 1.0, atol=1e-9)
+    assert np.all(theta >= -1e-15)
+    # absorbing state is absorbing
+    assert theta[-1, -1] == 1.0
+    assert np.all(theta[-1, :-1] == 0.0)
+
+
+def test_absorption_monotone_and_converges():
+    N, F, n, k = 10_000, 3_333, 40, 16
+    I = D.initial_state_vector(N, F, n, k)
+    theta = D.transition_matrix(N, F, n, k, churn_mu=0.6)
+    traj = D.absorb_probability(I, theta, 1200)
+    assert np.all(np.diff(traj) >= -1e-12)  # cumulative
+    assert traj[-1] <= 1.0 + 1e-9  # fp64 accumulation
+    # As T->inf the probability converges to 1 (paper §4.4.1): without
+    # eviction, Byzantine members ratchet upward until absorption
+    assert traj[-1] > 0.99
+    assert traj[20] < traj[-1]  # early probability is strictly smaller
+
+
+def test_eviction_slows_absorption():
+    """The eviction parameter Υ flushes accumulated Byzantine members —
+    absorption probability at fixed t must drop."""
+    N, F, n, k = 10_000, 3_333, 40, 16
+    I = D.initial_state_vector(N, F, n, k)
+    t0 = D.transition_matrix(N, F, n, k, churn_mu=0.5, evict=0)
+    t2 = D.transition_matrix(N, F, n, k, churn_mu=0.5, evict=2)
+    a0 = D.absorb_probability(I, t0, 600)[-1]
+    a2 = D.absorb_probability(I, t2, 600)[-1]
+    assert a2 < a0
+
+
+def test_object_loss_bound():
+    p = 1e-6
+    b = D.object_loss_bound(p, 10)
+    assert abs(b - (1 - (1 - p) ** 10)) < 1e-12
+    assert D.object_loss_bound(1.0, 10) == 1.0
+
+
+def test_group_durability_horizon_positive():
+    t = D.group_durability_horizon(
+        100_000, 33_333, 80, 32, churn_mu=0.05, eps_log2=-20.0,
+        max_steps=50,
+    )
+    assert t >= 1
+
+
+def test_targeted_attack_bound_monotonicity():
+    K, R, omega = 8, 6, 1_000
+    # more compromised groups -> higher success probability
+    probs = [D.targeted_attack_bound(K, R, omega, phi) for phi in
+             (10, 50, 200, 1000)]
+    assert all(b >= a - 1e-18 for a, b in zip(probs, probs[1:]))
+    # more objects (same attack budget) -> lower probability
+    p_small = D.targeted_attack_bound(K, R, 100, 50)
+    p_large = D.targeted_attack_bound(K, R, 10_000, 50)
+    assert p_large < p_small
+    # below R+1 kills nothing can be assembled
+    assert D.targeted_attack_bound(K, R, omega, phi_groups=R // 2) == 0.0
+    # multiple fragments per node amplify the attacker (eq. 17)
+    assert (D.targeted_attack_bound(K, R, omega, 50, g=4)
+            >= D.targeted_attack_bound(K, R, omega, 50, g=1))
+
+
+def test_targeted_attack_bound_in_unit_interval():
+    for phi in (7, 100, 10_000):
+        p = D.targeted_attack_bound(8, 6, 500, phi, g=2)
+        assert 0.0 <= p <= 1.0
+        assert math.isfinite(p)
+
+
+def test_attacker_groups():
+    # avg kill cost = n/3 - k + 1 honest removals (A.3)
+    per_group = 80 // 3 - 32 + 1  # = -5 -> clamped to >= 1? n/3 < k here
+    assert D.attacker_groups(phi_nodes=220, n=80, k=32) == 220 // max(
+        1, per_group
+    )
+    # a configuration where n/3 > k
+    assert D.attacker_groups(phi_nodes=100, n=120, k=30) == 100 // (40 - 30 + 1)

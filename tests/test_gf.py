@@ -1,0 +1,72 @@
+"""GF(256)/GF(2) arithmetic: field axioms (property-based) + path equality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf
+
+bytes_arr = st.lists(st.integers(0, 255), min_size=1, max_size=64).map(
+    lambda xs: np.array(xs, dtype=np.uint8)
+)
+
+
+@given(bytes_arr, bytes_arr)
+@settings(max_examples=50, deadline=None)
+def test_mul_commutative(a, b):
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    assert np.array_equal(gf.gf_mul_np(a, b), gf.gf_mul_np(b, a))
+
+
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+@settings(max_examples=100, deadline=None)
+def test_mul_associative_distributive(a, b, c):
+    a, b, c = (np.uint8(x) for x in (a, b, c))
+    assert gf.gf_mul_np(gf.gf_mul_np(a, b), c) == gf.gf_mul_np(
+        a, gf.gf_mul_np(b, c)
+    )
+    left = gf.gf_mul_np(a, b ^ c)
+    right = gf.gf_mul_np(a, b) ^ gf.gf_mul_np(a, c)
+    assert left == right
+
+
+def test_inverse():
+    a = np.arange(1, 256, dtype=np.uint8)
+    inv = gf.gf_inv_np(a)
+    assert np.all(gf.gf_mul_np(a, inv) == 1)
+    with pytest.raises(ZeroDivisionError):
+        gf.gf_inv_np(np.uint8(0))
+
+
+@given(bytes_arr, bytes_arr)
+@settings(max_examples=30, deadline=None)
+def test_bitsliced_matches_tables(a, b):
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    bs = np.asarray(gf.gf_mul_bitsliced(a, b)).astype(np.uint8)
+    tb = gf.gf_mul_np(a, b)
+    assert np.array_equal(bs, tb)
+    jt = np.asarray(gf.gf_mul_jnp_tables(a, b)).astype(np.uint8)
+    assert np.array_equal(jt, tb)
+
+
+def test_matmul_identity_and_linearity():
+    rng = np.random.default_rng(0)
+    m = rng.integers(0, 256, (8, 8), dtype=np.uint8)
+    eye = np.eye(8, dtype=np.uint8)
+    assert np.array_equal(gf.gf_matmul_np(eye, m), m)
+    x = rng.integers(0, 256, (8, 32), dtype=np.uint8)
+    y = rng.integers(0, 256, (8, 32), dtype=np.uint8)
+    assert np.array_equal(
+        gf.gf_matmul_np(m, x ^ y),
+        gf.gf_matmul_np(m, x) ^ gf.gf_matmul_np(m, y),
+    )
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    for length in (1, 3, 4, 17, 128):
+        data = rng.integers(0, 256, (5, length), dtype=np.uint8)
+        words = gf.pack_bits_to_words(data)
+        back = gf.unpack_words_to_bytes(words, length)
+        assert np.array_equal(back, data)

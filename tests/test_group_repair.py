@@ -1,0 +1,128 @@
+"""Chunk groups (§4.3.3) and decentralized repair (§4.3.4)."""
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import group as G
+from repro.core import repair as R
+from repro.core.network import SimNetwork
+from repro.core.vault import VaultClient
+
+PARAMS = C.CodeParams(k_outer=4, n_chunks=5, k_inner=8, r_inner=16)
+
+
+def setup_store(n=120, byz=0, seed=0, cache_ttl=0.0):
+    net = SimNetwork(seed=seed)
+    for i in range(n):
+        net.add_node(byzantine=i < byz, seed=i.to_bytes(4, "little"))
+    client = VaultClient(net, net.alive_nodes()[0])
+    data = np.random.default_rng(seed).integers(
+        0, 256, 4000, np.uint8).tobytes()
+    oid, _ = client.store(data, PARAMS, cache_ttl=cache_ttl)
+    return net, client, oid, data
+
+
+def group_sizes(net, chash):
+    holders = [
+        n for n in net.alive_nodes()
+        if any(ch == chash for (ch, _i) in n.fragments)
+    ]
+    return len(holders)
+
+
+def test_persistence_claims_accepted_and_forged_rejected():
+    net, client, oid, _ = setup_store()
+    chash = oid.chunk_hashes[0]
+    holder = next(
+        n for n in net.alive_nodes()
+        if any(ch == chash for (ch, _i) in n.fragments)
+    )
+    accepted = G.broadcast_claims(net, holder)
+    assert accepted > 0
+    # forge: replay holder's proof from a non-selected node
+    claims = G.make_claims(holder)
+    outsider = next(
+        n for n in net.alive_nodes() if chash not in n.groups
+    )
+    fake = G.PersistenceClaim(
+        chash=claims[0].chash, index=claims[0].index,
+        proof=claims[0].proof, sender_nid=outsider.nid,
+    )
+    # receiver verifies the proof's pk — it admits the PROOF owner, not the
+    # forwarding node; verification of a tampered proof object fails
+    import dataclasses
+    bad_proof = dataclasses.replace(claims[0].proof, r=claims[0].proof.r ^ 1)
+    bad = dataclasses.replace(fake, proof=bad_proof)
+    view_holder = next(
+        n for n in net.alive_nodes()
+        if chash in n.groups and n.nid != holder.nid
+    )
+    assert not G.receive_claim(net, view_holder, bad)
+
+
+def test_repair_restores_group_size():
+    net, client, oid, data = setup_store(seed=2)
+    chash = oid.chunk_hashes[0]
+    before = group_sizes(net, chash)
+    assert before >= PARAMS.k_inner
+    # fail a third of the holders
+    holders = [
+        n for n in net.alive_nodes()
+        if any(ch == chash for (ch, _i) in n.fragments)
+    ]
+    for h in holders[: len(holders) // 3]:
+        net.fail_node(h.nid)
+    dropped = group_sizes(net, chash)
+    assert dropped < before
+    # any surviving member repairs from its local view
+    survivor = next(
+        n for n in net.alive_nodes() if chash in n.groups
+    )
+    stats = R.repair_group(net, survivor, chash)
+    assert stats.repaired > 0
+    after = group_sizes(net, chash)
+    assert after >= min(before, PARAMS.r_inner) - 1
+    got, _ = client.query(oid)
+    assert got == data
+
+
+def test_chunk_cache_reduces_repair_traffic():
+    net1, _, oid1, _ = setup_store(seed=3, cache_ttl=0.0)
+    net2, _, oid2, _ = setup_store(seed=3, cache_ttl=1e9)
+    for net, oid in ((net1, oid1), (net2, oid2)):
+        chash = oid.chunk_hashes[0]
+        holders = [
+            n for n in net.alive_nodes()
+            if any(ch == chash for (ch, _i) in n.fragments)
+        ]
+        for h in holders[:4]:
+            net.fail_node(h.nid)
+        survivor = next(n for n in net.alive_nodes() if chash in n.groups)
+        R.repair_group(net, survivor, chash, cache_ttl=3600.0)
+    # warm caches turn K_inner-fragment pulls into single-fragment sends;
+    # net1's first repair still pays one full pull (then caches), so the
+    # observed gap is < K_inner but must be substantial
+    assert net2.repair_traffic_bytes < net1.repair_traffic_bytes / 2
+
+
+def test_evict_oldest_and_over_repair_safety():
+    net, client, oid, data = setup_store(seed=4)
+    chash = oid.chunk_hashes[1]
+    evicted = R.evict_oldest(net, chash)
+    assert evicted is not None
+    # two members repair concurrently from stale views: over-repair is safe
+    members = [n for n in net.alive_nodes() if chash in n.groups][:2]
+    for m in members:
+        R.repair_group(net, m, chash)
+    got, _ = client.query(oid)
+    assert got == data
+
+
+def test_membership_timer_converges():
+    net, client, oid, _ = setup_store(seed=5)
+    chash = oid.chunk_hashes[0]
+    holders = [n for n in net.alive_nodes() if chash in n.groups]
+    # wipe one member's view; timer should rediscover peers via Locate()
+    victim = holders[0]
+    victim.groups[chash].members = {victim.nid: net.now}
+    G.membership_timer(net, victim, chash)
+    assert len(victim.groups[chash].members) > 1

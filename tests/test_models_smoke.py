@@ -1,0 +1,129 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions; prefill/decode consistency per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (
+    forward,
+    init_cache,
+    init_params,
+    train_loss,
+)
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)).astype(np.float32) * 0.02
+        )
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s)), jnp.int32
+        )
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s)), jnp.int32
+        )
+    if cfg.extra_embed_len:
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal(
+                (b, cfg.extra_embed_len, cfg.d_model)
+            ).astype(np.float32) * 0.02
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = configs.smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = make_batch(cfg, b, s)
+    logits, aux, _ = forward(params, cfg, batch, mode="train")
+    total_s = s + cfg.extra_embed_len
+    assert logits.shape == (b, total_s, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.n_experts:
+        assert float(aux["load_balance"]) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_train_step_improves_nothing_breaks(arch):
+    cfg = configs.smoke_config(arch)
+    state = init_train_state(cfg, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                    total_steps=4)))
+    batch = make_batch(cfg, 2, 16, seed=2)
+    losses = []
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss)
+        losses.append(loss)
+    # same batch re-fed: loss must drop (learns) and state stays finite
+    assert losses[-1] < losses[0]
+    assert int(state["opt"]["step"]) == 3
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_prefill_decode_matches_full_forward(arch):
+    cfg = configs.smoke_config(arch)
+    if cfg.n_experts:  # avoid MoE token-drop divergence in the check
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    b, s = 2, 12
+    batch = make_batch(cfg, b, s + 1, seed=4)
+
+    def trim(d, n):
+        out = dict(d)
+        for k in ("tokens", "embeds", "labels"):
+            if k in out:
+                out[k] = out[k][:, :n]
+        return out
+
+    full_logits, _, _ = forward(params, cfg, batch, mode="train")
+    cache = init_cache(cfg, b)
+    _, _, cache = forward(params, cfg, trim(batch, s), mode="prefill",
+                          cache=cache, cur_len=0)
+    step_batch = {}
+    if cfg.embed_inputs:
+        step_batch["embeds"] = batch["embeds"][:, s : s + 1]
+    else:
+        step_batch["tokens"] = batch["tokens"][:, s : s + 1]
+    dec_logits, _, _ = forward(
+        params, cfg, step_batch, mode="decode", cache=cache,
+        cur_len=s + cfg.extra_embed_len,
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=6e-3, atol=6e-3,
+    )
+
+
+def test_gradient_accumulation_matches_large_batch():
+    cfg = configs.smoke_config("internlm2-20b")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    batch = make_batch(cfg, 4, 16, seed=5)
+    s0 = init_train_state(cfg, jax.random.PRNGKey(6))
+    s1 = jax.tree_util.tree_map(jnp.copy, s0)
+    stepA = jax.jit(make_train_step(cfg, opt, accum=1))
+    stepB = jax.jit(make_train_step(cfg, opt, accum=2))
+    outA, mA = stepA(s0, batch)
+    outB, mB = stepB(s1, batch)
+    np.testing.assert_allclose(
+        float(mA["loss"]), float(mB["loss"]), rtol=2e-5
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(outA["params"]),
+        jax.tree_util.tree_leaves(outB["params"]),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5)

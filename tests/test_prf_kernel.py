@@ -1,0 +1,75 @@
+"""prf_select Pallas kernel: tiling vs oracle, PRF statistics, selection."""
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.prf_select import prf_select_kernel
+
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("n,f", [(1, 1), (8, 128), (13, 200), (40, 1000)])
+def test_kernel_matches_ref(n, f):
+    rng = np.random.default_rng(n * 100 + f)
+    tags = rng.integers(-(2**31), 2**31 - 1, (n, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (f, 2)).astype(np.int32)
+    out = ops.prf_select(tags, fh)
+    expect = np.asarray(ref.prf_select_ref(tags, fh))
+    assert out.shape == (n, f) and out.dtype == np.int32
+    assert np.array_equal(out, expect)
+
+
+def test_kernel_tile_choices_agree():
+    rng = np.random.default_rng(7)
+    tags = rng.integers(-(2**31), 2**31 - 1, (16, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (256, 2)).astype(np.int32)
+    a = np.asarray(prf_select_kernel(jnp.asarray(tags), jnp.asarray(fh),
+                                     tile_n=4, tile_f=128, interpret=True))
+    b = np.asarray(prf_select_kernel(jnp.asarray(tags), jnp.asarray(fh),
+                                     tile_n=16, tile_f=256, interpret=True))
+    assert np.array_equal(a, b)
+
+
+def test_prf_deterministic_and_key_sensitive():
+    rng = np.random.default_rng(0)
+    tags = rng.integers(-(2**31), 2**31 - 1, (4, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (6, 2)).astype(np.int32)
+    a = ops.prf_select(tags, fh)
+    b = ops.prf_select(tags, fh)
+    assert np.array_equal(a, b)
+    tags2 = tags.copy()
+    tags2[0, 0] ^= 1  # single-bit key change flips ~half the outputs
+    c = ops.prf_select(tags2, fh)
+    flips = np.unpackbits(
+        (a[0] ^ c[0]).view(np.uint8)
+    ).mean()
+    assert 0.35 < flips < 0.65
+    assert np.array_equal(a[1:], c[1:])  # other keys unaffected
+
+
+def test_prf_uniformity():
+    rng = np.random.default_rng(1)
+    tags = rng.integers(-(2**31), 2**31 - 1, (32, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (512, 2)).astype(np.int32)
+    r = ops.prf_select(tags, fh)
+    u = np.right_shift(r.view(np.uint32), 8).astype(np.float64) / 2**24
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(u.std() - (1 / 12) ** 0.5) < 0.01
+    # byte-level chi-square (loose)
+    counts = np.bincount(r.view(np.uint8).reshape(-1), minlength=256)
+    expect = counts.sum() / 256
+    chi2 = ((counts - expect) ** 2 / expect).sum()
+    assert chi2 < 256 * 1.6
+
+
+def test_selection_mask_expected_count():
+    """E[selected per fragment] ~ R, matching core/selection.py semantics."""
+    rng = np.random.default_rng(2)
+    n_nodes, r_target = 600, 40
+    tags = rng.integers(-(2**31), 2**31 - 1, (n_nodes, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (50, 2)).astype(np.int32)
+    # two-sided ring distances in node-spacing units: 1,1,2,2,3,3,...
+    d = np.repeat(np.arange(1, n_nodes // 2 + 1), 2)[:n_nodes].astype(float)
+    mask = ops.selection_mask(tags, fh, d, r_target)
+    per_frag = mask.sum(axis=0)
+    assert 0.7 * r_target < per_frag.mean() < 1.3 * r_target

@@ -1,0 +1,69 @@
+"""Paper-scale statistical simulations (§6.1): reproduce Fig 4/5/6 claims."""
+import numpy as np
+
+from repro.core import simulation as S
+
+
+def test_vault_tolerates_one_third_byzantine():
+    p = S.SimParams(n_objects=150, byz_fraction=1 / 3, churn_per_year=26.0,
+                    seed=11)
+    r = S.simulate_vault(p)
+    assert r.lost_objects == 0
+
+
+def test_replicated_baseline_collapses_at_small_byzantine():
+    p = S.SimParams(n_objects=150, byz_fraction=0.05, churn_per_year=26.0,
+                    seed=12)
+    r = S.simulate_replicated(p)
+    assert r.lost_fraction > 0.5  # paper: all objects lost below 5%
+
+
+def test_vault_loses_past_tolerance():
+    p = S.SimParams(n_objects=100, byz_fraction=0.5, churn_per_year=26.0,
+                    seed=13)
+    r = S.simulate_vault(p)
+    assert r.lost_fraction > 0.3
+
+
+def test_cache_reduces_repair_traffic():
+    base = dict(n_objects=150, churn_per_year=26.0, seed=14)
+    r0 = S.simulate_vault(S.SimParams(cache_ttl_hours=0.0, **base))
+    r48 = S.simulate_vault(S.SimParams(cache_ttl_hours=48.0, **base))
+    assert r48.repair_traffic_units < r0.repair_traffic_units / 4
+    assert r48.cache_hits > 0
+
+
+def test_traffic_scales_linearly_with_objects():
+    a = S.simulate_vault(S.SimParams(n_objects=100, seed=15,
+                                     churn_per_year=26.0))
+    b = S.simulate_vault(S.SimParams(n_objects=300, seed=15,
+                                     churn_per_year=26.0))
+    ratio = b.repair_traffic_units / a.repair_traffic_units
+    assert 2.0 < ratio < 4.5  # ~3x
+
+
+def test_fragment_trace_stays_recoverable():
+    tr = S.fragment_trace(32, 80, byz_fraction=1 / 3, churn_per_year=26.0,
+                          years=5.0, seed=16)
+    assert tr.min() >= 32  # Fig. 5: never below K_inner
+    # higher redundancy keeps a wider margin
+    tr2 = S.fragment_trace(32, 48, byz_fraction=1 / 3, churn_per_year=26.0,
+                           years=5.0, seed=16)
+    assert tr.mean() > tr2.mean()
+
+
+def test_targeted_attack_outer_code_ordering():
+    """Fig. 6 bottom: more outer redundancy tolerates more attacked nodes."""
+    losses = {}
+    for n_chunks in (10, 12, 14):
+        p = S.SimParams(n_objects=300, n_chunks=n_chunks, byz_fraction=1 / 3,
+                        seed=17)
+        losses[n_chunks] = S.targeted_attack_vault(p, attacked_fraction=0.2)
+    assert losses[14] <= losses[12] <= losses[10]
+    p14 = S.SimParams(n_objects=300, n_chunks=14, byz_fraction=1 / 3, seed=17)
+    assert S.targeted_attack_vault(p14, 0.1) < 0.01  # no loss ≤ 10-20%
+
+
+def test_targeted_attack_baseline_dies_immediately():
+    p = S.SimParams(n_objects=500)
+    assert S.targeted_attack_replicated(p, 0.02) >= 1.0  # <2% kills all

@@ -1,0 +1,99 @@
+"""VAULT store/query protocol (Alg. 1) on the simulated peer network."""
+import numpy as np
+import pytest
+
+from repro.core import chunks as C
+from repro.core.network import SimNetwork
+from repro.core.rateless import InsufficientFragments
+from repro.core.vault import VaultClient
+
+PARAMS = C.CodeParams(k_outer=4, n_chunks=6, k_inner=8, r_inner=20)
+
+
+def make_net(n=120, byz=0, seed=0):
+    net = SimNetwork(seed=seed)
+    for i in range(n):
+        net.add_node(byzantine=i < byz, seed=i.to_bytes(4, "little"))
+    return net
+
+
+def test_store_query_roundtrip():
+    net = make_net()
+    client = VaultClient(net, net.alive_nodes()[0])
+    data = np.random.default_rng(0).integers(0, 256, 5000, np.uint8).tobytes()
+    oid, st = client.store(data, PARAMS)
+    assert st.latency_s > 0 and st.bytes_sent > 0
+    got, qs = client.query(oid)
+    assert got == data
+    assert qs.latency_s > 0
+
+
+def test_store_query_with_byzantine_third():
+    net = make_net(n=150, byz=50)  # 1/3 byzantine (claim, store nothing)
+    client = VaultClient(net, net.alive_nodes()[60])
+    data = b"vault tolerates one third byzantine" * 50
+    oid, _ = client.store(data, PARAMS)
+    got, _ = client.query(oid)
+    assert got == data
+
+
+def test_query_after_churn_below_threshold():
+    net = make_net(n=150, seed=3)
+    client = VaultClient(net, net.alive_nodes()[0])
+    data = b"churn" * 999
+    oid, _ = client.store(data, PARAMS)
+    rng = np.random.default_rng(1)
+    alive = [n for n in net.alive_nodes() if n.nid != client.node.nid]
+    for node in rng.choice(alive, size=45, replace=False):  # ~30% churn
+        net.fail_node(node.nid)
+    got, _ = client.query(oid)
+    assert got == data
+
+
+def test_query_fails_past_tolerance():
+    net = make_net(n=60, seed=5)
+    client = VaultClient(net, net.alive_nodes()[0])
+    oid, _ = client.store(b"doomed" * 100, PARAMS)
+    for node in list(net.alive_nodes()):
+        if node.nid != client.node.nid:
+            net.fail_node(node.nid)
+    with pytest.raises(InsufficientFragments):
+        client.query(oid)
+
+
+def test_object_id_opacity():
+    """Chunk hashes are content-addressed but the chunk->object mapping is
+    owner-private: two owners storing the SAME object get disjoint chunks
+    (different private indices), so observing chunks reveals nothing."""
+    net = make_net()
+    a = VaultClient(net, net.alive_nodes()[0])
+    b = VaultClient(net, net.alive_nodes()[1])
+    data = b"same content" * 100
+    oid_a, _ = a.store(data, PARAMS)
+    oid_b, _ = b.store(data, PARAMS)
+    assert oid_a.ohash == oid_b.ohash  # content addressing agrees
+    assert set(oid_a.chunk_hashes).isdisjoint(oid_b.chunk_hashes)
+
+
+def test_content_verification_rejects_corruption():
+    net = make_net()
+    client = VaultClient(net, net.alive_nodes()[0])
+    data = b"integrity" * 64
+    oid, _ = client.store(data, PARAMS)
+    # corrupt every stored fragment of the first chunk on every holder
+    chash = oid.chunk_hashes[0]
+    for node in net.alive_nodes():
+        for key in list(node.fragments):
+            if key[0] == chash:
+                frag = bytearray(node.fragments[key])
+                frag[0] ^= 0xFF
+                node.fragments[key] = bytes(frag)
+    # inner_decode must detect the hash mismatch; QUERY still succeeds
+    # through the other chunks (k_outer of n_chunks needed)
+    got, _ = client.query(oid)
+    assert got == data
+
+
+def test_redundancy_accounting():
+    p = C.CodeParams()
+    assert abs(p.redundancy - (10 / 8) * (80 / 32)) < 1e-9  # 3.125 (§6)

@@ -1,0 +1,98 @@
+"""VRF + Algorithm 2 selection: determinism, verifiability, distribution."""
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import selection as sel
+from repro.core.vrf import RING, KeyPair, VRFRegistry, node_id
+
+
+def test_vrf_deterministic_and_verifiable():
+    reg = VRFRegistry()
+    kp = KeyPair.generate(b"a")
+    reg.register(kp)
+    r1, p1 = reg.prove(kp.sk, b"input")
+    r2, p2 = reg.prove(kp.sk, b"input")
+    assert (r1, p1) == (r2, p2)
+    assert reg.verify(kp.pk, b"input", r1, p1)
+    assert not reg.verify(kp.pk, b"other", r1, p1)
+    assert not reg.verify(kp.pk, b"input", r1 ^ 1, p1)
+
+
+def test_vrf_forgery_rejected():
+    reg = VRFRegistry()
+    kp_a = KeyPair.generate(b"a")
+    kp_b = KeyPair.generate(b"b")
+    reg.register(kp_a)
+    reg.register(kp_b)
+    r, p = reg.prove(kp_b.sk, b"x")  # b's proof presented under a's pk
+    assert not reg.verify(kp_a.pk, b"x", r, p)
+    assert not reg.verify(KeyPair.generate(b"c").pk, b"x", r, p)
+
+
+def test_vrf_uniformity():
+    reg = VRFRegistry()
+    kp = KeyPair.generate(b"u")
+    reg.register(kp)
+    vals = [
+        reg.prove(kp.sk, i.to_bytes(4, "little"))[0] / RING
+        for i in range(2000)
+    ]
+    vals = np.array(vals)
+    assert abs(vals.mean() - 0.5) < 0.02
+    assert abs(np.quantile(vals, 0.25) - 0.25) < 0.03
+
+
+def test_node_ids_spread_on_ring():
+    ids = [node_id(KeyPair.generate(bytes([i, j])).pk)
+           for i in range(16) for j in range(16)]
+    norm = np.sort(np.array(ids, dtype=np.float64) / RING)
+    gaps = np.diff(np.concatenate([norm, [norm[0] + 1.0]]))
+    assert gaps.max() < 0.08  # 256 nodes: no giant hole
+
+
+def test_selection_proof_verifies_and_rejects_wrong_anchor():
+    reg = VRFRegistry()
+    kp = KeyPair.generate(b"s")
+    reg.register(kp)
+    anchor = 123456789
+    sp, selected = sel.make_selection_proof(
+        reg, kp.sk, kp.pk, anchor, anchor, r_target=80, n_nodes=100
+    )
+    ok = sel.verify_selection(reg, sp, anchor, 80, 100)
+    # selection outcome and verification agree
+    assert ok == selected
+
+
+def test_expected_selection_count_near_r():
+    """§4.3.2: expected number of selected candidates ≈ R."""
+    reg = VRFRegistry()
+    n_nodes, r_target = 600, 40
+    kps = [KeyPair.generate(bytes([i % 256, i // 256])) for i in range(n_nodes)]
+    for kp in kps:
+        reg.register(kp)
+    counts = []
+    for trial in range(12):
+        chash = C.chunk_hash(trial.to_bytes(4, "little"))
+        anchor = C.hash_point(chash)
+        fhash = C.fragment_hash(chash, 0)
+        n_sel = 0
+        for kp in kps:
+            _sp, s = sel.make_selection_proof(
+                reg, kp.sk, kp.pk, fhash, anchor, r_target, n_nodes
+            )
+            n_sel += int(s)
+        counts.append(n_sel)
+    mean = np.mean(counts)
+    assert 0.6 * r_target < mean < 1.6 * r_target, counts
+
+
+def test_distance_metric_units():
+    # distance is measured in expected-node-spacings (+1)
+    n = 128
+    spacing = RING // n
+    assert abs(sel.distance_metric(0, spacing, n) - 2.0) < 0.01
+    assert abs(sel.distance_metric(0, 0, n) - 1.0) < 1e-9
+    # wraps around the ring
+    assert abs(
+        sel.distance_metric(RING - spacing // 2, spacing // 2, n) - 2.0
+    ) < 0.01
