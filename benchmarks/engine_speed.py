@@ -1,0 +1,73 @@
+"""Batched scenario engine vs per-cell Python loop: wall-clock for a
+Fig. 4/6-style sweep (cells × seeds) through (a) one batched ``run_grid``
+dispatch and (b) the numpy reference looped one ``(params, seed)`` point at
+a time.
+
+Two regimes are timed: a parameter-grid sweep over many small cells (the
+scenario-exploration workload the engine exists for — Python loop overhead
+dominates the reference) and a medium-sized Fig. 4 cell block. Compile time
+is reported separately; on accelerators the dispatch gap widens further.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit
+from repro.core import scenarios as SC
+from repro.core import simulation as S
+
+SEEDS = tuple(range(8))
+
+
+def _time_pair(name: str, cells: list[dict]) -> dict:
+    t0 = time.time()
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    t_compile = time.time() - t0
+    t0 = time.time()
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    t_engine = time.time() - t0
+
+    t0 = time.time()
+    for c in cells:
+        for s in SEEDS:
+            S.simulate_vault(S.SimParams(seed=s, **{
+                k: v for k, v in c.items()
+                if k in ("n_objects", "n_chunks", "k_outer", "k_inner",
+                         "r_inner", "n_nodes", "byz_fraction",
+                         "churn_per_year", "cache_ttl_hours", "step_hours",
+                         "years")}))
+    t_loop = time.time() - t0
+    lost_m, _ = SC.mean_ci(res.lost_fraction)
+    return {
+        "regime": name, "cells": len(cells), "seeds": len(SEEDS),
+        "engine_s": round(t_engine, 2),
+        "engine_compile_s": round(t_compile - t_engine, 2),
+        "python_loop_s": round(t_loop, 2),
+        "speedup": round(t_loop / max(t_engine, 1e-9), 2),
+        "mean_lost": round(float(lost_m.mean()), 4),
+    }
+
+
+def run():
+    quick = SCALE == "quick"
+    years = 0.5 if quick else 1.0
+    # many small cells: (byz x R) grid, the scenario-sweep workload
+    grid = [dict(n_objects=20 if quick else 50, k_inner=32, r_inner=r,
+                 byz_fraction=f, churn_per_year=26.0, n_nodes=20_000,
+                 step_hours=12.0, years=years)
+            for f in (0.0, 0.1, 0.2, 0.33, 0.4, 0.5)
+            for r in (64, 80, 112)]
+    # medium cells: a Fig. 4 object-count x TTL block
+    fig4 = [dict(n_objects=100 if quick else 400, churn_per_year=26.0,
+                 cache_ttl_hours=ttl, n_nodes=20_000, step_hours=12.0,
+                 years=years)
+            for ttl in (0.0, 24.0, 48.0)]
+    rows = [_time_pair("grid-18cells", grid), _time_pair("fig4-3cells", fig4)]
+    emit("engine_speed", rows)
+    print(f"  -> one dispatch vs python loop: "
+          f"{rows[0]['speedup']}x on the {rows[0]['cells']}-cell grid")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

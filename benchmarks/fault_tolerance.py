@@ -1,49 +1,71 @@
 """Fig. 6: lost objects vs Byzantine fraction (top) and vs targeted-attack
-fraction (bottom), three code configurations each, vs replicated baseline."""
+fraction (bottom), three code configurations each, vs replicated baseline.
+
+Each panel runs on the batched scenario engine as one dispatch over all
+(config × x-value) cells × 8 seeds; reported values are seed means (± CI
+columns for the Byzantine panel's lost fractions).
+"""
 from __future__ import annotations
 
 from benchmarks.common import SCALE, emit
-from repro.core import simulation as S
+from repro.core import scenarios as SC
 
 INNER_CONFIGS = ((32, 64), (32, 80), (32, 112))  # (K_inner, R)
 OUTER_CONFIGS = ((10, 8), (12, 8), (14, 8))  # (n_chunks, K_outer)
+SEEDS = tuple(range(8))
 
 
 def run():
     quick = SCALE == "quick"
     n_obj = 200 if quick else 1000
+    step_hours = 12.0 if quick else 6.0
+    years = 0.5 if quick else 1.0
     byz_sweep = (0.0, 0.05, 0.1, 0.2, 0.33, 0.4, 0.45, 0.5)
     atk_sweep = (0.02, 0.05, 0.1, 0.15, 0.2, 0.3)
     rows = []
-    for f in byz_sweep:
+
+    # --- Byzantine panel: all fracs x inner configs in one dispatch
+    cells = [dict(n_objects=n_obj, byz_fraction=f, churn_per_year=26.0,
+                  k_inner=k, r_inner=r, step_hours=step_hours, years=years)
+             for f in byz_sweep for (k, r) in INNER_CONFIGS]
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    mean, ci = SC.mean_ci(res.lost_fraction)
+    repl = SC.run_replicated_grid(
+        [dict(n_objects=n_obj, byz_fraction=f, churn_per_year=26.0,
+              step_hours=step_hours, years=years) for f in byz_sweep],
+        seeds=SEEDS, sampler="fast")
+    rmean, _ = SC.mean_ci(repl.lost_fraction)
+    for i, f in enumerate(byz_sweep):
         row = {"sweep": "byzantine", "x": f}
-        for k, r in INNER_CONFIGS:
-            res = S.simulate_vault(S.SimParams(
-                n_objects=n_obj, byz_fraction=f, churn_per_year=26.0,
-                k_inner=k, r_inner=r, seed=3))
-            row[f"vault({k},{r})"] = round(res.lost_fraction, 4)
-        rb = S.simulate_replicated(S.SimParams(
-            n_objects=n_obj, byz_fraction=f, churn_per_year=26.0, seed=3))
-        row["replicated"] = round(rb.lost_fraction, 4)
+        for j, (k, r) in enumerate(INNER_CONFIGS):
+            row[f"vault({k},{r})"] = round(mean[i * 3 + j], 4)
+            row[f"vault({k},{r})_ci"] = round(ci[i * 3 + j], 4)
+        row["replicated"] = round(rmean[i], 4)
         rows.append(row)
-    for phi in atk_sweep:
+
+    # --- targeted panel: one dispatch over attack fracs x outer configs
+    tcells = [dict(n_objects=n_obj, n_chunks=n_chunks, k_outer=k_outer,
+                   byz_fraction=1 / 3, attack_frac=phi)
+              for phi in atk_sweep for (n_chunks, k_outer) in OUTER_CONFIGS]
+    tg = SC.targeted_grid(tcells, seeds=SEEDS)
+    tmean, _ = SC.mean_ci(tg)
+    from repro.core import simulation as S
+    for i, phi in enumerate(atk_sweep):
         row = {"sweep": "targeted", "x": phi}
-        for n_chunks, k_outer in OUTER_CONFIGS:
-            p = S.SimParams(n_objects=n_obj, n_chunks=n_chunks,
-                            k_outer=k_outer, byz_fraction=1 / 3, seed=4)
-            row[f"vault({n_chunks},{k_outer})"] = round(
-                S.targeted_attack_vault(p, phi), 4)
+        for j, (n_chunks, k_outer) in enumerate(OUTER_CONFIGS):
+            row[f"vault({n_chunks},{k_outer})"] = round(tmean[i * 3 + j], 4)
         row["replicated"] = round(
-            S.targeted_attack_replicated(
-                S.SimParams(n_objects=n_obj), phi), 4)
+            S.targeted_attack_replicated(S.SimParams(n_objects=n_obj), phi), 4)
         rows.append(row)
+
     emit("fig6_fault_tolerance", rows)
     # headline checks
     byz33 = next(r for r in rows if r["sweep"] == "byzantine"
                  and r["x"] == 0.33)
     assert byz33["vault(32,80)"] == 0.0, "default must tolerate 33%"
-    print("  -> default (32,80) tolerates 33% byzantine: OK; replicated "
-          f"lost {byz33['replicated']:.0%} at 33%")
+    print("  -> default (32,80) tolerates 33% byzantine over "
+          f"{len(SEEDS)} seeds: OK; replicated lost "
+          f"{byz33['replicated']:.0%} at 33%")
     return rows
 
 

@@ -13,6 +13,7 @@ def main() -> int:
     from benchmarks import (
         coding_micro,
         durability_model,
+        engine_speed,
         fault_tolerance,
         fragment_trace,
         latency,
@@ -29,6 +30,7 @@ def main() -> int:
         ("fig10_coding_micro", coding_micro.run),
         ("selection_micro", selection_micro.run),
         ("durability_model", durability_model.run),
+        ("engine_speed", engine_speed.run),
         ("roofline", roofline.run),
     ]
     failures = 0

@@ -81,3 +81,29 @@ for _ in range(2):
 survey("after targeted attack + repair")
 print(f"repair traffic so far: {net.repair_traffic_bytes/2**20:.1f} MiB, "
       f"{net.repair_count} fragments regenerated")
+
+# --- paper-scale Monte-Carlo: the batched scenario engine ----------------
+# The protocol-level network above runs real coding on 200 peers; the
+# batched engine extrapolates the same dynamics to thousands of groups
+# under three adversary/churn models in ONE device dispatch (8 seeds each).
+from repro.core import scenarios as SC
+
+base = dict(n_objects=100, n_chunks=8, k_outer=4, k_inner=8, r_inner=24,
+            n_nodes=2000, byz_fraction=0.33, churn_per_year=26.0,
+            step_hours=12.0, years=0.5)
+cells = [
+    ("iid churn / static byz", dict(base)),
+    ("regional bursts", dict(base, churn_policy="regional",
+                             burst_prob=0.1, burst_mult=10.0)),
+    ("adaptive re-join", dict(base, adv_policy="adaptive",
+                              adapt_boost=1.5)),
+    ("targeted greedy-kill", dict(base, adv_policy="targeted",
+                                  attack_frac=0.2, attack_step=180)),
+]
+res = SC.run_grid([c for _, c in cells], seeds=range(8), sampler="fast")
+lost_m, lost_ci = SC.mean_ci(res.lost_fraction)
+traf_m, traf_ci = SC.mean_ci(res.repair_traffic_units)
+print("\nbatched engine sweep (100 objects x 6 months, 8 seeds/scenario):")
+for i, (name, _) in enumerate(cells):
+    print(f"  {name:24s} lost {lost_m[i]:6.1%} ±{lost_ci[i]:.1%}   "
+          f"repair traffic {traf_m[i]:8.1f} ±{traf_ci[i]:.1f} obj-units")

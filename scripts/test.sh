@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 test runner: sets PYTHONPATH and a deterministic single-device JAX
+# host platform (multi-device tests fork their own subprocesses with their
+# own XLA_FLAGS — see tests/conftest.py). Override the device count with
+# XLA_DEVICES=n for local experiments.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=${XLA_DEVICES:-1}${XLA_FLAGS:+ $XLA_FLAGS}"
+
+exec python -m pytest -x -q "$@"

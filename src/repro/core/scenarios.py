@@ -1,0 +1,625 @@
+"""Batched JAX scenario engine for paper-scale durability sweeps.
+
+``simulation.py`` is the numpy *reference* implementation: one
+``(params, seed)`` point per call, a Python loop per time step. This module
+is the production path: the full group state ``(honest, byz, cache_t,
+alive)`` lives in batched arrays, every time step advances inside one jitted
+``lax.scan``, and ``vmap`` runs a whole ``(parameter-grid × seeds ×
+policies)`` sweep — e.g. all cells of Fig. 4 or Fig. 6 — as a single device
+dispatch. Group counts, code parameters, churn rates, TTLs, and policy
+selectors are all *traced* scalars, so heterogeneous cells (different
+``n_objects``, ``n_chunks``, ``(K, R)``) share one compiled executable via
+padding masks; only the padded maxima are compile-time constants.
+
+Scenario diversity is a first-class axis. Each policy is a pure function
+composed into the scan body and selected per batch element:
+
+Churn policies (``churn_policy``):
+
+* ``CHURN_IID`` — i.i.d. Poisson churn per node ⇒ binomial thinning per
+  group per step. The paper's own model (§6.1, Figs. 4–6).
+* ``CHURN_REGIONAL`` — correlated regional bursts: with probability
+  ``burst_prob`` per step one of ``N_REGIONS`` regions suffers
+  ``burst_mult``× the base failure rate, modeling rack/AZ outages as in
+  *Topology-Aware Cooperative Data Protection* (PAPERS.md) — failures the
+  i.i.d. model provably understates.
+
+Adversary policies (``adv_policy``):
+
+* ``ADV_STATIC`` — a fixed Byzantine population fraction joins repairs
+  (paper Fig. 6 top; §4.4's CTMC assumes exactly this).
+* ``ADV_ADAPTIVE`` — adaptive re-join: Byzantine members never churn
+  voluntarily and flood repair refills at ``adapt_boost``× their population
+  share, the BFT-DSN-style adversary (PAPERS.md) that targets the repair
+  path itself.
+* ``ADV_TARGETED`` — greedy targeted kill at step ``attack_step`` reusing
+  ``targeted_attack_vault``'s cost model (A.3 eq. 17): cheapest groups
+  first, cost ``(honest − K_inner + 1)/fragments_per_node``, budget
+  ``attack_frac · n_nodes`` (paper Fig. 6 bottom, here time-resolved).
+
+Cache policy is the ``cache_ttl_hours`` knob (0 disables), identical to the
+reference semantics (repair.py docstring / Fig. 4).
+
+Public API:
+
+* ``make_scenario(**kw)`` / ``from_simparams(p)`` — build one scenario cell;
+* ``run_grid(cells, seeds)`` — ONE dispatch over cells × seeds, returns a
+  ``ScenarioResult`` of ``[n_cells, n_seeds]`` arrays;
+* ``run_replicated_grid(cells, seeds)`` — Ceph-like baseline, same churn;
+* ``trace_grid(cells, seeds)`` — Fig. 5 per-step honest-fragment traces;
+* ``targeted_grid(cells, seeds)`` — Fig. 6-bottom static attack sweep;
+* ``mean_ci(x)`` — per-cell mean and 95% CI over the seed axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+HOURS_PER_YEAR = 24 * 365.0
+
+CHURN_IID = 0
+CHURN_REGIONAL = 1
+CHURN_POLICIES = {"iid": CHURN_IID, "regional": CHURN_REGIONAL}
+
+ADV_STATIC = 0
+ADV_ADAPTIVE = 1
+ADV_TARGETED = 2
+ADVERSARY_POLICIES = {
+    "static": ADV_STATIC, "adaptive": ADV_ADAPTIVE, "targeted": ADV_TARGETED,
+}
+
+N_REGIONS = 16  # regional-burst fault domains (racks/AZs)
+
+
+class Scenario(NamedTuple):
+    """One sweep cell. Every leaf is a scalar (stacked to [B] when batched);
+    all of them are traced, so cells with different values share one
+    compiled executable."""
+
+    n_objects: np.int32
+    n_chunks: np.int32
+    k_outer: np.float32
+    k_inner: np.float32
+    r_inner: np.float32
+    n_nodes: np.float32
+    byz_fraction: np.float32
+    churn_per_year: np.float32
+    cache_ttl_hours: np.float32
+    step_hours: np.float32
+    steps: np.int32
+    churn_policy: np.int32
+    adv_policy: np.int32
+    burst_prob: np.float32
+    burst_mult: np.float32
+    adapt_boost: np.float32
+    attack_frac: np.float32
+    attack_step: np.int32
+    frags_per_node: np.float32
+    replication: np.float32
+    seed: np.int32
+
+
+class ScenarioResult(NamedTuple):
+    repair_traffic_units: jnp.ndarray
+    repairs: jnp.ndarray
+    cache_hits: jnp.ndarray
+    lost_objects: jnp.ndarray
+    lost_fraction: jnp.ndarray
+    final_honest_mean: jnp.ndarray
+    honest_min: jnp.ndarray        # min honest seen in any live group
+    members_max: jnp.ndarray       # max honest+byz seen in any group
+    alive_frac_trace: jnp.ndarray  # [max_steps] fraction of groups alive
+
+
+def make_scenario(
+    n_objects: int = 1000, n_chunks: int = 10, k_outer: int = 8,
+    k_inner: int = 32, r_inner: int = 80, n_nodes: int = 100_000,
+    byz_fraction: float = 0.0, churn_per_year: float = 4.0,
+    cache_ttl_hours: float = 0.0, step_hours: float = 6.0,
+    years: float = 1.0, steps: int | None = None,
+    churn_policy: int | str = CHURN_IID, adv_policy: int | str = ADV_STATIC,
+    burst_prob: float = 0.05, burst_mult: float = 20.0,
+    adapt_boost: float = 2.0, attack_frac: float = 0.0, attack_step: int = 0,
+    frags_per_node: int = 1, replication: int = 3, seed: int = 0,
+) -> Scenario:
+    if isinstance(churn_policy, str):
+        churn_policy = CHURN_POLICIES[churn_policy]
+    if isinstance(adv_policy, str):
+        adv_policy = ADVERSARY_POLICIES[adv_policy]
+    if steps is None:
+        steps = int(round(years * HOURS_PER_YEAR / step_hours))
+    return Scenario(
+        n_objects=np.int32(n_objects), n_chunks=np.int32(n_chunks),
+        k_outer=np.float32(k_outer), k_inner=np.float32(k_inner),
+        r_inner=np.float32(r_inner), n_nodes=np.float32(n_nodes),
+        byz_fraction=np.float32(byz_fraction),
+        churn_per_year=np.float32(churn_per_year),
+        cache_ttl_hours=np.float32(cache_ttl_hours),
+        step_hours=np.float32(step_hours), steps=np.int32(steps),
+        churn_policy=np.int32(churn_policy), adv_policy=np.int32(adv_policy),
+        burst_prob=np.float32(burst_prob), burst_mult=np.float32(burst_mult),
+        adapt_boost=np.float32(adapt_boost),
+        attack_frac=np.float32(attack_frac),
+        attack_step=np.int32(attack_step),
+        frags_per_node=np.float32(frags_per_node),
+        replication=np.float32(replication), seed=np.int32(seed),
+    )
+
+
+def from_simparams(p, **overrides) -> Scenario:
+    """Build a scenario cell from a ``simulation.SimParams``."""
+    kw = dict(
+        n_objects=p.n_objects, n_chunks=p.n_chunks, k_outer=p.k_outer,
+        k_inner=p.k_inner, r_inner=p.r_inner, n_nodes=p.n_nodes,
+        byz_fraction=p.byz_fraction, churn_per_year=p.churn_per_year,
+        cache_ttl_hours=p.cache_ttl_hours, step_hours=p.step_hours,
+        years=p.years, seed=p.seed,
+    )
+    kw.update(overrides)
+    return make_scenario(**kw)
+
+
+# --------------------------------------------------------------- primitives
+def _binom(key, n, p):
+    """Exact binomial sample; safe for n == 0 and p ∈ {0, 1}."""
+    return jax.random.binomial(key, jnp.maximum(n, 0.0),
+                               jnp.clip(p, 0.0, 1.0))
+
+
+_FAST_J = 12          # inverse-CDF terms; exact for means up to _FAST_CUT
+_FAST_CUT = 3.0       # truncation tail P(X > 12 | m = 3) ~ 2e-5
+
+
+def _binom_fast(key, n, p):
+    """Fast binomial: exact truncated inverse-CDF for small means, Gaussian
+    approximation above ``_FAST_CUT`` (where ``σ ≥ 2.3`` and the rounding
+    bias is negligible).
+
+    ``jax.random.binomial``'s rejection sampler runs at ~6M samples/s on
+    CPU — it dominates sweep cost. The churn/repair regime of these
+    simulations has ``n·p ≲ 2``, where the unrolled CDF recurrence
+    ``pmf_{j+1} = pmf_j (n-j)/(j+1) · p/(1-p)`` is exact (up to the ~2e-5
+    truncation tail at the cutover mean) and several times faster. Selected
+    by the static ``sampler="fast"`` argument of the grid runners;
+    ``"exact"`` keeps the reference sampler.
+    """
+    n = jnp.maximum(n, 0.0)
+    p = jnp.clip(p, 0.0, 1.0)
+    m = n * p
+    # small-mean branch: X = #{j : u > cdf_j}, capped by J and n
+    u = jax.random.uniform(key, jnp.shape(m), minval=1e-7, maxval=1.0 - 1e-7)
+    r = p / jnp.maximum(1.0 - p, 1e-12)
+    pmf = jnp.exp(n * jnp.log1p(-jnp.minimum(p, 1.0 - 1e-7)))
+    cdf = pmf
+    cnt = (u > cdf).astype(jnp.float32)
+    for j in range(_FAST_J - 1):
+        pmf = pmf * ((n - j) / (j + 1.0)) * r
+        cdf = cdf + jnp.maximum(pmf, 0.0)
+        cnt = cnt + (u > cdf)
+    small = jnp.minimum(cnt, n)
+    # large-mean branch: clipped rounded Gaussian, with a logistic-probit
+    # z from the same uniform (one log instead of erfinv — the branch is
+    # already an approximation, ~2% CDF error is immaterial and it halves
+    # the sampler's transcendental budget)
+    s = jnp.sqrt(jnp.maximum(m * (1.0 - p), 1e-12))
+    z = jnp.log(u / (1.0 - u)) * 0.5513
+    big = jnp.clip(jnp.round(m + s * z), 0.0, n)
+    return jnp.where(m <= _FAST_CUT, small, big)
+
+
+SAMPLERS = {"exact": _binom, "fast": _binom_fast}
+
+
+def _p_fail_step(sc: Scenario) -> jnp.ndarray:
+    """Per-step per-node failure probability from the Poisson churn rate."""
+    return -jnp.expm1(-sc.churn_per_year / HOURS_PER_YEAR * sc.step_hours)
+
+
+def _churn_prob(sc: Scenario, key, gidx) -> jnp.ndarray:
+    """Per-group failure probability [G] under the selected churn policy.
+
+    Policy selection is a ``where`` blend rather than ``lax.switch``: under
+    ``vmap`` a batched-index switch is dramatically slower than computing
+    both (cheap) branches, and the blend keeps the sampler fusable.
+    """
+    base = _p_fail_step(sc)
+    kb, kr = jax.random.split(key)
+    regional = sc.churn_policy == CHURN_REGIONAL
+    burst = regional & (jax.random.uniform(kb) < sc.burst_prob)
+    region = jax.random.randint(kr, (), 0, N_REGIONS)
+    hit = (gidx % N_REGIONS) == region
+    boosted = jnp.minimum(base * sc.burst_mult, 0.95)
+    return jnp.where(burst & hit, boosted, jnp.full(gidx.shape, base))
+
+
+def _targeted_kill(sc: Scenario, key, honest, alive):
+    """Greedy cheapest-groups-first kill mask (A.3 cost model)."""
+    cost = jnp.maximum(honest - sc.k_inner + 1.0, 0.0)
+    cost = cost / jnp.maximum(sc.frags_per_node, 1.0)
+    cost = jnp.where(alive, cost, jnp.inf)
+    # random tiebreak: equal-cost groups are indistinguishable behind the
+    # outer code's opacity (same argument as targeted_attack_vault)
+    tie = jax.random.uniform(key, cost.shape) * 1e-3
+    order = jnp.argsort(cost + tie)
+    csum = jnp.cumsum(cost[order])
+    budget = sc.attack_frac * sc.n_nodes
+    kill_sorted = csum <= budget
+    return jnp.zeros_like(kill_sorted).at[order].set(kill_sorted)
+
+
+# ------------------------------------------------------------- vault engine
+class _Static(NamedTuple):
+    max_groups: int
+    max_objects: int
+    max_steps: int
+
+
+def _vault_init(st: _Static, sampler: str, sc: Scenario):
+    """Per-element initial state (vmapped over the batch)."""
+    G = st.max_groups
+    gidx = jnp.arange(G, dtype=jnp.int32)
+    active = gidx < sc.n_objects * sc.n_chunks
+    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
+    k_init, _ = jax.random.split(base)
+    byz0 = SAMPLERS[sampler](k_init, jnp.where(active, sc.r_inner, 0.0),
+                             jnp.full((G,), sc.byz_fraction))
+    honest0 = jnp.where(active, sc.r_inner - byz0, 0.0)
+    alive0 = active & (honest0 >= sc.k_inner)
+    cache0 = jnp.zeros(G)  # client seeds caches at store time (t=0)
+    return (honest0, byz0, alive0, cache0, 0.0, 0.0, 0.0, jnp.inf, 0.0)
+
+
+def _vault_churn(st: _Static, sampler: str, sc: Scenario, state, t):
+    """Per-element churn half-step: thin members, return repair keys."""
+    sample = SAMPLERS[sampler]
+    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
+    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
+    kt = jax.random.fold_in(base, t + 1)
+    kc, kb, kr, kp, ka = jax.random.split(kt, 5)
+    honest, byz = state[0], state[1]
+    p_fail = _churn_prob(sc, kp, gidx)
+    # adaptive adversary: byzantine members never leave voluntarily
+    adaptive = sc.adv_policy == ADV_ADAPTIVE
+    p_fail_b = jnp.where(adaptive, 0.0, p_fail)
+    h = honest - sample(kc, honest, p_fail)
+    b = byz - sample(kb, byz, p_fail_b)
+    return h, b, kr, ka
+
+
+def _vault_attack(sc: Scenario, h, alive, ka):
+    """Per-element targeted greedy kill (only traced inside the cond)."""
+    attack = sc.adv_policy == ADV_TARGETED
+    kill = _targeted_kill(sc, ka, h, alive)
+    return jnp.where(attack & kill, jnp.minimum(h, sc.k_inner - 1.0), h)
+
+
+def _vault_repair(st: _Static, sampler: str, sc: Scenario, state, h, b, kr, t):
+    """Per-element repair + traffic half-step."""
+    sample = SAMPLERS[sampler]
+    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
+    active = gidx < sc.n_objects * sc.n_chunks
+    _, _, alive, cache_t, traffic, repairs, hits, hmin, mmax = state
+    now = (t + 1.0) * sc.step_hours
+    frag_units = 1.0 / (sc.k_outer * sc.k_inner)
+    chunk_units = 1.0 / sc.k_outer
+    # adaptive adversary floods refills at adapt_boost x population share
+    refill_p = jnp.where(
+        sc.adv_policy == ADV_ADAPTIVE,
+        jnp.clip(sc.byz_fraction * sc.adapt_boost, 0.0, 0.95),
+        sc.byz_fraction)
+
+    a = alive & (h >= sc.k_inner)  # decode impossible => absorbing
+    deficit = jnp.maximum(jnp.where(a, sc.r_inner - (h + b), 0.0), 0.0)
+    new_b = sample(kr, deficit, jnp.full_like(deficit, refill_p))
+    h = h + (deficit - new_b)
+    b = b + new_b
+
+    has_cache = sc.cache_ttl_hours > 0.0
+    warm = (now - cache_t) <= sc.cache_ttl_hours
+    hit_frags = jnp.where(warm, deficit, jnp.maximum(deficit - 1.0, 0.0))
+    miss_pulls = jnp.where(~warm & (deficit > 0), 1.0, 0.0)
+    t_cached = hit_frags.sum() * frag_units + miss_pulls.sum() * chunk_units
+    t_plain = deficit.sum() * sc.k_inner * frag_units
+    new_cache = jnp.where(has_cache & (miss_pulls > 0), now, cache_t)
+
+    new_state = (
+        h, b, a, new_cache,
+        traffic + jnp.where(has_cache, t_cached, t_plain),
+        repairs + deficit.sum(),
+        hits + jnp.where(has_cache, hit_frags.sum(), 0.0),
+        jnp.minimum(hmin, jnp.where(a, h, jnp.inf).min()),
+        jnp.maximum(mmax, jnp.where(active, h + b, 0.0).max()),
+    )
+    alive_frac = a.sum() / jnp.maximum(sc.n_objects * sc.n_chunks, 1)
+    return new_state, alive_frac
+
+
+def _vault_finalize(st: _Static, sc: Scenario, state) -> ScenarioResult:
+    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
+    honest, _, alive, _, traffic, repairs, hits, hmin, mmax = state
+    obj_id = jnp.minimum(gidx // jnp.maximum(sc.n_chunks, 1),
+                         st.max_objects - 1)
+    chunks_alive = jax.ops.segment_sum(
+        alive.astype(jnp.float32), obj_id, num_segments=st.max_objects)
+    obj_active = jnp.arange(st.max_objects) < sc.n_objects
+    lost = (obj_active & (chunks_alive < sc.k_outer)).sum()
+    n_alive = alive.sum()
+    fhm = jnp.where(n_alive > 0,
+                    (honest * alive).sum() / jnp.maximum(n_alive, 1.0), 0.0)
+    return ScenarioResult(
+        repair_traffic_units=traffic, repairs=repairs, cache_hits=hits,
+        lost_objects=lost.astype(jnp.int32),
+        lost_fraction=lost / jnp.maximum(sc.n_objects, 1),
+        final_honest_mean=fhm,
+        honest_min=jnp.where(jnp.isfinite(hmin), hmin, 0.0),
+        members_max=mmax, alive_frac_trace=jnp.zeros(()),  # filled by caller
+    )
+
+
+def _where_on(on, new, old):
+    """Select per batch element, broadcasting [B] over state leaves."""
+    mask = on.reshape(on.shape + (1,) * (new.ndim - on.ndim))
+    return jnp.where(mask, new, old)
+
+
+@functools.lru_cache(maxsize=None)
+def _vault_batch(st: _Static, sampler: str):
+    """Compile the batched engine: one lax.scan over time whose body is
+    vmapped over the batch. (scan-of-vmap, not vmap-of-scan, so the
+    targeted-attack sort can sit behind a real lax.cond and only execute
+    on actual attack steps instead of being select-ed every step.)
+    """
+    churn = jax.vmap(functools.partial(_vault_churn, st, sampler),
+                     in_axes=(0, 0, None))
+    attack = jax.vmap(_vault_attack)
+    repair = jax.vmap(functools.partial(_vault_repair, st, sampler),
+                      in_axes=(0, 0, 0, 0, 0, None))
+
+    def run(scb: Scenario):
+        init = jax.vmap(functools.partial(_vault_init, st, sampler))(scb)
+
+        def body(state, t):
+            h, b, kr, ka = churn(scb, state, t)
+            hit_now = (scb.adv_policy == ADV_TARGETED) & (t == scb.attack_step)
+            h = jax.lax.cond(
+                hit_now.any(),
+                lambda args: jnp.where(hit_now[:, None],
+                                       attack(scb, *args), args[0]),
+                lambda args: args[0], (h, state[2], ka))
+            new_state, alive_frac = repair(scb, state, h, b, kr, t)
+            on = t < scb.steps
+            state = tuple(_where_on(on, n, o)
+                          for n, o in zip(new_state, state))
+            return state, jnp.where(on, alive_frac, state[2].sum(-1)
+                                    / jnp.maximum(scb.n_objects
+                                                  * scb.n_chunks, 1))
+
+        state, alive_tr = jax.lax.scan(body, init, jnp.arange(st.max_steps))
+        res = jax.vmap(functools.partial(_vault_finalize, st))(scb, state)
+        return res._replace(alive_frac_trace=alive_tr.T)
+
+    return jax.jit(run)
+
+
+def _stack(cells: list[Scenario]) -> Scenario:
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *cells)
+
+
+def _product(cells, seeds) -> list[Scenario]:
+    out = []
+    for cell in cells:
+        if isinstance(cell, dict):
+            cell = make_scenario(**cell)
+        for s in seeds:
+            out.append(cell._replace(seed=np.int32(s)))
+    return out
+
+
+def _reshape(res, n_cells: int, n_seeds: int):
+    return type(res)(*(np.asarray(x).reshape(n_cells, n_seeds, *x.shape[1:])
+                       for x in res))
+
+
+def run_grid(cells, seeds=range(8), sampler: str = "exact") -> ScenarioResult:
+    """Run cells × seeds vault scenarios in ONE batched dispatch.
+
+    ``cells``: scenarios or kwargs-dicts for :func:`make_scenario`.
+    ``sampler``: ``"exact"`` (reference-faithful binomial) or ``"fast"``
+    (hybrid inverse-CDF/Gaussian sampler for big sweeps). Returns a
+    :class:`ScenarioResult` whose leaves have shape ``[n_cells, n_seeds]``
+    (the trace leaf ``[n_cells, n_seeds, max_steps]``).
+    """
+    seeds = list(seeds)
+    flat = _product(cells, seeds)
+    st = _Static(
+        max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
+        max_objects=max(int(s.n_objects) for s in flat),
+        max_steps=max(int(s.steps) for s in flat),
+    )
+    res = _vault_batch(st, sampler)(_stack(flat))
+    return _reshape(res, len(flat) // len(seeds), len(seeds))
+
+
+# ------------------------------------------------------ replicated baseline
+def _repl_single(st: _Static, sampler: str, sc: Scenario) -> ScenarioResult:
+    sample = SAMPLERS[sampler]
+    O = st.max_objects
+    oidx = jnp.arange(O, dtype=jnp.int32)
+    active = oidx < sc.n_objects
+    base = jax.random.PRNGKey(jnp.asarray(sc.seed + 1, jnp.uint32))
+    k_init, _ = jax.random.split(base)
+    bad0 = sample(k_init, jnp.where(active, sc.replication, 0.0),
+                  jnp.full((O,), sc.byz_fraction))
+    good0 = jnp.where(active, sc.replication - bad0, 0.0)
+    alive0 = active & (good0 >= 1.0)
+
+    def step(carry, t):
+        good, bad, alive, traffic, repairs = carry
+        on = t < sc.steps
+        kt = jax.random.fold_in(base, t + 1)
+        kg, kb, kr, kp = jax.random.split(kt, 4)
+        p_fail = _churn_prob(sc, kp, oidx)
+        g = good - sample(kg, good, p_fail)
+        b = bad - sample(kb, bad, p_fail)
+        a = alive & (g >= 1.0)  # no good replica left => object gone
+        deficit = jnp.maximum(jnp.where(a, sc.replication - (g + b), 0.0), 0.0)
+        # repair copies an unverifiable replica: good iff source good AND
+        # the new holder is honest (contagious decay, Fig. 6)
+        remaining = jnp.maximum(g + b, 1.0)
+        p_good = jnp.where(a, g / remaining, 0.0) * (1.0 - sc.byz_fraction)
+        new_good = sample(kr, deficit, jnp.clip(p_good, 0.0, 1.0))
+        g = g + new_good
+        b = b + (deficit - new_good)
+        pick = lambda new, old: jnp.where(on, new, old)
+        carry = (pick(g, good), pick(b, bad), jnp.where(on, a, alive),
+                 pick(traffic + deficit.sum(), traffic),
+                 pick(repairs + deficit.sum(), repairs))
+        alive_frac = carry[2].sum() / jnp.maximum(sc.n_objects, 1)
+        return carry, alive_frac
+
+    init = (good0, bad0, alive0, 0.0, 0.0)
+    (good, bad, alive, traffic, repairs), alive_tr = jax.lax.scan(
+        step, init, jnp.arange(st.max_steps))
+    lost = (active & ~alive).sum()
+    n_alive = alive.sum()
+    fhm = jnp.where(n_alive > 0,
+                    (good * alive).sum() / jnp.maximum(n_alive, 1.0), 0.0)
+    alive_min = jnp.where(alive, good, jnp.inf).min()
+    return ScenarioResult(
+        repair_traffic_units=traffic, repairs=repairs,
+        cache_hits=jnp.zeros(()), lost_objects=lost.astype(jnp.int32),
+        lost_fraction=lost / jnp.maximum(sc.n_objects, 1),
+        final_honest_mean=fhm,
+        honest_min=jnp.where(jnp.isfinite(alive_min), alive_min, 0.0),
+        members_max=(good + bad).max(), alive_frac_trace=alive_tr,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _repl_batch(st: _Static, sampler: str):
+    return jax.jit(jax.vmap(functools.partial(_repl_single, st, sampler)))
+
+
+def run_replicated_grid(cells, seeds=range(8),
+                        sampler: str = "exact") -> ScenarioResult:
+    """Ceph-like replicated baseline, same grid semantics as run_grid."""
+    seeds = list(seeds)
+    flat = _product(cells, seeds)
+    st = _Static(max_groups=1,
+                 max_objects=max(int(s.n_objects) for s in flat),
+                 max_steps=max(int(s.steps) for s in flat))
+    res = _repl_batch(st, sampler)(_stack(flat))
+    return _reshape(res, len(flat) // len(seeds), len(seeds))
+
+
+# --------------------------------------------------------- Fig 5 trace grid
+def _trace_single(max_steps: int, repair_interval_hours, sc: Scenario):
+    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
+    k_init, _ = jax.random.split(base)
+    byz0 = _binom(k_init, sc.r_inner, sc.byz_fraction)
+    honest0 = sc.r_inner - byz0
+    p_fail = _p_fail_step(sc)
+
+    def step(carry, t):
+        honest, byz, since, absorbed = carry
+        kt = jax.random.fold_in(base, t + 1)
+        kh, kb, kr = jax.random.split(kt, 3)
+        h = honest - _binom(kh, honest, p_fail)
+        b = byz - _binom(kb, byz, p_fail)
+        absorbed_n = absorbed | (h < sc.k_inner)
+        since_n = since + sc.step_hours
+        do_rep = ~absorbed_n & (since_n >= repair_interval_hours)
+        deficit = jnp.maximum(sc.r_inner - (h + b), 0.0)
+        nb = _binom(kr, deficit, sc.byz_fraction)
+        h = jnp.where(do_rep, h + deficit - nb, h)
+        b = jnp.where(do_rep, b + nb, b)
+        since_n = jnp.where(do_rep, 0.0, since_n)
+        # absorbed groups freeze (numpy reference stops simulating them);
+        # so do cells whose own horizon (sc.steps) has passed in a padded
+        # heterogeneous batch
+        frozen = absorbed | (t >= sc.steps)
+        pick = lambda new, old: jnp.where(frozen, old, new)
+        carry = (pick(h, honest), pick(b, byz), pick(since_n, since),
+                 jnp.where(t >= sc.steps, absorbed, absorbed_n))
+        return carry, carry[0]
+
+    init = (honest0, byz0, 0.0, jnp.zeros((), bool))
+    _, trace = jax.lax.scan(step, init, jnp.arange(max_steps))
+    return trace
+
+
+@functools.lru_cache(maxsize=None)
+def _trace_batch(max_steps: int):
+    def run(interval, sc):
+        return _trace_single(max_steps, interval, sc)
+    return jax.jit(jax.vmap(run, in_axes=(0, 0)))
+
+
+def trace_grid(cells, seeds=range(8),
+               repair_interval_hours: float = 24.0) -> np.ndarray:
+    """Honest-fragment traces of single chunk groups (Fig. 5), batched over
+    cells × seeds. Returns ``[n_cells, n_seeds, max_steps]`` int64; cells
+    with a shorter horizon than the padded maximum hold their last value
+    for the remaining steps."""
+    seeds = list(seeds)
+    flat = _product(cells, seeds)
+    max_steps = max(int(s.steps) for s in flat)
+    interval = np.full(len(flat), repair_interval_hours, np.float32)
+    out = _trace_batch(max_steps)(interval, _stack(flat))
+    return np.asarray(out, np.int64).reshape(
+        len(flat) // len(seeds), len(seeds), max_steps)
+
+
+# --------------------------------------------------- Fig 6 targeted attacks
+def _targeted_single(st: _Static, sc: Scenario):
+    G = st.max_groups
+    gidx = jnp.arange(G, dtype=jnp.int32)
+    active = gidx < sc.n_objects * sc.n_chunks
+    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
+    k_init, ka = jax.random.split(base)
+    byz = _binom(k_init, jnp.where(active, sc.r_inner, 0.0),
+                 jnp.full((G,), sc.byz_fraction))
+    honest = jnp.where(active, sc.r_inner - byz, 0.0)
+    kill = _targeted_kill(sc, ka, honest, active)
+    obj_id = jnp.minimum(gidx // jnp.maximum(sc.n_chunks, 1),
+                         st.max_objects - 1)
+    chunks_alive = jax.ops.segment_sum(
+        (active & ~kill).astype(jnp.float32), obj_id,
+        num_segments=st.max_objects)
+    obj_active = jnp.arange(st.max_objects) < sc.n_objects
+    lost = (obj_active & (chunks_alive < sc.k_outer)).sum()
+    return lost / jnp.maximum(sc.n_objects, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _targeted_batch(st: _Static):
+    return jax.jit(jax.vmap(functools.partial(_targeted_single, st)))
+
+
+def targeted_grid(cells, seeds=range(8)) -> np.ndarray:
+    """Lost-object fraction under the greedy targeted attack (Fig. 6
+    bottom), batched over cells × seeds: ``[n_cells, n_seeds]`` float."""
+    seeds = list(seeds)
+    flat = _product(cells, seeds)
+    st = _Static(
+        max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
+        max_objects=max(int(s.n_objects) for s in flat), max_steps=1)
+    out = _targeted_batch(st)(_stack(flat))
+    return np.asarray(out).reshape(len(flat) // len(seeds), len(seeds))
+
+
+# ------------------------------------------------------------- summarizing
+def mean_ci(x: np.ndarray, axis: int = -1) -> tuple[np.ndarray, np.ndarray]:
+    """Mean and 95% normal-approx confidence half-width over ``axis``
+    (the seed axis of a grid result)."""
+    x = np.asarray(x, np.float64)
+    n = x.shape[axis]
+    mean = x.mean(axis=axis)
+    ci = 1.96 * x.std(axis=axis, ddof=1) / np.sqrt(n) if n > 1 else (
+        np.zeros_like(mean))
+    return mean, ci

@@ -257,3 +257,45 @@ def targeted_attack_replicated(
     budget = attacked_fraction * p.n_nodes
     killed = min(p.n_objects, int(budget // replication))
     return killed / max(p.n_objects, 1)
+
+
+# ------------------------------------------------ batched-engine compat layer
+# The numpy functions above are the reference path; `repro.core.scenarios`
+# is the batched JAX engine that runs whole (params x seeds x policy) sweeps
+# in one dispatch. These wrappers keep the SimParams/SimResult API for
+# callers that want multi-seed estimates of a single parameter point.
+def simulate_vault_batched(
+    p: SimParams, seeds=range(8), sampler: str = "fast",
+) -> SimResult:
+    """Multi-seed VAULT run via the batched engine; seed-mean SimResult."""
+    from repro.core import scenarios as SC
+
+    r = SC.run_grid([SC.from_simparams(p)], seeds=seeds, sampler=sampler)
+    return SimResult(
+        repair_traffic_units=float(r.repair_traffic_units[0].mean()),
+        lost_objects=int(round(float(r.lost_objects[0].mean()))),
+        n_objects=p.n_objects,
+        repairs=int(round(float(r.repairs[0].mean()))),
+        cache_hits=int(round(float(r.cache_hits[0].mean()))),
+        final_honest_mean=float(r.final_honest_mean[0].mean()),
+    )
+
+
+def simulate_replicated_batched(
+    p: SimParams, replication: int = 3, seeds=range(8),
+    sampler: str = "fast",
+) -> SimResult:
+    """Multi-seed replicated baseline via the batched engine."""
+    from repro.core import scenarios as SC
+
+    r = SC.run_replicated_grid(
+        [SC.from_simparams(p, replication=replication)], seeds=seeds,
+        sampler=sampler)
+    return SimResult(
+        repair_traffic_units=float(r.repair_traffic_units[0].mean()),
+        lost_objects=int(round(float(r.lost_objects[0].mean()))),
+        n_objects=p.n_objects,
+        repairs=int(round(float(r.repairs[0].mean()))),
+        cache_hits=0,
+        final_honest_mean=float(r.final_honest_mean[0].mean()),
+    )

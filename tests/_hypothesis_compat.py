@@ -1,0 +1,130 @@
+"""Minimal seeded stand-in for ``hypothesis`` when it isn't installed.
+
+The property tests import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Covers exactly the API surface those tests use — ``given`` (positional and
+keyword strategies), ``settings(max_examples=..., deadline=...)``, and
+``strategies.integers / lists / sampled_from / booleans / floats`` with
+``.map``. Examples are drawn from a ``numpy.random`` generator seeded from
+the test's qualified name, so runs are deterministic; example 0 is each
+strategy's minimal value to keep edge cases covered without shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, sample, minimal):
+        self._sample = sample
+        self._minimal = minimal
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._sample(rng)),
+                        lambda: f(self._minimal()))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value,
+                                         endpoint=True, dtype=np.int64)),
+            lambda: int(min_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0):
+        return Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            lambda: float(min_value))
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: bool(rng.integers(0, 2)), lambda: False)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size, endpoint=True))
+            return [elements.sample(rng) for _ in range(size)]
+
+        return Strategy(
+            sample, lambda: [elements.minimal()] * max(min_size, 0))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                        lambda: seq[0])
+
+
+st = strategies
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording the example budget (deadline etc. ignored)."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Run the test once per generated example (seeded, deterministic)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_compat_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            seed = zlib.adler32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(max_examples):
+                if i == 0:
+                    pos = [s.minimal() for s in pos_strategies]
+                    kw = {n: s.minimal() for n, s in kw_strategies.items()}
+                else:
+                    rng = np.random.default_rng((seed, i))
+                    pos = [s.sample(rng) for s in pos_strategies]
+                    kw = {n: s.sample(rng) for n, s in kw_strategies.items()}
+                try:
+                    fn(*args, *pos, **{**kwargs, **kw})
+                except Exception as e:  # noqa: BLE001 - annotate + re-raise
+                    raise AssertionError(
+                        f"falsifying example (#{i}): args={pos} "
+                        f"kwargs={kw}: {e}") from e
+
+        # hide the strategy-supplied parameters from pytest's fixture
+        # resolution: like hypothesis, positional strategies fill the
+        # RIGHTMOST parameters (leading ones stay available for fixtures,
+        # matching the fn(*fixtures, *examples) call above)
+        params = list(inspect.signature(fn).parameters.values())
+        if pos_strategies:
+            params = params[:-len(pos_strategies)]
+        remaining = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

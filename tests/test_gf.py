@@ -1,7 +1,10 @@
 """GF(256)/GF(2) arithmetic: field axioms (property-based) + path equality."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI installs hypothesis; local runs may lack it
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import gf
 

@@ -1,7 +1,10 @@
 """Rateless codes: roundtrip properties, overhead ε, failure modes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI installs hypothesis; local runs may lack it
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.rateless import InsufficientFragments, LTCode, RLNC
 

@@ -2,14 +2,16 @@
 multi-device subprocess check that the sharded loss equals single-device."""
 import jax
 import numpy as np
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.distributed import sharding as shd
 from repro.models import cache_specs, init_cache, init_params, param_specs
 
-MESH_SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MESH_MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# shd.abstract_mesh handles both the jax>=0.5 (sizes, names) signature and
+# the 0.4.x shape_tuple signature
+MESH_SINGLE = shd.abstract_mesh((16, 16), ("data", "model"))
+MESH_MULTI = shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_resolve_divisibility_fallbacks():
