@@ -35,7 +35,7 @@ def run():
     mc = SC.run_grid([dict(
         n_objects=200 if quick else 400, byz_fraction=1 / 3,
         churn_per_year=26.0, step_hours=12.0 if quick else 6.0,
-        years=mc_years)], seeds=SEEDS, sampler="fast")
+        years=mc_years)], seeds=SEEDS, sampler="arx")
     rows.append({
         "model": "monte-carlo", "config": f"(32,80) {mc_years:g}y",
         "init_absorb": "", "hoeffding": "",
@@ -49,7 +49,7 @@ def run():
     tg = SC.targeted_grid(
         [dict(n_objects=1000, n_chunks=14, k_outer=8, byz_fraction=1 / 3,
               attack_frac=phi / 100_000, n_nodes=100_000) for phi in phis],
-        seeds=SEEDS)
+        seeds=SEEDS, chunk_size=12)
     for i, phi_nodes in enumerate(phis):
         phi_groups = D.attacker_groups(phi_nodes, n=80, k=32)
         bound = D.targeted_attack_bound(8, 6, omega=1000,

@@ -1,54 +1,42 @@
-"""Batched scenario engine vs per-cell Python loop: wall-clock for a
-Fig. 4/6-style sweep (cells × seeds) through (a) one batched ``run_grid``
-dispatch and (b) the numpy reference looped one ``(params, seed)`` point at
-a time.
+"""Scenario-engine throughput study: sampler × chunk-size × device-axis.
 
-Two regimes are timed: a parameter-grid sweep over many small cells (the
-scenario-exploration workload the engine exists for — Python loop overhead
-dominates the reference) and a medium-sized Fig. 4 cell block. Compile time
-is reported separately; on accelerators the dispatch gap widens further.
+For each workload (a many-small-cell parameter grid and a medium Fig. 4
+cell block — the same two regimes PR 1 measured) this times:
+
+* every sampler in ``repro.core.samplers.SAMPLERS`` (exact / fast / arx),
+* the best sampler with chunked dispatch,
+* the best sampler sharded over local devices (only when the process has
+  more than one — e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=2``),
+
+reporting **compile time separately from steady-state run time** (the
+first dispatch pays jit compile; timed runs are all warm) plus derived
+``steps/s`` (batch-element time steps per second) and ``samples/s``
+(binomial draws per second: 3 draws × groups per element-step — the
+engine's sampler workload), so sampler improvements are directly
+comparable across PRs. The per-cell numpy reference loop from
+``simulation.py`` is timed once per workload as the baseline.
+
+Emits ``results/bench/engine_speed.csv`` (full table) and
+``results/bench/BENCH_engine_speed.json`` — the machine-readable
+trajectory point future PRs diff against.
 """
 from __future__ import annotations
 
+import json
 import time
 
-from benchmarks.common import SCALE, emit
+import jax
+
+from benchmarks.common import RESULTS, SCALE, emit
 from repro.core import scenarios as SC
 from repro.core import simulation as S
+from repro.core.samplers import SAMPLERS
 
 SEEDS = tuple(range(8))
+REPS = 3  # steady-state timing: best of REPS warm dispatches
 
 
-def _time_pair(name: str, cells: list[dict]) -> dict:
-    t0 = time.time()
-    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
-    t_compile = time.time() - t0
-    t0 = time.time()
-    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
-    t_engine = time.time() - t0
-
-    t0 = time.time()
-    for c in cells:
-        for s in SEEDS:
-            S.simulate_vault(S.SimParams(seed=s, **{
-                k: v for k, v in c.items()
-                if k in ("n_objects", "n_chunks", "k_outer", "k_inner",
-                         "r_inner", "n_nodes", "byz_fraction",
-                         "churn_per_year", "cache_ttl_hours", "step_hours",
-                         "years")}))
-    t_loop = time.time() - t0
-    lost_m, _ = SC.mean_ci(res.lost_fraction)
-    return {
-        "regime": name, "cells": len(cells), "seeds": len(SEEDS),
-        "engine_s": round(t_engine, 2),
-        "engine_compile_s": round(t_compile - t_engine, 2),
-        "python_loop_s": round(t_loop, 2),
-        "speedup": round(t_loop / max(t_engine, 1e-9), 2),
-        "mean_lost": round(float(lost_m.mean()), 4),
-    }
-
-
-def run():
+def _workloads():
     quick = SCALE == "quick"
     years = 0.5 if quick else 1.0
     # many small cells: (byz x R) grid, the scenario-sweep workload
@@ -62,10 +50,96 @@ def run():
                  cache_ttl_hours=ttl, n_nodes=20_000, step_hours=12.0,
                  years=years)
             for ttl in (0.0, 24.0, 48.0)]
-    rows = [_time_pair("grid-18cells", grid), _time_pair("fig4-3cells", fig4)]
+    return [("grid-18cells", grid), ("fig4-3cells", fig4)]
+
+
+def _work_units(cells) -> tuple[int, int]:
+    """(element-steps, binomial samples) of useful work in one dispatch."""
+    steps = samples = 0
+    for c in cells:
+        sc = SC.make_scenario(**c)
+        g = int(sc.n_objects) * int(sc.n_chunks)
+        steps += int(sc.steps) * len(SEEDS)
+        samples += int(sc.steps) * 3 * g * len(SEEDS)
+    return steps, samples
+
+
+def _time_engine(name, cells, sampler, chunk=None, devices=None):
+    kw = dict(seeds=SEEDS, sampler=sampler, chunk_size=chunk,
+              devices=devices)
+    t0 = time.time()
+    res = SC.run_grid(cells, **kw)
+    t_first = time.time() - t0
+    ts = []
+    for _ in range(REPS):
+        t0 = time.time()
+        res = SC.run_grid(cells, **kw)
+        ts.append(time.time() - t0)
+    t = min(ts)
+    steps, samples = _work_units(cells)
+    lost_m, _ = SC.mean_ci(res.lost_fraction)
+    return {
+        "regime": name, "sampler": sampler,
+        "chunk": chunk or "", "devices": devices or 1,
+        "cells": len(cells), "seeds": len(SEEDS),
+        "engine_s": round(t, 3),
+        "compile_s": round(max(t_first - t, 0.0), 2),
+        "steps_per_s": int(steps / t),
+        "samples_per_s": int(samples / t),
+        "mean_lost": round(float(lost_m.mean()), 4),
+    }
+
+
+def _time_python_loop(cells) -> float:
+    t0 = time.time()
+    for c in cells:
+        for s in SEEDS:
+            S.simulate_vault(S.SimParams(seed=s, **{
+                k: v for k, v in c.items()
+                if k in ("n_objects", "n_chunks", "k_outer", "k_inner",
+                         "r_inner", "n_nodes", "byz_fraction",
+                         "churn_per_year", "cache_ttl_hours", "step_hours",
+                         "years")}))
+    return time.time() - t0
+
+
+def run():
+    n_dev = jax.local_device_count()
+    rows = []
+    for name, cells in _workloads():
+        t_loop = _time_python_loop(cells)
+        variants = [dict(sampler=s) for s in SAMPLERS]
+        variants.append(dict(sampler="arx", chunk=48))
+        if n_dev > 1:
+            variants.append(dict(sampler="arx", devices=n_dev))
+        for v in variants:
+            row = _time_engine(name, cells, **v)
+            row["python_loop_s"] = round(t_loop, 2)
+            row["speedup_vs_loop"] = round(t_loop / row["engine_s"], 1)
+            rows.append(row)
     emit("engine_speed", rows)
-    print(f"  -> one dispatch vs python loop: "
-          f"{rows[0]['speedup']}x on the {rows[0]['cells']}-cell grid")
+
+    best = {}
+    for name, _ in _workloads():
+        cand = [r for r in rows if r["regime"] == name]
+        best[name] = max(cand, key=lambda r: r["steps_per_s"])
+    point = {
+        "bench": "engine_speed", "scale": SCALE, "devices": n_dev,
+        "headline": {k: {kk: v[kk] for kk in
+                         ("sampler", "chunk", "engine_s", "compile_s",
+                          "steps_per_s", "samples_per_s", "python_loop_s",
+                          "speedup_vs_loop")}
+                     for k, v in best.items()},
+        "rows": rows,
+    }
+    path = RESULTS / "BENCH_engine_speed.json"
+    with open(path, "w") as f:
+        json.dump(point, f, indent=1)
+    hb = best["grid-18cells"]
+    print(f"  -> best {hb['sampler']}: {hb['engine_s']}s steady "
+          f"({hb['steps_per_s']:,} steps/s, {hb['samples_per_s']:,} "
+          f"samples/s; compile {hb['compile_s']}s excluded); "
+          f"python loop {hb['python_loop_s']}s -> {hb['speedup_vs_loop']}x")
     return rows
 
 

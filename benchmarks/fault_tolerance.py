@@ -28,12 +28,12 @@ def run():
     cells = [dict(n_objects=n_obj, byz_fraction=f, churn_per_year=26.0,
                   k_inner=k, r_inner=r, step_hours=step_hours, years=years)
              for f in byz_sweep for (k, r) in INNER_CONFIGS]
-    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="arx", chunk_size=64)
     mean, ci = SC.mean_ci(res.lost_fraction)
     repl = SC.run_replicated_grid(
         [dict(n_objects=n_obj, byz_fraction=f, churn_per_year=26.0,
               step_hours=step_hours, years=years) for f in byz_sweep],
-        seeds=SEEDS, sampler="fast")
+        seeds=SEEDS, sampler="arx")
     rmean, _ = SC.mean_ci(repl.lost_fraction)
     for i, f in enumerate(byz_sweep):
         row = {"sweep": "byzantine", "x": f}
@@ -47,7 +47,7 @@ def run():
     tcells = [dict(n_objects=n_obj, n_chunks=n_chunks, k_outer=k_outer,
                    byz_fraction=1 / 3, attack_frac=phi)
               for phi in atk_sweep for (n_chunks, k_outer) in OUTER_CONFIGS]
-    tg = SC.targeted_grid(tcells, seeds=SEEDS)
+    tg = SC.targeted_grid(tcells, seeds=SEEDS, chunk_size=72)
     tmean, _ = SC.mean_ci(tg)
     from repro.core import simulation as S
     for i, phi in enumerate(atk_sweep):

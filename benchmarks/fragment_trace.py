@@ -23,7 +23,7 @@ def run():
     cells = [dict(k_inner=k, r_inner=r, byz_fraction=1 / 3,
                   churn_per_year=26.0, step_hours=6.0, years=years)
              for k, r in CONFIGS]
-    traces = SC.trace_grid(cells, seeds=SEEDS)  # [config, seed, steps]
+    traces = SC.trace_grid(cells, seeds=SEEDS, sampler="arx")  # [config, seed, steps]
     rows = []
     for i, (k, r) in enumerate(CONFIGS):
         tr = traces[i]  # [seeds, steps]

@@ -31,11 +31,11 @@ def run():
     cells = [dict(n_objects=n_obj, churn_per_year=base_churn,
                   cache_ttl_hours=ttl, **common)
              for n_obj in n_objects_sweep for ttl in TTLS]
-    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="arx", chunk_size=64)
     mean, ci = SC.mean_ci(res.repair_traffic_units)
     repl = SC.run_replicated_grid(
         [dict(n_objects=n_obj, churn_per_year=base_churn, **common)
-         for n_obj in n_objects_sweep], seeds=SEEDS, sampler="fast")
+         for n_obj in n_objects_sweep], seeds=SEEDS, sampler="arx")
     rmean, rci = SC.mean_ci(repl.repair_traffic_units)
     for i, n_obj in enumerate(n_objects_sweep):
         row = {"sweep": "objects", "x": n_obj, "churn": base_churn}
@@ -50,11 +50,11 @@ def run():
     cells = [dict(n_objects=n_objects_sweep[0], churn_per_year=churn,
                   cache_ttl_hours=ttl, **common)
              for churn in churn_sweep for ttl in TTLS]
-    res = SC.run_grid(cells, seeds=SEEDS, sampler="fast")
+    res = SC.run_grid(cells, seeds=SEEDS, sampler="arx", chunk_size=64)
     mean, ci = SC.mean_ci(res.repair_traffic_units)
     repl = SC.run_replicated_grid(
         [dict(n_objects=n_objects_sweep[0], churn_per_year=churn, **common)
-         for churn in churn_sweep], seeds=SEEDS, sampler="fast")
+         for churn in churn_sweep], seeds=SEEDS, sampler="arx")
     rmean, rci = SC.mean_ci(repl.repair_traffic_units)
     for i, churn in enumerate(churn_sweep):
         row = {"sweep": "churn", "x": churn, "churn": churn}

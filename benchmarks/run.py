@@ -5,6 +5,7 @@
 """
 from __future__ import annotations
 
+import os
 import time
 import traceback
 
@@ -33,8 +34,12 @@ def main() -> int:
         ("engine_speed", engine_speed.run),
         ("roofline", roofline.run),
     ]
+    skip = {s for s in os.environ.get("BENCH_SKIP", "").split(",") if s}
     failures = 0
     for name, fn in suites:
+        if any(s in name for s in skip):
+            print(f"[skip] {name} (BENCH_SKIP)")
+            continue
         t0 = time.time()
         try:
             fn()

@@ -100,7 +100,7 @@ cells = [
     ("targeted greedy-kill", dict(base, adv_policy="targeted",
                                   attack_frac=0.2, attack_step=180)),
 ]
-res = SC.run_grid([c for _, c in cells], seeds=range(8), sampler="fast")
+res = SC.run_grid([c for _, c in cells], seeds=range(8), sampler="arx")
 lost_m, lost_ci = SC.mean_ci(res.lost_fraction)
 traf_m, traf_ci = SC.mean_ci(res.repair_traffic_units)
 print("\nbatched engine sweep (100 objects x 6 months, 8 seeds/scenario):")

@@ -43,22 +43,60 @@ reference semantics (repair.py docstring / Fig. 4).
 Public API:
 
 * ``make_scenario(**kw)`` / ``from_simparams(p)`` — build one scenario cell;
-* ``run_grid(cells, seeds)`` — ONE dispatch over cells × seeds, returns a
-  ``ScenarioResult`` of ``[n_cells, n_seeds]`` arrays;
+* ``run_grid(cells, seeds)`` — chunked batched dispatch over cells × seeds,
+  returns a ``ScenarioResult`` of ``[n_cells, n_seeds]`` arrays;
 * ``run_replicated_grid(cells, seeds)`` — Ceph-like baseline, same churn;
 * ``trace_grid(cells, seeds)`` — Fig. 5 per-step honest-fragment traces;
 * ``targeted_grid(cells, seeds)`` — Fig. 6-bottom static attack sweep;
 * ``mean_ci(x)`` — per-cell mean and 95% CI over the seed axis.
+
+Performance knobs
+-----------------
+
+The grid runners expose three throughput knobs (benchmarked by
+``benchmarks/engine_speed.py``; numbers below are the 2-core CPU host the
+repo is tuned on):
+
+* ``sampler=`` — ``"exact"`` (reference ``jax.random.binomial``),
+  ``"fast"`` (threefry uniforms + inverse-CDF/Gaussian hybrid, ~3×), or
+  ``"arx"`` (counter-based ARX uniforms reusing the ``kernels/prf_select``
+  PRF, no per-step key hashing, ~4× over ``fast``). See
+  ``repro/core/samplers.py`` for the validated error budgets. Benchmarks
+  default to ``"arx"``; the API default stays ``"exact"`` so ad-hoc calls
+  are reference-faithful.
+* ``chunk_size=`` — split the flat ``cells × seeds`` batch into fixed-size
+  chunks dispatched sequentially through ONE compiled executable (the jit
+  cache is keyed on the padded maxima + chunk shape, and chunk inputs are
+  donated). Keeps device memory flat on paper-scale sweeps and stops
+  recompiles from dominating when many same-shaped sweeps run in one
+  process. ``None`` = single dispatch (PR 1 behavior). Chunking is
+  bit-for-bit neutral: every element's randomness derives only from its
+  own ``(scenario, seed)``.
+* ``devices=`` — shard each chunk over this many local JAX devices with
+  ``pmap`` (e.g. multiple CPU host devices via
+  ``--xla_force_host_platform_device_count``, or real accelerators).
+  ``None``/``1`` = no device axis. ``chunk_size`` is rounded up to a
+  multiple of ``devices``.
+
+The scan body itself is tuned for CPU: per-cell constants (failure
+probabilities, refill rates, key material, active masks, unit costs) are
+hoisted out of the scan, each step derives all of its churn/attack/repair
+stream keys from one fused ``Sampler.streams`` call, state stays float32
+end-to-end, and the scan is unrolled (``unroll=2``) to amortize loop
+overhead.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import warnings
+from typing import Any, NamedTuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.samplers import SAMPLERS, Sampler
 
 HOURS_PER_YEAR = 24 * 365.0
 
@@ -74,6 +112,15 @@ ADVERSARY_POLICIES = {
 }
 
 N_REGIONS = 16  # regional-burst fault domains (racks/AZs)
+
+_UNROLL = 2  # scan unroll factor (see "Performance knobs")
+
+
+def _default_unroll(sampler: str) -> int:
+    # unrolling doubles the traced body: worth ~2x runtime for the compact
+    # fast/arx pipelines, but the exact rejection sampler's graph is huge
+    # and compile-bound — keep it rolled
+    return 1 if sampler == "exact" else _UNROLL
 
 
 class Scenario(NamedTuple):
@@ -131,6 +178,12 @@ def make_scenario(
         churn_policy = CHURN_POLICIES[churn_policy]
     if isinstance(adv_policy, str):
         adv_policy = ADVERSARY_POLICIES[adv_policy]
+    if r_inner >= 256 or replication >= 256:
+        # the fast samplers compute (1-p)^n by 8-bit square-and-multiply
+        # (samplers.pow_int) — beyond n=255 they would be silently wrong
+        raise ValueError(
+            f"r_inner={r_inner} / replication={replication} exceed the "
+            "sampler domain (< 256); see repro/core/samplers.pow_int")
     if steps is None:
         steps = int(round(years * HOURS_PER_YEAR / step_hours))
     return Scenario(
@@ -165,86 +218,43 @@ def from_simparams(p, **overrides) -> Scenario:
 
 
 # --------------------------------------------------------------- primitives
-def _binom(key, n, p):
-    """Exact binomial sample; safe for n == 0 and p ∈ {0, 1}."""
-    return jax.random.binomial(key, jnp.maximum(n, 0.0),
-                               jnp.clip(p, 0.0, 1.0))
-
-
-_FAST_J = 12          # inverse-CDF terms; exact for means up to _FAST_CUT
-_FAST_CUT = 3.0       # truncation tail P(X > 12 | m = 3) ~ 2e-5
-
-
-def _binom_fast(key, n, p):
-    """Fast binomial: exact truncated inverse-CDF for small means, Gaussian
-    approximation above ``_FAST_CUT`` (where ``σ ≥ 2.3`` and the rounding
-    bias is negligible).
-
-    ``jax.random.binomial``'s rejection sampler runs at ~6M samples/s on
-    CPU — it dominates sweep cost. The churn/repair regime of these
-    simulations has ``n·p ≲ 2``, where the unrolled CDF recurrence
-    ``pmf_{j+1} = pmf_j (n-j)/(j+1) · p/(1-p)`` is exact (up to the ~2e-5
-    truncation tail at the cutover mean) and several times faster. Selected
-    by the static ``sampler="fast"`` argument of the grid runners;
-    ``"exact"`` keeps the reference sampler.
-    """
-    n = jnp.maximum(n, 0.0)
-    p = jnp.clip(p, 0.0, 1.0)
-    m = n * p
-    # small-mean branch: X = #{j : u > cdf_j}, capped by J and n
-    u = jax.random.uniform(key, jnp.shape(m), minval=1e-7, maxval=1.0 - 1e-7)
-    r = p / jnp.maximum(1.0 - p, 1e-12)
-    pmf = jnp.exp(n * jnp.log1p(-jnp.minimum(p, 1.0 - 1e-7)))
-    cdf = pmf
-    cnt = (u > cdf).astype(jnp.float32)
-    for j in range(_FAST_J - 1):
-        pmf = pmf * ((n - j) / (j + 1.0)) * r
-        cdf = cdf + jnp.maximum(pmf, 0.0)
-        cnt = cnt + (u > cdf)
-    small = jnp.minimum(cnt, n)
-    # large-mean branch: clipped rounded Gaussian, with a logistic-probit
-    # z from the same uniform (one log instead of erfinv — the branch is
-    # already an approximation, ~2% CDF error is immaterial and it halves
-    # the sampler's transcendental budget)
-    s = jnp.sqrt(jnp.maximum(m * (1.0 - p), 1e-12))
-    z = jnp.log(u / (1.0 - u)) * 0.5513
-    big = jnp.clip(jnp.round(m + s * z), 0.0, n)
-    return jnp.where(m <= _FAST_CUT, small, big)
-
-
-SAMPLERS = {"exact": _binom, "fast": _binom_fast}
-
-
 def _p_fail_step(sc: Scenario) -> jnp.ndarray:
     """Per-step per-node failure probability from the Poisson churn rate."""
     return -jnp.expm1(-sc.churn_per_year / HOURS_PER_YEAR * sc.step_hours)
 
 
-def _churn_prob(sc: Scenario, key, gidx) -> jnp.ndarray:
-    """Per-group failure probability [G] under the selected churn policy.
+def _burst_draw(smp: Sampler, sc: Scenario, key):
+    """Regional-burst coin for one step: (burst?, hit region index).
 
-    Policy selection is a ``where`` blend rather than ``lax.switch``: under
-    ``vmap`` a batched-index switch is dramatically slower than computing
-    both (cheap) branches, and the blend keeps the sampler fusable.
+    Two scalar uniforms per element; the actual boosted thinning runs as a
+    *second* binomial pass behind a ``lax.cond`` (see ``_burst_thin``), so
+    i.i.d.-only batches never pay for it and the base churn draw keeps a
+    scalar ``p`` (see ``samplers.binom_from_uniform``).
     """
-    base = _p_fail_step(sc)
-    kb, kr = jax.random.split(key)
+    u = smp.uniform(key, (2,))
     regional = sc.churn_policy == CHURN_REGIONAL
-    burst = regional & (jax.random.uniform(kb) < sc.burst_prob)
-    region = jax.random.randint(kr, (), 0, N_REGIONS)
-    hit = (gidx % N_REGIONS) == region
-    boosted = jnp.minimum(base * sc.burst_mult, 0.95)
-    return jnp.where(burst & hit, boosted, jnp.full(gidx.shape, base))
+    burst = regional & (u[0] < sc.burst_prob)
+    region = jnp.minimum((u[1] * N_REGIONS).astype(jnp.int32), N_REGIONS - 1)
+    return burst, region
 
 
-def _targeted_kill(sc: Scenario, key, honest, alive):
+def _p_extra(sc: Scenario, p_base):
+    """Exact boost-thinning probability: thinning survivors of a
+    ``p_base`` pass with ``p_extra`` equals one ``min(p_base*mult, .95)``
+    pass (binomial thinning composition)."""
+    boosted = jnp.minimum(p_base * sc.burst_mult, 0.95)
+    return jnp.clip((boosted - p_base)
+                    / jnp.maximum(1.0 - p_base, 1e-9), 0.0, 1.0)
+
+
+def _targeted_kill(smp: Sampler, sc: Scenario, key, honest, alive):
     """Greedy cheapest-groups-first kill mask (A.3 cost model)."""
     cost = jnp.maximum(honest - sc.k_inner + 1.0, 0.0)
     cost = cost / jnp.maximum(sc.frags_per_node, 1.0)
     cost = jnp.where(alive, cost, jnp.inf)
     # random tiebreak: equal-cost groups are indistinguishable behind the
     # outer code's opacity (same argument as targeted_attack_vault)
-    tie = jax.random.uniform(key, cost.shape) * 1e-3
+    tie = smp.uniform(key, cost.shape) * 1e-3
     order = jnp.argsort(cost + tie)
     csum = jnp.cumsum(cost[order])
     budget = sc.attack_frac * sc.n_nodes
@@ -259,83 +269,126 @@ class _Static(NamedTuple):
     max_steps: int
 
 
-def _vault_init(st: _Static, sampler: str, sc: Scenario):
-    """Per-element initial state (vmapped over the batch)."""
+class _Inv(NamedTuple):
+    """Per-element scan invariants, hoisted out of the step body."""
+
+    base: Any              # sampler key carrier
+    active: jnp.ndarray    # [G] bool: group is real, not padding
+    p_fail: jnp.ndarray    # i.i.d. per-step failure probability
+    refill_p: jnp.ndarray  # byzantine refill probability during repair
+    frag_units: jnp.ndarray
+    chunk_units: jnp.ndarray
+    n_groups: jnp.ndarray  # float active-group count (alive-frac denom)
+
+
+def _vault_init(st: _Static, smp: Sampler, sc: Scenario):
+    """Per-element invariants + initial state (vmapped over the batch)."""
     G = st.max_groups
     gidx = jnp.arange(G, dtype=jnp.int32)
     active = gidx < sc.n_objects * sc.n_chunks
-    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
-    k_init, _ = jax.random.split(base)
-    byz0 = SAMPLERS[sampler](k_init, jnp.where(active, sc.r_inner, 0.0),
-                             jnp.full((G,), sc.byz_fraction))
+    base = smp.base(sc.seed)
+    inv = _Inv(
+        base=base,
+        active=active,
+        p_fail=_p_fail_step(sc),
+        refill_p=jnp.where(
+            sc.adv_policy == ADV_ADAPTIVE,
+            jnp.clip(sc.byz_fraction * sc.adapt_boost, 0.0, 0.95),
+            sc.byz_fraction),
+        frag_units=1.0 / (sc.k_outer * sc.k_inner),
+        chunk_units=1.0 / sc.k_outer,
+        n_groups=jnp.maximum(sc.n_objects * sc.n_chunks, 1).astype(
+            jnp.float32),
+    )
+    (k_init,) = smp.streams(smp.fold(base, 0), 1)
+    byz0 = smp.binom(k_init, jnp.where(active, sc.r_inner, 0.0),
+                     sc.byz_fraction)
     honest0 = jnp.where(active, sc.r_inner - byz0, 0.0)
     alive0 = active & (honest0 >= sc.k_inner)
     cache0 = jnp.zeros(G)  # client seeds caches at store time (t=0)
-    return (honest0, byz0, alive0, cache0, 0.0, 0.0, 0.0, jnp.inf, 0.0)
+    state = (honest0, byz0, alive0, cache0, 0.0, 0.0, 0.0, jnp.inf, 0.0)
+    return inv, state
 
 
-def _vault_churn(st: _Static, sampler: str, sc: Scenario, state, t):
-    """Per-element churn half-step: thin members, return repair keys."""
-    sample = SAMPLERS[sampler]
-    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
-    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
-    kt = jax.random.fold_in(base, t + 1)
-    kc, kb, kr, kp, ka = jax.random.split(kt, 5)
+def _vault_churn(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
+                 state, t):
+    """Per-element churn half-step: thin members with the *scalar* i.i.d.
+    probability, return burst coordinates + repair/attack/burst keys."""
+    kt = smp.fold(inv.base, t + 1)
+    kc, kb, kp, kr, ka, kxh, kxb = smp.streams(kt, 7)
     honest, byz = state[0], state[1]
-    p_fail = _churn_prob(sc, kp, gidx)
     # adaptive adversary: byzantine members never leave voluntarily
     adaptive = sc.adv_policy == ADV_ADAPTIVE
-    p_fail_b = jnp.where(adaptive, 0.0, p_fail)
-    h = honest - sample(kc, honest, p_fail)
-    b = byz - sample(kb, byz, p_fail_b)
-    return h, b, kr, ka
+    p_fail_b = jnp.where(adaptive, 0.0, inv.p_fail)
+    h = honest - smp.binom(kc, honest, inv.p_fail)
+    b = byz - smp.binom(kb, byz, p_fail_b)
+    burst, region = _burst_draw(smp, sc, kp)
+    return h, b, burst, region, (kxh, kxb), kr, ka
 
 
-def _vault_attack(sc: Scenario, h, alive, ka):
+def _burst_thin(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
+                h, b, burst, region, kx):
+    """Per-element regional-burst second thinning (traced inside a cond:
+    only executed on steps where some element actually bursts)."""
+    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
+    p_extra = _p_extra(sc, inv.p_fail)
+    adaptive = sc.adv_policy == ADV_ADAPTIVE
+    hit = burst & ((gidx % N_REGIONS) == region)
+    dh = smp.binom(kx[0], h, p_extra)
+    db = smp.binom(kx[1], b, jnp.where(adaptive, 0.0, p_extra))
+    return h - jnp.where(hit, dh, 0.0), b - jnp.where(hit, db, 0.0)
+
+
+def _vault_attack(smp: Sampler, sc: Scenario, h, alive, ka):
     """Per-element targeted greedy kill (only traced inside the cond)."""
     attack = sc.adv_policy == ADV_TARGETED
-    kill = _targeted_kill(sc, ka, h, alive)
+    kill = _targeted_kill(smp, sc, ka, h, alive)
     return jnp.where(attack & kill, jnp.minimum(h, sc.k_inner - 1.0), h)
 
 
-def _vault_repair(st: _Static, sampler: str, sc: Scenario, state, h, b, kr, t):
-    """Per-element repair + traffic half-step."""
-    sample = SAMPLERS[sampler]
-    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
-    active = gidx < sc.n_objects * sc.n_chunks
+def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
+                  inv: _Inv, state, h, b, kr, t):
+    """Per-element repair + traffic half-step.
+
+    Compiled twice — ``with_cache`` True (PR 1 semantics, per-element TTL
+    blend) and False (all TTLs zero: no warm/miss bookkeeping at all) —
+    and selected by a batch-level ``lax.cond``, so cache-free sweeps skip
+    the extra [G]-wide selects and reductions entirely.
+    """
     _, _, alive, cache_t, traffic, repairs, hits, hmin, mmax = state
     now = (t + 1.0) * sc.step_hours
-    frag_units = 1.0 / (sc.k_outer * sc.k_inner)
-    chunk_units = 1.0 / sc.k_outer
-    # adaptive adversary floods refills at adapt_boost x population share
-    refill_p = jnp.where(
-        sc.adv_policy == ADV_ADAPTIVE,
-        jnp.clip(sc.byz_fraction * sc.adapt_boost, 0.0, 0.95),
-        sc.byz_fraction)
 
     a = alive & (h >= sc.k_inner)  # decode impossible => absorbing
     deficit = jnp.maximum(jnp.where(a, sc.r_inner - (h + b), 0.0), 0.0)
-    new_b = sample(kr, deficit, jnp.full_like(deficit, refill_p))
+    new_b = smp.binom(kr, deficit, inv.refill_p)
     h = h + (deficit - new_b)
     b = b + new_b
 
-    has_cache = sc.cache_ttl_hours > 0.0
-    warm = (now - cache_t) <= sc.cache_ttl_hours
-    hit_frags = jnp.where(warm, deficit, jnp.maximum(deficit - 1.0, 0.0))
-    miss_pulls = jnp.where(~warm & (deficit > 0), 1.0, 0.0)
-    t_cached = hit_frags.sum() * frag_units + miss_pulls.sum() * chunk_units
-    t_plain = deficit.sum() * sc.k_inner * frag_units
-    new_cache = jnp.where(has_cache & (miss_pulls > 0), now, cache_t)
+    t_plain = deficit.sum() * sc.k_inner * inv.frag_units
+    if with_cache:
+        has_cache = sc.cache_ttl_hours > 0.0
+        warm = (now - cache_t) <= sc.cache_ttl_hours
+        hit_frags = jnp.where(warm, deficit, jnp.maximum(deficit - 1.0, 0.0))
+        miss_pulls = jnp.where(~warm & (deficit > 0), 1.0, 0.0)
+        t_cached = (hit_frags.sum() * inv.frag_units
+                    + miss_pulls.sum() * inv.chunk_units)
+        new_cache = jnp.where(has_cache & (miss_pulls > 0), now, cache_t)
+        traffic_add = jnp.where(has_cache, t_cached, t_plain)
+        hits_add = jnp.where(has_cache, hit_frags.sum(), 0.0)
+    else:
+        new_cache = cache_t
+        traffic_add = t_plain
+        hits_add = 0.0
 
     new_state = (
         h, b, a, new_cache,
-        traffic + jnp.where(has_cache, t_cached, t_plain),
+        traffic + traffic_add,
         repairs + deficit.sum(),
-        hits + jnp.where(has_cache, hit_frags.sum(), 0.0),
+        hits + hits_add,
         jnp.minimum(hmin, jnp.where(a, h, jnp.inf).min()),
-        jnp.maximum(mmax, jnp.where(active, h + b, 0.0).max()),
+        jnp.maximum(mmax, jnp.where(inv.active, h + b, 0.0).max()),
     )
-    alive_frac = a.sum() / jnp.maximum(sc.n_objects * sc.n_chunks, 1)
+    alive_frac = a.sum() / inv.n_groups
     return new_state, alive_frac
 
 
@@ -368,42 +421,65 @@ def _where_on(on, new, old):
 
 
 @functools.lru_cache(maxsize=None)
-def _vault_batch(st: _Static, sampler: str):
+def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
+                 pmapped: bool = False):
     """Compile the batched engine: one lax.scan over time whose body is
     vmapped over the batch. (scan-of-vmap, not vmap-of-scan, so the
     targeted-attack sort can sit behind a real lax.cond and only execute
     on actual attack steps instead of being select-ed every step.)
+
+    The cache key is ``(padded maxima, sampler, unroll, pmapped)``; jit's
+    own executable cache then keys on the batch shape, so fixed-size
+    chunked dispatch reuses one compiled executable for every chunk. Chunk
+    inputs are donated (``donate_argnums``) so buffers are recycled
+    between chunks and device memory stays flat.
     """
-    churn = jax.vmap(functools.partial(_vault_churn, st, sampler),
-                     in_axes=(0, 0, None))
-    attack = jax.vmap(_vault_attack)
-    repair = jax.vmap(functools.partial(_vault_repair, st, sampler),
-                      in_axes=(0, 0, 0, 0, 0, None))
+    smp = SAMPLERS[sampler]
+    churn = jax.vmap(functools.partial(_vault_churn, st, smp),
+                     in_axes=(0, 0, 0, None))
+    burst_thin = jax.vmap(functools.partial(_burst_thin, st, smp))
+    attack = jax.vmap(functools.partial(_vault_attack, smp))
+    repair_cache = jax.vmap(functools.partial(_vault_repair, st, smp, True),
+                            in_axes=(0, 0, 0, 0, 0, 0, None))
+    repair_plain = jax.vmap(functools.partial(_vault_repair, st, smp, False),
+                            in_axes=(0, 0, 0, 0, 0, 0, None))
 
     def run(scb: Scenario):
-        init = jax.vmap(functools.partial(_vault_init, st, sampler))(scb)
+        inv, init = jax.vmap(functools.partial(_vault_init, st, smp))(scb)
+        cache_any = (scb.cache_ttl_hours > 0.0).any()
 
         def body(state, t):
-            h, b, kr, ka = churn(scb, state, t)
+            h, b, burst, region, kx, kr, ka = churn(scb, inv, state, t)
+            h, b = jax.lax.cond(
+                burst.any(),
+                lambda args: burst_thin(scb, inv, *args),
+                lambda args: (args[0], args[1]),
+                (h, b, burst, region, kx))
             hit_now = (scb.adv_policy == ADV_TARGETED) & (t == scb.attack_step)
             h = jax.lax.cond(
                 hit_now.any(),
                 lambda args: jnp.where(hit_now[:, None],
                                        attack(scb, *args), args[0]),
                 lambda args: args[0], (h, state[2], ka))
-            new_state, alive_frac = repair(scb, state, h, b, kr, t)
+            new_state, alive_frac = jax.lax.cond(
+                cache_any,
+                lambda args: repair_cache(*args),
+                lambda args: repair_plain(*args),
+                (scb, inv, state, h, b, kr, t))
             on = t < scb.steps
             state = tuple(_where_on(on, n, o)
                           for n, o in zip(new_state, state))
-            return state, jnp.where(on, alive_frac, state[2].sum(-1)
-                                    / jnp.maximum(scb.n_objects
-                                                  * scb.n_chunks, 1))
+            return state, jnp.where(on, alive_frac,
+                                    state[2].sum(-1) / inv.n_groups)
 
-        state, alive_tr = jax.lax.scan(body, init, jnp.arange(st.max_steps))
+        state, alive_tr = jax.lax.scan(body, init, jnp.arange(st.max_steps),
+                                       unroll=unroll)
         res = jax.vmap(functools.partial(_vault_finalize, st))(scb, state)
         return res._replace(alive_frac_trace=alive_tr.T)
 
-    return jax.jit(run)
+    if pmapped:
+        return jax.pmap(run)
+    return jax.jit(run, donate_argnums=(0,))
 
 
 def _stack(cells: list[Scenario]) -> Scenario:
@@ -425,66 +501,151 @@ def _reshape(res, n_cells: int, n_seeds: int):
                        for x in res))
 
 
-def run_grid(cells, seeds=range(8), sampler: str = "exact") -> ScenarioResult:
-    """Run cells × seeds vault scenarios in ONE batched dispatch.
+def _dispatch(runner, batch):
+    """Invoke a compiled runner with the expected donation warning scoped
+    out: the int32 scenario leaves can never alias the float results, and
+    XLA reports that once per compile — noise here, but a real diagnostic
+    in user code, so never filter it globally."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return runner(batch)
+
+
+def _run_chunked(flat: list[Scenario], runner, chunk_size: int | None,
+                 devices: int | None = None, prunner=None):
+    """Dispatch ``flat`` elements through ``runner`` in fixed-size chunks.
+
+    ``chunk_size=None`` keeps the single-dispatch fast path. Otherwise the
+    element list is padded (with replicas of the last element, sliced off
+    afterwards) to a multiple of ``chunk_size`` and dispatched chunk by
+    chunk — every chunk has identical shapes, so jit compiles exactly once.
+    With ``devices > 1`` each chunk is reshaped to ``[devices, B/devices]``
+    and run through the pmapped ``prunner`` instead. Chunking and sharding
+    are bit-for-bit neutral: element randomness depends only on the
+    element itself, never on its batch position.
+    """
+    B = len(flat)
+    ndev = int(devices or 1)
+    if ndev > 1:
+        avail = jax.local_device_count()
+        if ndev > avail:
+            raise ValueError(
+                f"devices={ndev} but only {avail} local JAX device(s); "
+                "set --xla_force_host_platform_device_count or lower it")
+        chunk_size = chunk_size or B
+        chunk_size = -(-chunk_size // ndev) * ndev
+    if (not chunk_size or chunk_size >= B) and ndev <= 1:
+        return _dispatch(runner, _stack(flat))
+    chunk_size = min(chunk_size, -(-B // ndev) * ndev) or B
+    pad = (-B) % chunk_size
+    padded = list(flat) + [flat[-1]] * pad
+    outs = []
+    for i in range(0, len(padded), chunk_size):
+        batch = _stack(padded[i:i + chunk_size])
+        if ndev > 1:
+            shard = jax.tree_util.tree_map(
+                lambda x: x.reshape((ndev, chunk_size // ndev)
+                                    + x.shape[1:]), batch)
+            out = _dispatch(prunner, shard)
+            out = jax.tree_util.tree_map(
+                lambda x: np.asarray(x).reshape((chunk_size,) + x.shape[2:]),
+                out)
+        else:
+            out = _dispatch(runner, batch)
+        outs.append(jax.tree_util.tree_map(np.asarray, out))
+    cat = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate(xs, axis=0), *outs)
+    return jax.tree_util.tree_map(lambda x: x[:B], cat)
+
+
+def run_grid(cells, seeds=range(8), sampler: str = "exact",
+             chunk_size: int | None = None, devices: int | None = None,
+             unroll: int | None = None) -> ScenarioResult:
+    """Run cells × seeds vault scenarios as chunked batched dispatches.
 
     ``cells``: scenarios or kwargs-dicts for :func:`make_scenario`.
-    ``sampler``: ``"exact"`` (reference-faithful binomial) or ``"fast"``
-    (hybrid inverse-CDF/Gaussian sampler for big sweeps). Returns a
-    :class:`ScenarioResult` whose leaves have shape ``[n_cells, n_seeds]``
-    (the trace leaf ``[n_cells, n_seeds, max_steps]``).
+    ``sampler`` / ``chunk_size`` / ``devices``: see "Performance knobs" in
+    the module docstring. Returns a :class:`ScenarioResult` whose leaves
+    have shape ``[n_cells, n_seeds]`` (the trace leaf
+    ``[n_cells, n_seeds, max_steps]``).
     """
     seeds = list(seeds)
+    unroll = _default_unroll(sampler) if unroll is None else unroll
     flat = _product(cells, seeds)
     st = _Static(
         max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
         max_objects=max(int(s.n_objects) for s in flat),
         max_steps=max(int(s.steps) for s in flat),
     )
-    res = _vault_batch(st, sampler)(_stack(flat))
+    res = _run_chunked(
+        flat, _vault_batch(st, sampler, unroll), chunk_size, devices,
+        _vault_batch(st, sampler, unroll, True) if (devices or 1) > 1
+        else None)
     return _reshape(res, len(flat) // len(seeds), len(seeds))
 
 
 # ------------------------------------------------------ replicated baseline
-def _repl_single(st: _Static, sampler: str, sc: Scenario) -> ScenarioResult:
-    sample = SAMPLERS[sampler]
+def _repl_init(st: _Static, smp: Sampler, sc: Scenario):
     O = st.max_objects
     oidx = jnp.arange(O, dtype=jnp.int32)
     active = oidx < sc.n_objects
-    base = jax.random.PRNGKey(jnp.asarray(sc.seed + 1, jnp.uint32))
-    k_init, _ = jax.random.split(base)
-    bad0 = sample(k_init, jnp.where(active, sc.replication, 0.0),
-                  jnp.full((O,), sc.byz_fraction))
+    base = smp.base(sc.seed + 1)
+    (k_init,) = smp.streams(smp.fold(base, 0), 1)
+    bad0 = smp.binom(k_init, jnp.where(active, sc.replication, 0.0),
+                     sc.byz_fraction)
     good0 = jnp.where(active, sc.replication - bad0, 0.0)
     alive0 = active & (good0 >= 1.0)
+    inv = (base, active, _p_fail_step(sc))
+    return inv, (good0, bad0, alive0, 0.0, 0.0)
 
-    def step(carry, t):
-        good, bad, alive, traffic, repairs = carry
-        on = t < sc.steps
-        kt = jax.random.fold_in(base, t + 1)
-        kg, kb, kr, kp = jax.random.split(kt, 4)
-        p_fail = _churn_prob(sc, kp, oidx)
-        g = good - sample(kg, good, p_fail)
-        b = bad - sample(kb, bad, p_fail)
-        a = alive & (g >= 1.0)  # no good replica left => object gone
-        deficit = jnp.maximum(jnp.where(a, sc.replication - (g + b), 0.0), 0.0)
-        # repair copies an unverifiable replica: good iff source good AND
-        # the new holder is honest (contagious decay, Fig. 6)
-        remaining = jnp.maximum(g + b, 1.0)
-        p_good = jnp.where(a, g / remaining, 0.0) * (1.0 - sc.byz_fraction)
-        new_good = sample(kr, deficit, jnp.clip(p_good, 0.0, 1.0))
-        g = g + new_good
-        b = b + (deficit - new_good)
-        pick = lambda new, old: jnp.where(on, new, old)
-        carry = (pick(g, good), pick(b, bad), jnp.where(on, a, alive),
-                 pick(traffic + deficit.sum(), traffic),
-                 pick(repairs + deficit.sum(), repairs))
-        alive_frac = carry[2].sum() / jnp.maximum(sc.n_objects, 1)
-        return carry, alive_frac
 
-    init = (good0, bad0, alive0, 0.0, 0.0)
-    (good, bad, alive, traffic, repairs), alive_tr = jax.lax.scan(
-        step, init, jnp.arange(st.max_steps))
+def _repl_churn(st: _Static, smp: Sampler, sc: Scenario, inv, carry, t):
+    base, _, p_fail = inv
+    good, bad = carry[0], carry[1]
+    kt = smp.fold(base, t + 1)
+    kg, kb, kp, kr, kxg, kxb = smp.streams(kt, 6)
+    g = good - smp.binom(kg, good, p_fail)
+    b = bad - smp.binom(kb, bad, p_fail)
+    burst, region = _burst_draw(smp, sc, kp)
+    return g, b, burst, region, (kxg, kxb), kr
+
+
+def _repl_burst_thin(st: _Static, smp: Sampler, sc: Scenario, inv,
+                     g, b, burst, region, kx):
+    oidx = jnp.arange(st.max_objects, dtype=jnp.int32)
+    p_extra = _p_extra(sc, inv[2])
+    hit = burst & ((oidx % N_REGIONS) == region)
+    dg = smp.binom(kx[0], g, p_extra)
+    db = smp.binom(kx[1], b, p_extra)
+    return g - jnp.where(hit, dg, 0.0), b - jnp.where(hit, db, 0.0)
+
+
+def _repl_repair(st: _Static, smp: Sampler, sc: Scenario, inv, carry,
+                 g, b, kr, t):
+    _, _, alive, traffic, repairs = carry
+    on = t < sc.steps
+    a = alive & (g >= 1.0)  # no good replica left => object gone
+    deficit = jnp.maximum(jnp.where(a, sc.replication - (g + b), 0.0), 0.0)
+    # repair copies an unverifiable replica: good iff source good AND
+    # the new holder is honest (contagious decay, Fig. 6); the source mix
+    # is per-object, so this is the one genuinely per-lane ``p`` draw
+    remaining = jnp.maximum(g + b, 1.0)
+    p_good = jnp.where(a, g / remaining, 0.0) * (1.0 - sc.byz_fraction)
+    new_good = smp.binom(kr, deficit, jnp.clip(p_good, 0.0, 1.0))
+    g = g + new_good
+    b = b + (deficit - new_good)
+    pick = lambda new, old: jnp.where(on, new, old)
+    carry = (pick(g, carry[0]), pick(b, carry[1]), jnp.where(on, a, alive),
+             pick(traffic + deficit.sum(), traffic),
+             pick(repairs + deficit.sum(), repairs))
+    alive_frac = carry[2].sum() / jnp.maximum(sc.n_objects, 1)
+    return carry, alive_frac
+
+
+def _repl_finalize(st: _Static, sc: Scenario, inv, carry) -> ScenarioResult:
+    good, bad, alive, traffic, repairs = carry
+    active = inv[1]
     lost = (active & ~alive).sum()
     n_alive = alive.sum()
     fhm = jnp.where(n_alive > 0,
@@ -496,46 +657,81 @@ def _repl_single(st: _Static, sampler: str, sc: Scenario) -> ScenarioResult:
         lost_fraction=lost / jnp.maximum(sc.n_objects, 1),
         final_honest_mean=fhm,
         honest_min=jnp.where(jnp.isfinite(alive_min), alive_min, 0.0),
-        members_max=(good + bad).max(), alive_frac_trace=alive_tr,
+        members_max=(good + bad).max(), alive_frac_trace=jnp.zeros(()),
     )
 
 
 @functools.lru_cache(maxsize=None)
-def _repl_batch(st: _Static, sampler: str):
-    return jax.jit(jax.vmap(functools.partial(_repl_single, st, sampler)))
+def _repl_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
+                pmapped: bool = False):
+    """Scan-of-vmap replicated baseline (same scaffolding as the vault
+    engine, so the regional-burst thinning sits behind a real cond)."""
+    smp = SAMPLERS[sampler]
+    churn = jax.vmap(functools.partial(_repl_churn, st, smp),
+                     in_axes=(0, 0, 0, None))
+    burst_thin = jax.vmap(functools.partial(_repl_burst_thin, st, smp))
+    repair = jax.vmap(functools.partial(_repl_repair, st, smp),
+                      in_axes=(0, 0, 0, 0, 0, 0, None))
+
+    def run(scb: Scenario):
+        inv, init = jax.vmap(functools.partial(_repl_init, st, smp))(scb)
+
+        def body(carry, t):
+            g, b, burst, region, kx, kr = churn(scb, inv, carry, t)
+            g, b = jax.lax.cond(
+                burst.any(),
+                lambda args: burst_thin(scb, inv, *args),
+                lambda args: (args[0], args[1]),
+                (g, b, burst, region, kx))
+            return repair(scb, inv, carry, g, b, kr, t)
+
+        carry, alive_tr = jax.lax.scan(body, init, jnp.arange(st.max_steps),
+                                       unroll=unroll)
+        res = jax.vmap(functools.partial(_repl_finalize, st))(scb, inv, carry)
+        return res._replace(alive_frac_trace=alive_tr.T)
+
+    if pmapped:
+        return jax.pmap(run)
+    return jax.jit(run, donate_argnums=(0,))
 
 
-def run_replicated_grid(cells, seeds=range(8),
-                        sampler: str = "exact") -> ScenarioResult:
+def run_replicated_grid(cells, seeds=range(8), sampler: str = "exact",
+                        chunk_size: int | None = None,
+                        devices: int | None = None) -> ScenarioResult:
     """Ceph-like replicated baseline, same grid semantics as run_grid."""
     seeds = list(seeds)
     flat = _product(cells, seeds)
     st = _Static(max_groups=1,
                  max_objects=max(int(s.n_objects) for s in flat),
                  max_steps=max(int(s.steps) for s in flat))
-    res = _repl_batch(st, sampler)(_stack(flat))
+    unroll = _default_unroll(sampler)
+    res = _run_chunked(
+        flat, _repl_batch(st, sampler, unroll), chunk_size, devices,
+        _repl_batch(st, sampler, unroll, pmapped=True) if (devices or 1) > 1
+        else None)
     return _reshape(res, len(flat) // len(seeds), len(seeds))
 
 
 # --------------------------------------------------------- Fig 5 trace grid
-def _trace_single(max_steps: int, repair_interval_hours, sc: Scenario):
-    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
-    k_init, _ = jax.random.split(base)
-    byz0 = _binom(k_init, sc.r_inner, sc.byz_fraction)
-    honest0 = sc.r_inner - byz0
+def _trace_single(max_steps: int, smp: Sampler, repair_interval_hours,
+                  sc: Scenario):
+    base = smp.base(sc.seed)
     p_fail = _p_fail_step(sc)
+    (k_init,) = smp.streams(smp.fold(base, 0), 1)
+    byz0 = smp.binom(k_init, sc.r_inner, sc.byz_fraction)
+    honest0 = sc.r_inner - byz0
 
     def step(carry, t):
         honest, byz, since, absorbed = carry
-        kt = jax.random.fold_in(base, t + 1)
-        kh, kb, kr = jax.random.split(kt, 3)
-        h = honest - _binom(kh, honest, p_fail)
-        b = byz - _binom(kb, byz, p_fail)
+        kt = smp.fold(base, t + 1)
+        kh, kb, kr = smp.streams(kt, 3)
+        h = honest - smp.binom(kh, honest, p_fail)
+        b = byz - smp.binom(kb, byz, p_fail)
         absorbed_n = absorbed | (h < sc.k_inner)
         since_n = since + sc.step_hours
         do_rep = ~absorbed_n & (since_n >= repair_interval_hours)
         deficit = jnp.maximum(sc.r_inner - (h + b), 0.0)
-        nb = _binom(kr, deficit, sc.byz_fraction)
+        nb = smp.binom(kr, deficit, sc.byz_fraction)
         h = jnp.where(do_rep, h + deficit - nb, h)
         b = jnp.where(do_rep, b + nb, b)
         since_n = jnp.where(do_rep, 0.0, since_n)
@@ -549,19 +745,28 @@ def _trace_single(max_steps: int, repair_interval_hours, sc: Scenario):
         return carry, carry[0]
 
     init = (honest0, byz0, 0.0, jnp.zeros((), bool))
-    _, trace = jax.lax.scan(step, init, jnp.arange(max_steps))
+    _, trace = jax.lax.scan(step, init, jnp.arange(max_steps),
+                            unroll=_default_unroll(smp.name))
     return trace
 
 
 @functools.lru_cache(maxsize=None)
-def _trace_batch(max_steps: int):
-    def run(interval, sc):
-        return _trace_single(max_steps, interval, sc)
-    return jax.jit(jax.vmap(run, in_axes=(0, 0)))
+def _trace_batch(max_steps: int, sampler: str, pmapped: bool = False):
+    smp = SAMPLERS[sampler]
+    vrun = jax.vmap(functools.partial(_trace_single, max_steps, smp),
+                    in_axes=(0, 0))
+
+    def run(batch):
+        return vrun(batch[0], batch[1])
+
+    if pmapped:
+        return jax.pmap(run)
+    return jax.jit(run, donate_argnums=(0,))
 
 
-def trace_grid(cells, seeds=range(8),
-               repair_interval_hours: float = 24.0) -> np.ndarray:
+def trace_grid(cells, seeds=range(8), repair_interval_hours: float = 24.0,
+               sampler: str = "exact", chunk_size: int | None = None,
+               devices: int | None = None) -> np.ndarray:
     """Honest-fragment traces of single chunk groups (Fig. 5), batched over
     cells × seeds. Returns ``[n_cells, n_seeds, max_steps]`` int64; cells
     with a shorter horizon than the padded maximum hold their last value
@@ -569,23 +774,29 @@ def trace_grid(cells, seeds=range(8),
     seeds = list(seeds)
     flat = _product(cells, seeds)
     max_steps = max(int(s.steps) for s in flat)
-    interval = np.full(len(flat), repair_interval_hours, np.float32)
-    out = _trace_batch(max_steps)(interval, _stack(flat))
+    runner = _trace_batch(max_steps, sampler)
+    prunner = (_trace_batch(max_steps, sampler, True)
+               if (devices or 1) > 1 else None)
+    # _run_chunked stacks element lists as pytrees; pair each scenario with
+    # its repair interval so the same chunking path applies.
+    interval = np.float32(repair_interval_hours)
+    paired = [(interval, s) for s in flat]
+    out = _run_chunked(paired, runner, chunk_size, devices, prunner)
     return np.asarray(out, np.int64).reshape(
         len(flat) // len(seeds), len(seeds), max_steps)
 
 
 # --------------------------------------------------- Fig 6 targeted attacks
-def _targeted_single(st: _Static, sc: Scenario):
+def _targeted_single(st: _Static, smp: Sampler, sc: Scenario):
     G = st.max_groups
     gidx = jnp.arange(G, dtype=jnp.int32)
     active = gidx < sc.n_objects * sc.n_chunks
-    base = jax.random.PRNGKey(jnp.asarray(sc.seed, jnp.uint32))
-    k_init, ka = jax.random.split(base)
-    byz = _binom(k_init, jnp.where(active, sc.r_inner, 0.0),
-                 jnp.full((G,), sc.byz_fraction))
+    base = smp.base(sc.seed)
+    k_init, ka = smp.streams(smp.fold(base, 0), 2)
+    byz = smp.binom(k_init, jnp.where(active, sc.r_inner, 0.0),
+                    sc.byz_fraction)
     honest = jnp.where(active, sc.r_inner - byz, 0.0)
-    kill = _targeted_kill(sc, ka, honest, active)
+    kill = _targeted_kill(smp, sc, ka, honest, active)
     obj_id = jnp.minimum(gidx // jnp.maximum(sc.n_chunks, 1),
                          st.max_objects - 1)
     chunks_alive = jax.ops.segment_sum(
@@ -597,11 +808,17 @@ def _targeted_single(st: _Static, sc: Scenario):
 
 
 @functools.lru_cache(maxsize=None)
-def _targeted_batch(st: _Static):
-    return jax.jit(jax.vmap(functools.partial(_targeted_single, st)))
+def _targeted_batch(st: _Static, sampler: str, pmapped: bool = False):
+    run = jax.vmap(functools.partial(_targeted_single, st,
+                                     SAMPLERS[sampler]))
+    if pmapped:
+        return jax.pmap(run)
+    return jax.jit(run, donate_argnums=(0,))
 
 
-def targeted_grid(cells, seeds=range(8)) -> np.ndarray:
+def targeted_grid(cells, seeds=range(8), sampler: str = "exact",
+                  chunk_size: int | None = None,
+                  devices: int | None = None) -> np.ndarray:
     """Lost-object fraction under the greedy targeted attack (Fig. 6
     bottom), batched over cells × seeds: ``[n_cells, n_seeds]`` float."""
     seeds = list(seeds)
@@ -609,7 +826,10 @@ def targeted_grid(cells, seeds=range(8)) -> np.ndarray:
     st = _Static(
         max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
         max_objects=max(int(s.n_objects) for s in flat), max_steps=1)
-    out = _targeted_batch(st)(_stack(flat))
+    runner = _targeted_batch(st, sampler)
+    prunner = (_targeted_batch(st, sampler, True)
+               if (devices or 1) > 1 else None)
+    out = _run_chunked(flat, runner, chunk_size, devices, prunner)
     return np.asarray(out).reshape(len(flat) // len(seeds), len(seeds))
 
 

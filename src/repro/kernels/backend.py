@@ -1,0 +1,20 @@
+"""Backend detection shared by the Pallas kernels and their wrappers.
+
+Pallas kernels take an ``interpret`` flag: ``True`` runs the kernel body
+through the interpreter (so it executes — and is validated — on CPU),
+``False`` compiles it for the accelerator.  Every kernel entry point
+defaults the flag to ``None`` and resolves it here, so real TPU runs get
+compiled kernels without each call site having to thread the choice.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default: only a real TPU backend compiles kernels."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 from repro.core.gf import GF_POLY
 
 DEFAULT_TILE_R = 8
@@ -57,7 +59,7 @@ def gf256_encode_kernel(
     data: jax.Array,
     tile_r: int = DEFAULT_TILE_R,
     tile_l: int = DEFAULT_TILE_L,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """coeffs (R, K) int32, data (K, L) int32 -> (R, L) int32.
 
@@ -67,6 +69,7 @@ def gf256_encode_kernel(
     k2, l = data.shape
     assert k == k2, (coeffs.shape, data.shape)
     assert r % tile_r == 0 and l % tile_l == 0, (r, l, tile_r, tile_l)
+    interpret = resolve_interpret(interpret)
     grid = (r // tile_r, l // tile_l)
     return pl.pallas_call(
         functools.partial(_encode_kernel, k_dim=k),

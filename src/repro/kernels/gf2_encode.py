@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 DEFAULT_TILE_R = 8
 DEFAULT_TILE_W = 512
 
@@ -36,13 +38,14 @@ def gf2_encode_kernel(
     words: jax.Array,
     tile_r: int = DEFAULT_TILE_R,
     tile_w: int = DEFAULT_TILE_W,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """masks (R, K) int32, words (K, W) int32 -> (R, W) int32."""
     r, k = masks.shape
     k2, w = words.shape
     assert k == k2
     assert r % tile_r == 0 and w % tile_w == 0, (r, w, tile_r, tile_w)
+    interpret = resolve_interpret(interpret)
     grid = (r // tile_r, w // tile_w)
     return pl.pallas_call(
         functools.partial(_xor_kernel, k_dim=k),

@@ -6,16 +6,12 @@ and is validated — on CPU).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.backend import default_interpret as _interpret
 from repro.kernels.gf256_encode import gf256_encode_kernel
 from repro.kernels.gf2_encode import gf2_encode_kernel
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: np.ndarray, axis: int, multiple: int) -> np.ndarray:

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 DEFAULT_TILE_N = 8
 DEFAULT_TILE_F = 128
 ROUNDS = 8
@@ -32,9 +34,15 @@ def _rotl(x, k: int):
     return (x << k) | jax.lax.shift_right_logical(x, 32 - k)
 
 
-def arx_mix(a, b, c, d):
-    """8 ChaCha-style quarter-rounds over broadcastable int32 lanes."""
-    for _ in range(ROUNDS):
+def arx_mix(a, b, c, d, rounds: int = ROUNDS):
+    """ChaCha-style quarter-rounds over broadcastable int32 lanes.
+
+    ``rounds=ROUNDS`` (8) is the PRF-strength default used by the selection
+    kernel; ``core/samplers.py`` reuses the same permutation at 4 rounds as
+    a counter-based uniform generator (quality validated by chi-square in
+    ``tests/test_samplers.py``).
+    """
+    for _ in range(rounds):
         a = a + b
         d = _rotl(d ^ a, 16)
         c = c + d
@@ -60,9 +68,14 @@ def _prf_kernel(t_ref, f_ref, o_ref):
 def prf_select_kernel(
     tags: jax.Array, fhashes: jax.Array,
     tile_n: int = DEFAULT_TILE_N, tile_f: int = DEFAULT_TILE_F,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """tags (N,2) int32, fhashes (F,2) int32 -> (N,F) int32 PRF values."""
+    """tags (N,2) int32, fhashes (F,2) int32 -> (N,F) int32 PRF values.
+
+    ``interpret=None`` resolves via backend detection (compiled on TPU,
+    interpreted elsewhere).
+    """
+    interpret = resolve_interpret(interpret)
     n = tags.shape[0]
     f = fhashes.shape[0]
     assert n % tile_n == 0 and f % tile_f == 0, (n, f, tile_n, tile_f)

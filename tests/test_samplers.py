@@ -1,0 +1,186 @@
+"""Sampler accuracy (chi-square / KS / moment budgets) and chunked /
+sharded dispatch determinism for the scenario engine.
+
+The fast samplers are validated against the *analytic* binomial
+distribution in the ``(n, p)`` regimes the engine actually hits: small
+means (``n*p <~ 2``, the churn path — where the truncated inverse-CDF must
+be statistically exact) and large repair-burst / init means (the Gaussian
+branch — held to the documented moment + CDF error budget of
+``repro/core/samplers.py``).  No scipy: PMFs come from ``math.comb`` and
+chi-square critical values from the Wilson-Hilferty approximation.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import samplers as SM
+from repro.core import scenarios as SC
+
+N_DRAWS = 200_000
+
+# engine regimes: churn thinning at paper-ish rates (small mean, incl. the
+# largest group size the sampler domain admits), then refill bursts and
+# worst-case init draws (Gaussian branch)
+SMALL_MEAN = [(53, 0.0356), (80, 0.02), (5, 0.3), (200, 0.005)]
+LARGE_MEAN = [(27, 1 / 3), (80, 0.33), (112, 0.5)]
+FAST_SAMPLERS = ("fast", "arx")
+
+
+def _draw(sampler: str, n: int, p: float, seed: int = 7) -> np.ndarray:
+    smp = SM.SAMPLERS[sampler]
+    key = smp.streams(smp.fold(smp.base(jnp.int32(seed)), 1), 3)[1]
+    out = smp.binom(key, jnp.full((N_DRAWS,), float(n), jnp.float32),
+                    jnp.float32(p))
+    return np.asarray(out)
+
+
+def _binom_pmf(n: int, p: float) -> np.ndarray:
+    k = np.arange(n + 1)
+    return np.array([math.comb(n, int(i)) * p ** i * (1 - p) ** (n - i)
+                     for i in k])
+
+
+def _chi2_crit(dof: int, z: float = 3.09) -> float:
+    """Wilson-Hilferty upper-tail critical value (z=3.09 ~ p=0.001)."""
+    h = 2.0 / (9.0 * dof)
+    return dof * (1.0 - h + z * math.sqrt(h)) ** 3
+
+
+# ------------------------------------------------------------------ accuracy
+@pytest.mark.parametrize("sampler", FAST_SAMPLERS)
+@pytest.mark.parametrize("n,p", SMALL_MEAN)
+def test_small_mean_chi_square_exact(sampler, n, p):
+    """In the churn regime the truncated inverse-CDF must match the exact
+    binomial distribution (not just its moments)."""
+    x = _draw(sampler, n, p).astype(int)
+    pmf = _binom_pmf(n, p)
+    exp = pmf * N_DRAWS
+    obs = np.bincount(x, minlength=n + 1).astype(float)
+    keep = exp >= 10.0
+    chi2 = ((obs[keep] - exp[keep]) ** 2 / exp[keep]).sum()
+    tail_o, tail_e = obs[~keep].sum(), exp[~keep].sum()
+    if tail_e > 0:
+        chi2 += (tail_o - tail_e) ** 2 / tail_e
+    dof = int(keep.sum())  # merged tail adds ~1, keep conservative
+    assert chi2 < _chi2_crit(dof), (sampler, n, p, chi2, dof)
+
+
+@pytest.mark.parametrize("sampler", FAST_SAMPLERS)
+@pytest.mark.parametrize("n,p", LARGE_MEAN)
+def test_gauss_branch_moments_and_cdf(sampler, n, p):
+    """Above the cutover the rounded-Gaussian branch must hit the
+    documented budget: near-exact mean/variance, <= ~3% sup-CDF error
+    (the logistic-probit's classical max CDF deviation)."""
+    x = _draw(sampler, n, p)
+    m, v = n * p, n * p * (1 - p)
+    mean_tol = 4.0 * math.sqrt(v / N_DRAWS) + 0.005 * m
+    assert abs(x.mean() - m) < mean_tol, (sampler, n, p, x.mean())
+    assert 0.9 < x.var() / v < 1.1, (sampler, n, p, x.var(), v)
+    # KS-style sup distance against the analytic CDF
+    cdf = np.cumsum(_binom_pmf(n, p))
+    emp = np.cumsum(np.bincount(x.astype(int), minlength=n + 1)) / N_DRAWS
+    assert np.abs(emp - cdf).max() < 0.035, (sampler, n, p)
+    # support respected
+    assert x.min() >= 0 and x.max() <= n
+
+
+@pytest.mark.parametrize("sampler", ("exact",) + FAST_SAMPLERS)
+def test_edge_cases(sampler):
+    smp = SM.SAMPLERS[sampler]
+    key = smp.streams(smp.fold(smp.base(jnp.int32(3)), 1), 1)[0]
+    n = jnp.full((64,), 10.0, jnp.float32)
+    assert np.all(np.asarray(smp.binom(key, jnp.zeros(64), 0.5)) == 0)
+    assert np.all(np.asarray(smp.binom(key, n, 0.0)) == 0)
+    assert np.all(np.asarray(smp.binom(key, n, 1.0)) == 10.0)
+
+
+def test_arx_uniform_uniformity_and_streams():
+    """256-bin chi-square on the raw ARX uniforms + decorrelation between
+    consecutive stream keys of one step key."""
+    smp = SM.SAMPLERS["arx"]
+    k0, k1 = smp.streams(smp.fold(smp.base(jnp.int32(11)), 5), 2)
+    u0 = np.asarray(smp.uniform(k0, (N_DRAWS,)))
+    u1 = np.asarray(smp.uniform(k1, (N_DRAWS,)))
+    assert 0.0 < u0.min() and u0.max() < 1.0
+    hist = np.bincount((u0 * 256).astype(int), minlength=256)
+    exp = N_DRAWS / 256.0
+    chi2 = ((hist - exp) ** 2 / exp).sum()
+    assert chi2 < _chi2_crit(255), chi2
+    # across streams and across adjacent lanes
+    assert abs(np.corrcoef(u0, u1)[0, 1]) < 0.01
+    assert abs(np.corrcoef(u0[:-1], u0[1:])[0, 1]) < 0.01
+
+
+def test_fast_logit_budget():
+    u = jnp.linspace(1e-6, 1.0 - 1e-6, 100_001, dtype=jnp.float32)
+    ref = np.log(np.asarray(u, np.float64) / (1.0 - np.asarray(u, np.float64)))
+    got = np.asarray(SM.fast_logit(u), np.float64) / 0.5513
+    assert np.abs(got - ref).max() < 0.01
+
+
+# ------------------------------------------------- chunking / device axis
+CELLS = [dict(n_objects=12, n_chunks=2, k_outer=2, k_inner=8, r_inner=20,
+              n_nodes=2000, byz_fraction=f, churn_per_year=52.0,
+              step_hours=12.0, years=0.05, cache_ttl_hours=ttl)
+         for f in (0.0, 0.25) for ttl in (0.0, 24.0)]
+
+
+def test_run_grid_chunking_bitexact():
+    a = SC.run_grid(CELLS, seeds=range(3), sampler="arx")
+    b = SC.run_grid(CELLS, seeds=range(3), sampler="arx", chunk_size=5)
+    for name, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+
+
+def test_other_runners_chunking_bitexact():
+    ra = SC.run_replicated_grid(CELLS[:2], seeds=range(3), sampler="arx")
+    rb = SC.run_replicated_grid(CELLS[:2], seeds=range(3), sampler="arx",
+                                chunk_size=4)
+    for name, x, y in zip(ra._fields, ra, rb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+    tc = [dict(k_inner=8, r_inner=20, byz_fraction=0.2, churn_per_year=52.0,
+               step_hours=12.0, years=0.05)]
+    ta = SC.trace_grid(tc, seeds=range(4), sampler="arx")
+    tb = SC.trace_grid(tc, seeds=range(4), sampler="arx", chunk_size=3)
+    assert np.array_equal(ta, tb)
+    gc = [dict(n_objects=30, n_chunks=4, k_outer=2, byz_fraction=1 / 3,
+               attack_frac=0.1, n_nodes=1000)]
+    ga = SC.targeted_grid(gc, seeds=range(4))
+    gb = SC.targeted_grid(gc, seeds=range(4), chunk_size=3)
+    assert np.array_equal(ga, gb)
+
+
+def test_device_axis_bitexact(subproc):
+    """pmap-sharded dispatch must be bit-identical to single-device."""
+    out = subproc("""
+import numpy as np
+from repro.core import scenarios as SC
+cells = [dict(n_objects=12, n_chunks=2, k_outer=2, k_inner=8, r_inner=20,
+              n_nodes=2000, byz_fraction=0.25, churn_per_year=52.0,
+              step_hours=12.0, years=0.05)]
+a = SC.run_grid(cells, seeds=range(4), sampler="arx")
+b = SC.run_grid(cells, seeds=range(4), sampler="arx", devices=2)
+for name, x, y in zip(a._fields, a, b):
+    assert np.array_equal(np.asarray(x), np.asarray(y)), name
+print("SHARD_OK")
+""", devices=2)
+    assert "SHARD_OK" in out
+
+
+def test_devices_validation():
+    with pytest.raises(ValueError):
+        SC.run_grid(CELLS[:1], seeds=range(2), sampler="arx",
+                    devices=99)
+
+
+def test_sampler_domain_guard():
+    """Group sizes beyond pow_int's 8-bit exponent domain must be rejected
+    at scenario construction, not silently mis-sampled."""
+    with pytest.raises(ValueError):
+        SC.make_scenario(r_inner=256)
+    with pytest.raises(ValueError):
+        SC.make_scenario(replication=300)
+    SC.make_scenario(r_inner=255)  # max admissible
