@@ -13,6 +13,7 @@ import traceback
 def main() -> int:
     from benchmarks import (
         coding_micro,
+        cross_validate,
         durability_model,
         engine_speed,
         fault_tolerance,
@@ -32,6 +33,7 @@ def main() -> int:
         ("selection_micro", selection_micro.run),
         ("durability_model", durability_model.run),
         ("engine_speed", engine_speed.run),
+        ("cross_validation", cross_validate.run),
         ("roofline", roofline.run),
     ]
     skip = {s for s in os.environ.get("BENCH_SKIP", "").split(",") if s}

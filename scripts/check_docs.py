@@ -1,0 +1,122 @@
+"""Docs checker: execute fenced ``python`` snippets, verify intra-repo links.
+
+Scans ``README.md`` and ``docs/*.md``:
+
+* every fenced code block tagged ``python`` is executed in a fresh
+  subprocess (``PYTHONPATH=src``, per-snippet timeout) — broken examples
+  fail the build, so the docs cannot rot silently;
+* every markdown link target that is not an external URL or a pure
+  anchor must resolve to a file or directory in the repo (relative to the
+  linking file, anchors stripped).
+
+Used three ways: ``python scripts/check_docs.py`` (manual; nonzero exit on
+any failure), ``python scripts/check_docs.py --links-only`` (the fast CI
+docs gate — snippet execution already runs inside the tier-1 suite via
+``tests/test_docs.py``, so CI does not pay the jit compiles twice), and
+imported by ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SNIPPET_TIMEOUT_S = 180  # per snippet; engine snippets pay a jit compile
+
+_FENCE = re.compile(r"^```(.*)$")
+# [text](target) — excluding images; tolerate titles after the target
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)[^)]*\)")
+
+
+def doc_files() -> list[pathlib.Path]:
+    return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def python_snippets(path: pathlib.Path) -> list[tuple[int, str]]:
+    """(start line, source) of every fenced ``python`` block in ``path``.
+
+    The language is the first word of the fence info string (so
+    `````python copy`` and ````` python`` count); ANY later fence line
+    closes the block, and an unterminated trailing python block is still
+    returned — malformed fences must fail the gate, not silently skip it.
+    """
+    out, buf, lang, start = [], [], None, 0
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = _FENCE.match(line.strip())
+        if m and lang is None:
+            info = m.group(1).strip()
+            lang = info.split()[0].lower() if info else ""
+            buf, start = [], i
+        elif m and lang is not None:
+            if lang == "python":
+                out.append((start, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    if lang == "python":  # unterminated fence at EOF
+        out.append((start, "\n".join(buf)))
+    return out
+
+
+def intra_repo_links(path: pathlib.Path) -> list[str]:
+    return [t for t in _LINK.findall(path.read_text())
+            if not t.startswith(("http://", "https://", "mailto:", "#"))]
+
+
+def check_links(path: pathlib.Path) -> list[str]:
+    """Broken intra-repo link targets of one markdown file."""
+    broken = []
+    for target in intra_repo_links(path):
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = REPO if rel.startswith("/") else path.parent
+        if not (base / rel.lstrip("/")).exists():
+            broken.append(target)
+    return broken
+
+
+def run_snippet(src: str, timeout: int = SNIPPET_TIMEOUT_S):
+    """Run one snippet; returns (ok, combined output)."""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", src], capture_output=True, text=True,
+            timeout=timeout, env=env, cwd=REPO)
+    except subprocess.TimeoutExpired:
+        return False, f"timeout after {timeout}s"
+    return proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def main(links_only: bool = False) -> int:
+    failures = 0
+    for path in doc_files():
+        rel = path.relative_to(REPO)
+        broken = check_links(path)
+        for target in broken:
+            failures += 1
+            print(f"[FAIL] {rel}: broken link -> {target}")
+        if links_only:
+            if not broken:
+                print(f"[ok] {rel} links "
+                      f"({len(intra_repo_links(path))} checked)")
+            continue
+        for line, src in python_snippets(path):
+            ok, out = run_snippet(src)
+            status = "ok" if ok else "FAIL"
+            print(f"[{status}] {rel}:{line} python snippet "
+                  f"({len(src.splitlines())} lines)")
+            if not ok:
+                failures += 1
+                print(out)
+    print(f"{failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(links_only="--links-only" in sys.argv[1:]))

@@ -1,0 +1,171 @@
+"""Shared churn / adversary / cache policy definitions for both VAULT layers.
+
+The repo simulates VAULT at two levels of abstraction:
+
+* the **group-level statistical engine** (``repro.core.scenarios`` — batched
+  JAX, whole parameter sweeps in one dispatch; ``repro.core.simulation`` is
+  its numpy reference), and
+* the **protocol-level simulator** (``repro.core.protocol_sim`` — real
+  ``SimNetwork`` peers, VRF selection proofs, GF(256) coding, decentralized
+  repair).
+
+Cross-validating the two (``benchmarks/cross_validate.py``) only means
+something if both layers run the *same* scenario policies, so the policy
+identifiers and every piece of shared policy arithmetic live here — one
+source of truth instead of three copies.
+
+Every numeric helper takes an ``xp=`` array namespace (default
+``jax.numpy``) so the same formula serves the traced JAX engine
+(``xp=jnp`` — the op sequence is identical to the pre-refactor inlined
+code, keeping compiled outputs bit-for-bit stable), the numpy reference
+path (``xp=np``), and the scalar protocol simulator (``xp=np`` on python
+floats).
+
+Policy catalogue
+----------------
+
+Churn (``churn_policy``):
+
+* ``iid`` (:data:`CHURN_IID`) — i.i.d. Poisson churn per node, the paper's
+  own model (§6.1, Figs. 4–6).  Per-step failure probability is
+  :func:`p_fail_step`.
+* ``regional`` (:data:`CHURN_REGIONAL`) — correlated bursts: with
+  probability ``burst_prob`` per step one of :data:`N_REGIONS` fault
+  domains suffers ``burst_mult``× the base failure rate (rack/AZ outages,
+  after *Topology-Aware Cooperative Data Protection*).  The burst is
+  applied as a *second* thinning pass with :func:`burst_extra_probability`
+  so composing it with the base pass equals one boosted pass exactly.
+
+Adversary (``adv_policy``):
+
+* ``static`` (:data:`ADV_STATIC`) — fixed Byzantine population fraction;
+  repair refills draw Byzantine members at the population share
+  (paper Fig. 6 top; the §4.4 CTMC assumes exactly this).
+* ``adaptive`` (:data:`ADV_ADAPTIVE`) — BFT-DSN-style repair-path attack:
+  Byzantine members never churn voluntarily
+  (:func:`byz_churn_probability` → 0) and flood repair refills at
+  ``adapt_boost``× their population share
+  (:func:`refill_byz_probability`).
+* ``targeted`` (:data:`ADV_TARGETED`) — greedy targeted kill at
+  ``attack_step`` under the A.3 cost model (:func:`kill_cost`), budget
+  ``attack_frac · n_nodes`` (paper Fig. 6 bottom).
+
+Cache policy is the scalar ``cache_ttl_hours`` knob (0 disables); the
+hit/miss traffic semantics are documented in ``repair.py`` and reproduced
+identically by both layers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HOURS_PER_YEAR = 24 * 365.0
+
+CHURN_IID = 0
+CHURN_REGIONAL = 1
+CHURN_POLICIES = {"iid": CHURN_IID, "regional": CHURN_REGIONAL}
+
+ADV_STATIC = 0
+ADV_ADAPTIVE = 1
+ADV_TARGETED = 2
+ADVERSARY_POLICIES = {
+    "static": ADV_STATIC, "adaptive": ADV_ADAPTIVE, "targeted": ADV_TARGETED,
+}
+
+N_REGIONS = 16  # regional-burst fault domains (racks/AZs)
+
+
+def churn_policy_id(policy: int | str) -> int:
+    """Resolve a churn policy name (or pass through an id) to its int id."""
+    return CHURN_POLICIES[policy] if isinstance(policy, str) else int(policy)
+
+
+def adv_policy_id(policy: int | str) -> int:
+    """Resolve an adversary policy name (or id) to its int id."""
+    return (ADVERSARY_POLICIES[policy] if isinstance(policy, str)
+            else int(policy))
+
+
+# ------------------------------------------------------------ churn arithmetic
+def p_fail_step(churn_per_year, step_hours, xp=jnp):
+    """Per-step per-node failure probability from a Poisson churn rate.
+
+    ``churn_per_year`` is expected failures per node-year, ``step_hours``
+    the step width in hours; returns ``1 - exp(-rate · dt)`` in [0, 1).
+    """
+    return -xp.expm1(-churn_per_year / HOURS_PER_YEAR * step_hours)
+
+
+def burst_from_uniforms(churn_policy, burst_prob, u0, u1, xp=jnp):
+    """Regional-burst coin for one step from two uniforms in (0, 1).
+
+    Returns ``(burst, region)``: ``burst`` is True iff the policy is
+    ``regional`` and ``u0 < burst_prob``; ``region`` is the hit fault
+    domain, ``floor(u1 · N_REGIONS)`` clipped to ``[0, N_REGIONS)``.
+    """
+    regional = churn_policy == CHURN_REGIONAL
+    burst = regional & (u0 < burst_prob)
+    region = xp.minimum((u1 * N_REGIONS).astype(xp.int32), N_REGIONS - 1)
+    return burst, region
+
+
+def burst_extra_probability(p_base, burst_mult, xp=jnp):
+    """Second-pass thinning probability realizing a ``burst_mult``× boost.
+
+    Thinning survivors of a ``p_base`` pass with this probability equals a
+    single ``min(p_base · burst_mult, 0.95)`` pass exactly (binomial
+    thinning composition), so the burst costs nothing on non-burst steps.
+    """
+    boosted = xp.minimum(p_base * burst_mult, 0.95)
+    return xp.clip((boosted - p_base)
+                   / xp.maximum(1.0 - p_base, 1e-9), 0.0, 1.0)
+
+
+def group_domain(gidx, n_regions: int = N_REGIONS):
+    """Fault domain of group ``gidx`` in the group-level engine.
+
+    The engine's topology-aware worst case: a chunk group's members are
+    co-located, so whole groups map to domains (round-robin)."""
+    return gidx % n_regions
+
+
+def ring_domain(nid: int, ring: int, n_regions: int = N_REGIONS) -> int:
+    """Fault domain of a node id in the protocol-level simulator.
+
+    Nodes are binned by ring segment, so ring-adjacent nodes — the ones
+    VRF placement co-selects into the same chunk groups — share a domain.
+    This is the protocol-level realization of :func:`group_domain`'s
+    co-location assumption."""
+    return int(nid // -(-ring // n_regions))
+
+
+# -------------------------------------------------------- adversary arithmetic
+def byz_churn_probability(adv_policy, p_fail, xp=jnp):
+    """Voluntary churn probability of Byzantine members.
+
+    The adaptive adversary's members never leave on their own (they hold
+    seats to starve honest refills); every other policy churns Byzantine
+    members like honest ones."""
+    return xp.where(adv_policy == ADV_ADAPTIVE, 0.0, p_fail)
+
+
+def refill_byz_probability(adv_policy, byz_fraction, adapt_boost, xp=jnp):
+    """Probability that one repair refill lands on a Byzantine member.
+
+    ``static``/``targeted``: the population share ``byz_fraction`` (VRF
+    selection is uniform, §3.3).  ``adaptive``: boosted to
+    ``clip(byz_fraction · adapt_boost, 0, 0.95)`` — the adversary races
+    Locate() rounds, answering first for every open slot."""
+    return xp.where(
+        adv_policy == ADV_ADAPTIVE,
+        xp.clip(byz_fraction * adapt_boost, 0.0, 0.95),
+        byz_fraction)
+
+
+def kill_cost(honest, k_inner, frags_per_node, xp=jnp):
+    """Per-group kill cost of the targeted adversary (A.3 eq. 17).
+
+    Disconnecting a group needs ``honest − K_inner + 1`` honest removals,
+    amortized by ``frags_per_node`` co-located fragments per node. Units:
+    nodes (the attack budget is ``attack_frac · n_nodes``)."""
+    cost = xp.maximum(honest - k_inner + 1.0, 0.0)
+    return cost / xp.maximum(frags_per_node, 1.0)

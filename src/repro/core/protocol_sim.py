@@ -1,0 +1,444 @@
+"""End-to-end protocol-level VAULT simulator, cross-validated against the
+batched group-level engine (``repro.core.scenarios``).
+
+The group-level engine abstracts a chunk group to counters ``(honest, byz,
+cache_t, alive)``. This module runs the *protocol* instead, on a small
+``SimNetwork``: real keypairs and VRF selection proofs place fragments
+(``vrf.py`` / ``selection.py`` via ``VaultClient.store``), GF(256) rateless
+coding produces real fragment payloads (``chunks.py`` / ``gf.py``), nodes
+churn and are replaced, Byzantine nodes follow the Fig. 6 model (answer
+claims / accept stores / serve nothing), persistence claims and membership
+timers converge group views (``group.py``), and decentralized repair
+reconstructs fragments from surviving ones (``repair.py``). Both layers
+consume the same policy definitions from ``repro.core.policies``, and
+:func:`run_protocol` reports results in the engine's trace schema
+(:class:`ProtocolResult` mirrors ``scenarios.ScenarioResult`` field by
+field), so ``benchmarks/cross_validate.py`` and
+``tests/test_cross_validation.py`` can assert that protocol-level loss and
+repair statistics fall inside the engine's multi-seed confidence intervals.
+
+Correspondence to the engine's abstraction, and the known deltas
+----------------------------------------------------------------
+
+* **Step order** matches the engine scan body: churn (+ regional-burst
+  second thinning) → targeted attack (at ``attack_step``) → repair →
+  record. ``alive_frac_trace[t]`` is the post-repair fraction of decodable
+  groups, exactly the engine's per-step trace.
+* **Churn** — every node fails i.i.d. with ``policies.p_fail_step`` per
+  step; failed nodes are replaced by *fresh* keypairs (new ring position),
+  Byzantine with the population probability, so the population stays at
+  ``n_nodes`` with a stationary Byzantine share, the engine's implicit
+  infinite-population assumption.
+* **Regional bursts** — nodes are binned into ``policies.N_REGIONS`` fault
+  domains *by ring segment* (``policies.ring_domain``), so ring-adjacent
+  nodes — the ones VRF placement co-selects into the same groups — share a
+  domain. This realizes the engine's co-located-group assumption
+  (``policies.group_domain``); a group whose anchor sits mid-segment still
+  straddles 2–3 domains, so protocol-level burst kills are slightly less
+  group-concentrated than the engine's (the engine is the conservative
+  bound).
+* **Adaptive adversary** — Byzantine nodes never churn voluntarily
+  (``policies.byz_churn_probability``) and *rush* repair Locate() rounds:
+  :func:`rush_picker` makes the repairer accept the first verifiable
+  responder, with Byzantine responders ``adapt_boost``× as fast. Realized
+  refill-Byzantine probability is ``βf / (βf + (1 − f))`` for population
+  share ``f`` and boost ``β`` — the engine's ``βf``
+  (``policies.refill_byz_probability``) to first order in ``f``.
+* **Repair accounting** — a repaired fragment costs ``K_inner`` fragment
+  transfers on a cold pull and one on a warm chunk-cache hit (repair.py
+  docstring); ``repair_traffic_units`` converts bytes to object-size units
+  with the group's true fragment length, so it is directly comparable to
+  the engine's ``deficit · K_inner / (K_outer · K_inner)`` bookkeeping.
+* **Group death is emergent, not flagged**: a group is alive iff its
+  honest alive members hold ``≥ K_inner`` distinct fragment indices
+  (decode possible). With caches disabled death is absorbing exactly like
+  the engine's ``alive`` latch; a warm chunk cache *can* resurrect a group
+  the engine would consider dead — a real protocol behavior the
+  group-level abstraction gives away (cross-validation configs with
+  nonzero TTL keep loss ≈ 0 so the delta never binds).
+
+What this buys: every number the batched engine produces for a sweep cell
+is backed by a run of the real selection/coding/repair code on matched
+configurations — the correctness anchor ROADMAP.md called for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import group as G
+from repro.core import policies as P
+from repro.core import repair as R
+from repro.core.network import Node, SimNetwork
+from repro.core.vault import VaultClient
+from repro.core.vrf import RING
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolParams:
+    """One protocol-level run. Knob names and meanings match
+    ``scenarios.make_scenario`` (and ``policies``) so a matched engine cell
+    is one :func:`to_scenario_kwargs` call away.
+
+    Units: ``churn_per_year`` in failures per node-year, ``step_hours`` /
+    ``cache_ttl_hours`` in hours, ``object_bytes`` in bytes,
+    ``attack_frac`` as a fraction of ``n_nodes``.
+    """
+
+    n_nodes: int = 120
+    n_objects: int = 4
+    object_bytes: int = 2000
+    k_outer: int = 2
+    n_chunks: int = 5
+    k_inner: int = 6
+    r_inner: int = 14
+    byz_fraction: float = 0.0
+    churn_per_year: float = 26.0
+    cache_ttl_hours: float = 0.0
+    step_hours: float = 12.0
+    steps: int = 40
+    churn_policy: int | str = "iid"
+    adv_policy: int | str = "static"
+    burst_prob: float = 0.05
+    burst_mult: float = 20.0
+    adapt_boost: float = 2.0
+    attack_frac: float = 0.0
+    attack_step: int = 0
+    claim_every: int = 1  # persistence-claim broadcast period (steps)
+    seed: int = 0
+
+    @property
+    def code_params(self) -> C.CodeParams:
+        return C.CodeParams(k_outer=self.k_outer, n_chunks=self.n_chunks,
+                            k_inner=self.k_inner, r_inner=self.r_inner)
+
+    def to_scenario_kwargs(self, **overrides) -> dict:
+        """The matched group-level engine cell (``make_scenario`` kwargs)."""
+        kw = dict(
+            n_objects=self.n_objects, n_chunks=self.n_chunks,
+            k_outer=self.k_outer, k_inner=self.k_inner,
+            r_inner=self.r_inner, n_nodes=self.n_nodes,
+            byz_fraction=self.byz_fraction,
+            churn_per_year=self.churn_per_year,
+            cache_ttl_hours=self.cache_ttl_hours,
+            step_hours=self.step_hours, steps=self.steps,
+            churn_policy=self.churn_policy, adv_policy=self.adv_policy,
+            burst_prob=self.burst_prob, burst_mult=self.burst_mult,
+            adapt_boost=self.adapt_boost, attack_frac=self.attack_frac,
+            attack_step=self.attack_step,
+        )
+        kw.update(overrides)
+        return kw
+
+
+class ProtocolResult(NamedTuple):
+    """Engine-schema result of one protocol run.
+
+    The first nine fields mirror ``scenarios.ScenarioResult`` name by name
+    (scalars here, ``[cells, seeds]`` arrays there); the trailing fields
+    are protocol-level extras the group abstraction cannot produce.
+    """
+
+    repair_traffic_units: float  # object-size units, see repair.py
+    repairs: int                 # fragments regenerated
+    cache_hits: int              # warm-cache single-fragment repairs
+    lost_objects: int            # objects with < K_outer decodable chunks
+    lost_fraction: float
+    final_honest_mean: float     # mean honest fragments over live groups
+    honest_min: float            # min honest seen in any live group
+    members_max: float           # max honest+byz claimers seen in any group
+    alive_frac_trace: np.ndarray  # [steps] post-repair live-group fraction
+    # ---- protocol-level extras -------------------------------------------
+    honest_trace: np.ndarray     # [steps, n_groups] honest fragment counts
+    byz_trace: np.ndarray        # [steps, n_groups] Byzantine claimers
+    loss_events: tuple           # ((step, object_index), ...) first losses
+    n_groups: int
+    repair_attempts: int         # repair calls that regenerated ≥1 fragment
+
+
+def rush_picker(net: SimNetwork, boost: float):
+    """Adaptive-adversary response bias for ``repair._locate_new_member``.
+
+    Models Byzantine repair-flooding: every verifiably-selected responder
+    races to answer the RepairRequest and Byzantine responders are
+    ``boost``× as fast, so the repairer's first verifiable answer is
+    Byzantine with probability ``β·n_b / (β·n_b + n_h)``. Draws from
+    ``net.rng`` (deterministic per seed)."""
+    def pick(responders) -> int:
+        w = np.array([boost if n.byzantine else 1.0
+                      for _, n, _ in responders], np.float64)
+        return int(net.rng.choice(len(responders), p=w / w.sum()))
+    return pick
+
+
+def _spawn(net: SimNetwork, rng, byz_p: float, counter: list[int]) -> Node:
+    """Add one node with a deterministic keypair seed and Byzantine coin."""
+    counter[0] += 1
+    return net.add_node(
+        byzantine=bool(rng.random() < byz_p),
+        seed=counter[0].to_bytes(8, "little"))
+
+
+def _census(net: SimNetwork, registry: dict, k_inner: int):
+    """Ground-truth group composition in one pass over the network.
+
+    Returns ``(honest, byz, alive)`` arrays over the group index order of
+    ``registry`` (chash → group index): ``honest[g]`` counts distinct
+    fragment indices held by alive honest nodes, ``byz[g]`` alive Byzantine
+    claimers, ``alive[g]`` decodability (``honest ≥ K_inner``)."""
+    n = len(registry)
+    frag_sets: list[set] = [set() for _ in range(n)]
+    byz = np.zeros(n, np.int64)
+    for node in net.nodes.values():
+        if not node.alive:
+            continue
+        if node.byzantine:
+            for chash in node.groups:
+                g = registry.get(chash)
+                if g is not None:
+                    byz[g] += 1
+        else:
+            for (chash, idx) in node.fragments:
+                g = registry.get(chash)
+                if g is not None:
+                    frag_sets[g].add(idx)
+    honest = np.array([len(s) for s in frag_sets], np.int64)
+    return honest, byz, honest >= k_inner
+
+
+def _churn_step(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
+                p_fail: float, p_fail_b: float, counter: list[int]) -> int:
+    """One churn half-step: i.i.d. thinning (+ regional burst), replace
+    failures with fresh arrivals. Returns the number of failures."""
+    churn_id = P.churn_policy_id(p.churn_policy)
+    u = rng.random(2)
+    burst, region = P.burst_from_uniforms(
+        churn_id, p.burst_prob, u[0], np.float64(u[1]), xp=np)
+    p_extra = float(P.burst_extra_probability(
+        np.float64(p_fail), p.burst_mult, xp=np))
+    p_extra_b = float(P.byz_churn_probability(
+        P.adv_policy_id(p.adv_policy), p_extra, xp=np))
+    failed = []
+    for node in net.alive_nodes():
+        if node.nid == client_nid:
+            continue  # one immortal observer drives queries/repairs
+        pf = p_fail_b if node.byzantine else p_fail
+        dead = rng.random() < pf
+        if not dead and burst and P.ring_domain(node.nid, RING) == region:
+            # second thinning pass — composes to the boosted rate exactly
+            # (policies.burst_extra_probability), as in the engine
+            dead = rng.random() < (p_extra_b if node.byzantine else p_extra)
+        if dead:
+            failed.append(node.nid)
+    for nid in failed:
+        net.fail_node(nid)
+        _spawn(net, rng, p.byz_fraction, counter)
+    return len(failed)
+
+
+def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
+                     registry: dict, k_inner: int) -> int:
+    """Greedy targeted kill (A.3 cost model via ``policies.kill_cost``).
+
+    The adversary sees group compositions (worst case, A.2) but not the
+    chunk→object mapping: it disconnects the honest members of the
+    cheapest groups first, stopping at the first unaffordable group
+    (budget ``attack_frac · n_nodes`` node removals). Returns the number
+    of nodes disconnected."""
+    by_group: dict[int, set[int]] = {g: set() for g in registry.values()}
+    for node in net.nodes.values():
+        if node.alive and not node.byzantine:
+            for (chash, _idx) in node.fragments:
+                g = registry.get(chash)
+                if g is not None:
+                    by_group[g].add(node.nid)
+    honest = np.array([len(by_group[g]) for g in sorted(by_group)],
+                      np.float64)
+    cost = np.asarray(P.kill_cost(honest, float(k_inner), 1.0, xp=np))
+    # cheapest groups first, random tiebreak (outer-code opacity: the
+    # attacker cannot tell equal-cost groups apart) — same ordering rule
+    # as the engine's _targeted_kill / the numpy targeted_attack_vault
+    order = rng.permutation(len(cost))
+    order = order[np.argsort(cost[order], kind="stable")]
+    budget = p.attack_frac * p.n_nodes
+    killed: set[int] = set()
+    for g in order:
+        if cost[g] <= 0:
+            continue
+        # already-killed co-located nodes count as free (emergent
+        # frags_per_node amortization)
+        victims = [nid for nid in sorted(by_group[int(g)])
+                   if nid not in killed]
+        price = len(victims) - k_inner + 1
+        if price <= 0:
+            continue
+        if price > budget:
+            break  # cheapest-first cumulative budget exhausted
+        rng.shuffle(victims)
+        killed.update(victims[:price])
+        budget -= price
+    for nid in killed:
+        if nid in net.nodes and net.nodes[nid].alive:
+            net.fail_node(nid)
+    return len(killed)
+
+
+def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
+                 frag_len: dict, pick) -> tuple[float, int, int, int]:
+    """One decentralized repair tick: every alive node checks each of its
+    group views and repairs the ones short of ``R`` (repair.py §4.3.4).
+
+    Over-repair within a tick is prevented the protocol's own way: the
+    first member to repair restores the group, and later members' stale
+    views converge via MembershipTimer before they would add anyone.
+    Returns ``(traffic_units, repairs, cache_hits, attempts)``; bytes are
+    converted to object-size units with each group's true fragment length.
+    """
+    frag_units = 1.0 / (p.k_outer * p.k_inner)
+    ttl = p.cache_ttl_hours
+    traffic_units, repairs, hits, attempts = 0.0, 0, 0, 0
+    for node in list(net.alive_nodes()):
+        if node.byzantine:
+            continue  # Fig. 6 adversary stores nothing and repairs nothing
+        for chash in list(node.groups):
+            if chash not in registry:
+                continue
+            if len(G.alive_members(net, node, chash)) >= p.r_inner:
+                continue  # cheap pre-check; repair_group re-verifies
+            s = R.repair_group(net, node, chash, cache_ttl=ttl, pick=pick)
+            if s.repaired:
+                attempts += 1
+            repairs += s.repaired
+            hits += s.cache_hits
+            traffic_units += s.traffic_bytes / frag_len[chash] * frag_units
+    return traffic_units, repairs, hits, attempts
+
+
+def run_protocol(p: ProtocolParams) -> ProtocolResult:
+    """Run one seeded protocol-level simulation end to end.
+
+    Builds the network, stores ``n_objects`` real objects through the VRF
+    placement path, then advances ``steps`` scan-equivalent steps (churn →
+    attack → claims → repair → record). Deterministic: identical ``p``
+    (including ``seed``) produces an identical :class:`ProtocolResult`
+    (validated by ``tests/test_protocol_sim.py``).
+    """
+    rng = np.random.default_rng(p.seed)
+    net = SimNetwork(seed=p.seed)
+    counter = [0]
+    for _ in range(p.n_nodes):
+        _spawn(net, rng, p.byz_fraction, counter)
+    client_node = next(n for n in net.alive_nodes() if not n.byzantine)
+    client = VaultClient(net, client_node)
+
+    code = p.code_params
+    registry: dict[bytes, int] = {}   # chash -> flat group index
+    frag_len: dict[bytes, int] = {}
+    oids = []
+    for _ in range(p.n_objects):
+        data = rng.integers(0, 256, p.object_bytes, np.uint8).tobytes()
+        oid, _st = client.store(data, code, cache_ttl=p.cache_ttl_hours)
+        oids.append(oid)
+        for chash in oid.chunk_hashes:
+            registry[chash] = len(registry)
+    for node in net.nodes.values():
+        for (chash, _i), frag in node.fragments.items():
+            frag_len.setdefault(chash, len(frag))
+
+    adv_id = P.adv_policy_id(p.adv_policy)
+    pick = (rush_picker(net, p.adapt_boost)
+            if adv_id == P.ADV_ADAPTIVE else None)
+    # bootstrap: top groups up to R (client stores may undershoot when the
+    # candidate set thins out); uncounted, like the engine's exact-R init
+    _repair_tick(net, p, registry, frag_len, pick)
+
+    p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
+    p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
+
+    n_groups = len(registry)  # object-major: group g belongs to object
+    honest_tr = np.zeros((p.steps, n_groups), np.int64)  # g // n_chunks
+    byz_tr = np.zeros((p.steps, n_groups), np.int64)
+    alive_frac = np.zeros(p.steps)
+    lost_seen: set[int] = set()
+    loss_events: list[tuple[int, int]] = []
+    traffic_units, repairs, cache_hits, attempts = 0.0, 0, 0, 0
+    honest_min, members_max = np.inf, 0.0
+
+    for t in range(p.steps):
+        net.now += p.step_hours
+        _churn_step(net, rng, p, client_node.nid, p_fail, p_fail_b, counter)
+        if adv_id == P.ADV_TARGETED and t == p.attack_step:
+            _targeted_attack(net, rng, p, registry, p.k_inner)
+        if p.claim_every and t % p.claim_every == 0:
+            for node in list(net.alive_nodes()):
+                G.broadcast_claims(net, node)
+                G.prune_dead_members(net, node, 3.0 * p.step_hours
+                                     * max(p.claim_every, 1))
+        tu, rp, ch, at = _repair_tick(net, p, registry, frag_len, pick)
+        traffic_units += tu
+        repairs += rp
+        cache_hits += ch
+        attempts += at
+        honest, byz, alive = _census(net, registry, p.k_inner)
+        honest_tr[t] = honest
+        byz_tr[t] = byz
+        alive_frac[t] = alive.mean() if n_groups else 0.0
+        if n_groups:
+            if alive.any():
+                honest_min = min(honest_min, int(honest[alive].min()))
+            members_max = max(members_max, float((honest + byz).max()))
+        chunks_alive = alive.reshape(p.n_objects, p.n_chunks).sum(axis=1)
+        for o in np.nonzero(chunks_alive < p.k_outer)[0]:
+            if int(o) not in lost_seen:
+                lost_seen.add(int(o))
+                loss_events.append((t, int(o)))
+
+    if p.steps == 0:  # nothing simulated: census the freshly-stored state
+        honest, byz, alive = _census(net, registry, p.k_inner)
+        chunks_alive = alive.reshape(p.n_objects, p.n_chunks).sum(axis=1)
+    lost = int((chunks_alive < p.k_outer).sum())
+    return ProtocolResult(
+        repair_traffic_units=float(traffic_units),
+        repairs=int(repairs),
+        cache_hits=int(cache_hits),
+        lost_objects=lost,
+        lost_fraction=lost / max(p.n_objects, 1),
+        final_honest_mean=(float(honest[alive].mean()) if alive.any()
+                           else 0.0),
+        honest_min=float(honest_min if np.isfinite(honest_min) else 0.0),
+        members_max=float(members_max),
+        alive_frac_trace=alive_frac,
+        honest_trace=honest_tr,
+        byz_trace=byz_tr,
+        loss_events=tuple(loss_events),
+        n_groups=n_groups,
+        repair_attempts=int(attempts),
+    )
+
+
+def run_protocol_seeds(p: ProtocolParams, seeds=range(4)) -> list:
+    """Replicate :func:`run_protocol` over seeds (protocol-side analogue of
+    the engine's seed axis). Returns one :class:`ProtocolResult` per seed."""
+    return [run_protocol(dataclasses.replace(p, seed=int(s)))
+            for s in seeds]
+
+
+def summarize(results: list) -> dict:
+    """Seed-mean summary of the engine-comparable fields.
+
+    Returns ``{field: (mean, ci95_halfwidth)}`` for the scalar fields shared
+    with ``scenarios.ScenarioResult``, computed by the engine's own
+    ``scenarios.mean_ci`` so both layers report one CI convention."""
+    from repro.core.scenarios import mean_ci
+
+    out = {}
+    for field in ("repair_traffic_units", "repairs", "cache_hits",
+                  "lost_objects", "lost_fraction", "final_honest_mean",
+                  "honest_min", "members_max"):
+        m, ci = mean_ci(np.array([getattr(r, field) for r in results],
+                                 np.float64))
+        out[field] = (float(m), float(ci))
+    return out

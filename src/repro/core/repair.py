@@ -53,12 +53,22 @@ def _fresh_index(net: SimNetwork, view) -> int:
 
 def _locate_new_member(
     net: SimNetwork, chash: bytes, fhash: int, r_target: int,
-    exclude: set[int],
+    exclude: set[int], pick=None,
 ) -> tuple[Node, sel.SelectionProof] | None:
-    """Locate() restricted to nodes not already in the group."""
+    """Locate() restricted to nodes not already in the group.
+
+    ``pick`` chooses among the verifiably-selected responders: ``None``
+    keeps the default (nearest-to-anchor, the paper's Locate()); a callable
+    ``pick(responders) -> index`` models response-timing adversaries — the
+    adaptive Byzantine strategy answers Locate() rounds faster than honest
+    peers, so the repairer's "first verifiable responder" is biased (see
+    ``protocol_sim.rush_picker``). Every responder passed to ``pick`` has
+    already survived proof verification; the bias can only reorder
+    *legitimately selected* candidates, never admit forged ones.
+    """
     anchor = C.hash_point(chash)
     cands = net.candidates(anchor, min(4 * r_target, net.n_nodes))
-    best: tuple[int, Node, sel.SelectionProof] | None = None
+    responders: list[tuple[int, Node, sel.SelectionProof]] = []
     for cand in cands:
         if cand.nid in exclude or not cand.alive:
             continue
@@ -69,11 +79,13 @@ def _locate_new_member(
             net.registry, proof, anchor, r_target, net.n_nodes
         ):
             continue
-        d = sel.ring_distance(anchor, cand.nid)
-        if best is None or d < best[0]:
-            best = (d, cand, proof)
-    if best is None:
+        responders.append((sel.ring_distance(anchor, cand.nid), cand, proof))
+    if not responders:
         return None
+    if pick is None:
+        best = min(responders, key=lambda t: t[0])
+    else:
+        best = responders[pick(responders)]
     return best[1], best[2]
 
 
@@ -109,12 +121,14 @@ def _pull_and_decode(
 
 def repair_group(
     net: SimNetwork, node: Node, chash: bytes, cache_ttl: float = 0.0,
-    max_new: int | None = None,
+    max_new: int | None = None, pick=None,
 ) -> RepairStats:
     """One repair pass from ``node``'s local view (§4.3.4).
 
     Restores the group to ``R`` alive members (or as close as the candidate
     set allows). Returns traffic/latency accounting for the benchmarks.
+    ``pick`` forwards to :func:`_locate_new_member` (response-order bias of
+    the adaptive adversary; ``None`` = nearest-selected, the default).
     """
     stats = RepairStats()
     view = node.groups.get(chash)
@@ -135,7 +149,8 @@ def repair_group(
     for _ in range(deficit):
         index = _fresh_index(net, view)
         fhash = C.fragment_hash(chash, index)
-        found = _locate_new_member(net, chash, fhash, meta.r_target, exclude)
+        found = _locate_new_member(net, chash, fhash, meta.r_target, exclude,
+                                   pick=pick)
         if found is None:
             continue  # candidate set exhausted; next timer tick retries
         new_member, proof = found

@@ -258,6 +258,11 @@ def binom_arx(key, n, p):
 
 
 # ------------------------------------------------------------------ registry
+#: Pluggable sampler bundles, keyed by the grid runners' ``sampler=`` knob:
+#: ``"exact"`` (reference rejection sampling), ``"fast"`` (threefry +
+#: inverse-CDF/Gaussian hybrid), ``"arx"`` (counter-based ARX uniforms,
+#: highest rate). Error budgets: module docstring + tests/test_samplers.py;
+#: measured throughput: docs/engine_guide.md.
 SAMPLERS: dict[str, Sampler] = {
     "exact": Sampler("exact", _tf_base, _tf_fold, _tf_streams, _tf_uniform,
                      binom_exact),

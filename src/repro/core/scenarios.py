@@ -12,33 +12,17 @@ selectors are all *traced* scalars, so heterogeneous cells (different
 padding masks; only the padded maxima are compile-time constants.
 
 Scenario diversity is a first-class axis. Each policy is a pure function
-composed into the scan body and selected per batch element:
+composed into the scan body and selected per batch element. The policy
+*definitions* — ids, per-step probabilities, burst/refill/kill arithmetic —
+live in ``repro.core.policies`` (shared verbatim with the protocol-level
+simulator ``repro.core.protocol_sim``, which is cross-validated against
+this engine); see that module's docstring for the full catalogue:
 
-Churn policies (``churn_policy``):
-
-* ``CHURN_IID`` — i.i.d. Poisson churn per node ⇒ binomial thinning per
-  group per step. The paper's own model (§6.1, Figs. 4–6).
-* ``CHURN_REGIONAL`` — correlated regional bursts: with probability
-  ``burst_prob`` per step one of ``N_REGIONS`` regions suffers
-  ``burst_mult``× the base failure rate, modeling rack/AZ outages as in
-  *Topology-Aware Cooperative Data Protection* (PAPERS.md) — failures the
-  i.i.d. model provably understates.
-
-Adversary policies (``adv_policy``):
-
-* ``ADV_STATIC`` — a fixed Byzantine population fraction joins repairs
-  (paper Fig. 6 top; §4.4's CTMC assumes exactly this).
-* ``ADV_ADAPTIVE`` — adaptive re-join: Byzantine members never churn
-  voluntarily and flood repair refills at ``adapt_boost``× their population
-  share, the BFT-DSN-style adversary (PAPERS.md) that targets the repair
-  path itself.
-* ``ADV_TARGETED`` — greedy targeted kill at step ``attack_step`` reusing
-  ``targeted_attack_vault``'s cost model (A.3 eq. 17): cheapest groups
-  first, cost ``(honest − K_inner + 1)/fragments_per_node``, budget
-  ``attack_frac · n_nodes`` (paper Fig. 6 bottom, here time-resolved).
-
-Cache policy is the ``cache_ttl_hours`` knob (0 disables), identical to the
-reference semantics (repair.py docstring / Fig. 4).
+* churn: ``"iid"`` (paper §6.1) and ``"regional"`` correlated bursts;
+* adversary: ``"static"`` (Fig. 6), ``"adaptive"`` re-join (BFT-DSN
+  style), ``"targeted"`` greedy kill (A.3 cost model, time-resolved);
+* cache: the ``cache_ttl_hours`` knob (0 disables), identical to the
+  reference semantics (repair.py docstring / Fig. 4).
 
 Public API:
 
@@ -96,22 +80,20 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import policies as P
 from repro.core.samplers import SAMPLERS, Sampler
 
-HOURS_PER_YEAR = 24 * 365.0
-
-CHURN_IID = 0
-CHURN_REGIONAL = 1
-CHURN_POLICIES = {"iid": CHURN_IID, "regional": CHURN_REGIONAL}
-
-ADV_STATIC = 0
-ADV_ADAPTIVE = 1
-ADV_TARGETED = 2
-ADVERSARY_POLICIES = {
-    "static": ADV_STATIC, "adaptive": ADV_ADAPTIVE, "targeted": ADV_TARGETED,
-}
-
-N_REGIONS = 16  # regional-burst fault domains (racks/AZs)
+# Policy ids re-exported from the shared definitions (repro.core.policies)
+# so existing `scenarios.CHURN_*` / `scenarios.ADV_*` callers keep working.
+HOURS_PER_YEAR = P.HOURS_PER_YEAR
+CHURN_IID = P.CHURN_IID
+CHURN_REGIONAL = P.CHURN_REGIONAL
+CHURN_POLICIES = P.CHURN_POLICIES
+ADV_STATIC = P.ADV_STATIC
+ADV_ADAPTIVE = P.ADV_ADAPTIVE
+ADV_TARGETED = P.ADV_TARGETED
+ADVERSARY_POLICIES = P.ADVERSARY_POLICIES
+N_REGIONS = P.N_REGIONS
 
 _UNROLL = 2  # scan unroll factor (see "Performance knobs")
 
@@ -152,15 +134,20 @@ class Scenario(NamedTuple):
 
 
 class ScenarioResult(NamedTuple):
-    repair_traffic_units: jnp.ndarray
-    repairs: jnp.ndarray
-    cache_hits: jnp.ndarray
-    lost_objects: jnp.ndarray
-    lost_fraction: jnp.ndarray
-    final_honest_mean: jnp.ndarray
+    """Grid-runner output; every leaf is ``[n_cells, n_seeds]`` (the trace
+    leaf ``[n_cells, n_seeds, max_steps]``). ``protocol_sim.ProtocolResult``
+    mirrors these fields one-to-one for cross-validation."""
+
+    repair_traffic_units: jnp.ndarray  # object-size units (paper's unit)
+    repairs: jnp.ndarray               # fragments regenerated
+    cache_hits: jnp.ndarray            # warm-cache single-fragment repairs
+    lost_objects: jnp.ndarray          # objects with < K_outer live chunks
+    lost_fraction: jnp.ndarray         # lost_objects / n_objects
+    final_honest_mean: jnp.ndarray     # mean honest frags over live groups
     honest_min: jnp.ndarray        # min honest seen in any live group
     members_max: jnp.ndarray       # max honest+byz seen in any group
-    alive_frac_trace: jnp.ndarray  # [max_steps] fraction of groups alive
+    alive_frac_trace: jnp.ndarray  # [..., max_steps] live-group fraction
+    # (per step; the grid runners prepend the [n_cells, n_seeds] axes)
 
 
 def make_scenario(
@@ -174,10 +161,34 @@ def make_scenario(
     adapt_boost: float = 2.0, attack_frac: float = 0.0, attack_step: int = 0,
     frags_per_node: int = 1, replication: int = 3, seed: int = 0,
 ) -> Scenario:
-    if isinstance(churn_policy, str):
-        churn_policy = CHURN_POLICIES[churn_policy]
-    if isinstance(adv_policy, str):
-        adv_policy = ADVERSARY_POLICIES[adv_policy]
+    """Build one sweep cell (all leaves traced — heterogeneous cells share
+    one compiled executable).
+
+    Deployment: ``n_objects`` stored objects of ``n_chunks`` chunks each
+    (any ``k_outer`` recover an object), chunk groups of ``r_inner``
+    members (any ``k_inner`` decode a chunk), on ``n_nodes`` peers of
+    which ``byz_fraction`` follow the Fig. 6 Byzantine model.
+
+    Dynamics: ``churn_per_year`` expected failures per node-year, advanced
+    in ``step_hours``-wide steps for ``years`` (or an explicit ``steps``
+    count, which wins); ``cache_ttl_hours`` enables the chunk cache
+    (0 = off).
+
+    Policies (shared definitions: ``repro.core.policies``): ``churn_policy``
+    ``"iid"``/``"regional"`` (ids accepted) with ``burst_prob`` per-step
+    burst probability and ``burst_mult`` rate multiplier;
+    ``adv_policy`` ``"static"``/``"adaptive"``/``"targeted"`` with
+    ``adapt_boost`` refill bias, ``attack_frac`` of ``n_nodes`` as kill
+    budget at step ``attack_step``, and ``frags_per_node`` cost
+    amortization (A.3). ``replication`` sizes the Ceph-like baseline of
+    :func:`run_replicated_grid`. ``seed`` is normally overridden by the
+    grid runners' ``seeds`` axis.
+
+    Domain guard: ``r_inner, replication < 256`` (fast-sampler
+    ``pow_int`` domain).
+    """
+    churn_policy = P.churn_policy_id(churn_policy)
+    adv_policy = P.adv_policy_id(adv_policy)
     if r_inner >= 256 or replication >= 256:
         # the fast samplers compute (1-p)^n by 8-bit square-and-multiply
         # (samplers.pow_int) — beyond n=255 they would be silently wrong
@@ -218,11 +229,6 @@ def from_simparams(p, **overrides) -> Scenario:
 
 
 # --------------------------------------------------------------- primitives
-def _p_fail_step(sc: Scenario) -> jnp.ndarray:
-    """Per-step per-node failure probability from the Poisson churn rate."""
-    return -jnp.expm1(-sc.churn_per_year / HOURS_PER_YEAR * sc.step_hours)
-
-
 def _burst_draw(smp: Sampler, sc: Scenario, key):
     """Regional-burst coin for one step: (burst?, hit region index).
 
@@ -232,25 +238,12 @@ def _burst_draw(smp: Sampler, sc: Scenario, key):
     scalar ``p`` (see ``samplers.binom_from_uniform``).
     """
     u = smp.uniform(key, (2,))
-    regional = sc.churn_policy == CHURN_REGIONAL
-    burst = regional & (u[0] < sc.burst_prob)
-    region = jnp.minimum((u[1] * N_REGIONS).astype(jnp.int32), N_REGIONS - 1)
-    return burst, region
-
-
-def _p_extra(sc: Scenario, p_base):
-    """Exact boost-thinning probability: thinning survivors of a
-    ``p_base`` pass with ``p_extra`` equals one ``min(p_base*mult, .95)``
-    pass (binomial thinning composition)."""
-    boosted = jnp.minimum(p_base * sc.burst_mult, 0.95)
-    return jnp.clip((boosted - p_base)
-                    / jnp.maximum(1.0 - p_base, 1e-9), 0.0, 1.0)
+    return P.burst_from_uniforms(sc.churn_policy, sc.burst_prob, u[0], u[1])
 
 
 def _targeted_kill(smp: Sampler, sc: Scenario, key, honest, alive):
     """Greedy cheapest-groups-first kill mask (A.3 cost model)."""
-    cost = jnp.maximum(honest - sc.k_inner + 1.0, 0.0)
-    cost = cost / jnp.maximum(sc.frags_per_node, 1.0)
+    cost = P.kill_cost(honest, sc.k_inner, sc.frags_per_node)
     cost = jnp.where(alive, cost, jnp.inf)
     # random tiebreak: equal-cost groups are indistinguishable behind the
     # outer code's opacity (same argument as targeted_attack_vault)
@@ -290,11 +283,9 @@ def _vault_init(st: _Static, smp: Sampler, sc: Scenario):
     inv = _Inv(
         base=base,
         active=active,
-        p_fail=_p_fail_step(sc),
-        refill_p=jnp.where(
-            sc.adv_policy == ADV_ADAPTIVE,
-            jnp.clip(sc.byz_fraction * sc.adapt_boost, 0.0, 0.95),
-            sc.byz_fraction),
+        p_fail=P.p_fail_step(sc.churn_per_year, sc.step_hours),
+        refill_p=P.refill_byz_probability(
+            sc.adv_policy, sc.byz_fraction, sc.adapt_boost),
         frag_units=1.0 / (sc.k_outer * sc.k_inner),
         chunk_units=1.0 / sc.k_outer,
         n_groups=jnp.maximum(sc.n_objects * sc.n_chunks, 1).astype(
@@ -318,8 +309,7 @@ def _vault_churn(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
     kc, kb, kp, kr, ka, kxh, kxb = smp.streams(kt, 7)
     honest, byz = state[0], state[1]
     # adaptive adversary: byzantine members never leave voluntarily
-    adaptive = sc.adv_policy == ADV_ADAPTIVE
-    p_fail_b = jnp.where(adaptive, 0.0, inv.p_fail)
+    p_fail_b = P.byz_churn_probability(sc.adv_policy, inv.p_fail)
     h = honest - smp.binom(kc, honest, inv.p_fail)
     b = byz - smp.binom(kb, byz, p_fail_b)
     burst, region = _burst_draw(smp, sc, kp)
@@ -331,11 +321,11 @@ def _burst_thin(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
     """Per-element regional-burst second thinning (traced inside a cond:
     only executed on steps where some element actually bursts)."""
     gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
-    p_extra = _p_extra(sc, inv.p_fail)
-    adaptive = sc.adv_policy == ADV_ADAPTIVE
-    hit = burst & ((gidx % N_REGIONS) == region)
+    p_extra = P.burst_extra_probability(inv.p_fail, sc.burst_mult)
+    hit = burst & (P.group_domain(gidx) == region)
     dh = smp.binom(kx[0], h, p_extra)
-    db = smp.binom(kx[1], b, jnp.where(adaptive, 0.0, p_extra))
+    db = smp.binom(kx[1], b,
+                   P.byz_churn_probability(sc.adv_policy, p_extra))
     return h - jnp.where(hit, dh, 0.0), b - jnp.where(hit, db, 0.0)
 
 
@@ -596,7 +586,7 @@ def _repl_init(st: _Static, smp: Sampler, sc: Scenario):
                      sc.byz_fraction)
     good0 = jnp.where(active, sc.replication - bad0, 0.0)
     alive0 = active & (good0 >= 1.0)
-    inv = (base, active, _p_fail_step(sc))
+    inv = (base, active, P.p_fail_step(sc.churn_per_year, sc.step_hours))
     return inv, (good0, bad0, alive0, 0.0, 0.0)
 
 
@@ -614,8 +604,8 @@ def _repl_churn(st: _Static, smp: Sampler, sc: Scenario, inv, carry, t):
 def _repl_burst_thin(st: _Static, smp: Sampler, sc: Scenario, inv,
                      g, b, burst, region, kx):
     oidx = jnp.arange(st.max_objects, dtype=jnp.int32)
-    p_extra = _p_extra(sc, inv[2])
-    hit = burst & ((oidx % N_REGIONS) == region)
+    p_extra = P.burst_extra_probability(inv[2], sc.burst_mult)
+    hit = burst & (P.group_domain(oidx) == region)
     dg = smp.binom(kx[0], g, p_extra)
     db = smp.binom(kx[1], b, p_extra)
     return g - jnp.where(hit, dg, 0.0), b - jnp.where(hit, db, 0.0)
@@ -716,7 +706,7 @@ def run_replicated_grid(cells, seeds=range(8), sampler: str = "exact",
 def _trace_single(max_steps: int, smp: Sampler, repair_interval_hours,
                   sc: Scenario):
     base = smp.base(sc.seed)
-    p_fail = _p_fail_step(sc)
+    p_fail = P.p_fail_step(sc.churn_per_year, sc.step_hours)
     (k_init,) = smp.streams(smp.fold(base, 0), 1)
     byz0 = smp.binom(k_init, sc.r_inner, sc.byz_fraction)
     honest0 = sc.r_inner - byz0

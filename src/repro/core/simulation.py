@@ -26,7 +26,9 @@ import dataclasses
 
 import numpy as np
 
-HOURS_PER_YEAR = 24 * 365.0
+from repro.core import policies as P
+
+HOURS_PER_YEAR = P.HOURS_PER_YEAR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +84,7 @@ def simulate_vault(p: SimParams) -> SimResult:
     alive = honest >= p.k_inner
     cache_t = np.zeros(n_groups)  # client seeds caches at store time (t=0)
     has_cache = p.cache_ttl_hours > 0.0
-    p_fail = -np.expm1(-p.churn_per_year / HOURS_PER_YEAR * p.step_hours)
+    p_fail = P.p_fail_step(p.churn_per_year, p.step_hours, xp=np)
     steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
     traffic = 0.0
     repairs = 0
@@ -149,7 +151,7 @@ def simulate_replicated(p: SimParams, replication: int = 3) -> SimResult:
     )
     bad = replication - good  # byzantine-claimed or poisoned slots
     alive = good >= 1
-    p_fail = -np.expm1(-p.churn_per_year / HOURS_PER_YEAR * p.step_hours)
+    p_fail = P.p_fail_step(p.churn_per_year, p.step_hours, xp=np)
     steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
     traffic = 0.0
     repairs = 0
@@ -194,7 +196,7 @@ def fragment_trace(
     rng = np.random.default_rng(seed)
     byz = int(rng.binomial(r_inner, byz_fraction))
     honest = r_inner - byz
-    p_fail = -np.expm1(-churn_per_year / HOURS_PER_YEAR * step_hours)
+    p_fail = P.p_fail_step(churn_per_year, step_hours, xp=np)
     steps = int(round(years * HOURS_PER_YEAR / step_hours))
     out = np.zeros(steps, dtype=np.int64)
     since_repair = 0.0
@@ -233,8 +235,8 @@ def targeted_attack_vault(
     n_groups = p.n_objects * p.n_chunks
     byz = rng.binomial(p.r_inner, p.byz_fraction, size=n_groups)
     honest = p.r_inner - byz
-    cost = np.maximum(honest - p.k_inner + 1, 0).astype(np.float64)
-    cost /= max(fragments_per_node, 1)
+    cost = np.asarray(P.kill_cost(honest, p.k_inner, fragments_per_node,
+                                   xp=np), np.float64)
     budget = attacked_fraction * p.n_nodes
     # cheapest groups first; ties broken uniformly at random — the outer
     # code's opacity means equal-cost groups are indistinguishable, so the

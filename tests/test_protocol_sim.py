@@ -1,0 +1,99 @@
+"""Protocol-level simulator: determinism, invariants, policy effects."""
+import dataclasses
+
+import numpy as np
+
+from repro.core import protocol_sim as PS
+
+SMALL = dict(n_nodes=80, n_objects=2, object_bytes=1200, k_outer=2,
+             n_chunks=3, k_inner=5, r_inner=10, byz_fraction=0.15,
+             churn_per_year=40.0, step_hours=24.0, steps=10)
+
+
+def test_same_seed_identical_trace():
+    """Determinism: identical params (incl. seed) => identical traces and
+    stats, across every policy knob at once."""
+    p = PS.ProtocolParams(**SMALL, churn_policy="regional", burst_prob=0.3,
+                          burst_mult=6.0, adv_policy="adaptive",
+                          adapt_boost=3.0, cache_ttl_hours=48.0, seed=7)
+    a, b = PS.run_protocol(p), PS.run_protocol(p)
+    np.testing.assert_array_equal(a.honest_trace, b.honest_trace)
+    np.testing.assert_array_equal(a.byz_trace, b.byz_trace)
+    np.testing.assert_array_equal(a.alive_frac_trace, b.alive_frac_trace)
+    assert a.loss_events == b.loss_events
+    for field in ("repair_traffic_units", "repairs", "cache_hits",
+                  "lost_objects", "final_honest_mean", "honest_min",
+                  "members_max"):
+        assert getattr(a, field) == getattr(b, field), field
+
+
+def test_seed_changes_trace():
+    pa = PS.ProtocolParams(**SMALL, seed=0)
+    pb = dataclasses.replace(pa, seed=1)
+    a, b = PS.run_protocol(pa), PS.run_protocol(pb)
+    assert not np.array_equal(a.honest_trace, b.honest_trace)
+
+
+def test_invariants_and_schema():
+    p = PS.ProtocolParams(**SMALL, seed=3)
+    r = PS.run_protocol(p)
+    assert r.n_groups == p.n_objects * p.n_chunks
+    assert r.honest_trace.shape == (p.steps, r.n_groups)
+    assert r.alive_frac_trace.shape == (p.steps,)
+    assert (r.honest_trace >= 0).all() and (r.byz_trace >= 0).all()
+    # groups are repaired to R, never past it (no over-repair in a tick:
+    # stale views converge via MembershipTimer before adding members)
+    assert r.members_max <= p.r_inner
+    # without caches, group death is absorbing => alive fraction monotone
+    assert (np.diff(r.alive_frac_trace) <= 1e-12).all()
+    assert 0.0 <= r.lost_fraction <= 1.0
+    assert r.lost_objects == len(r.loss_events) or not r.loss_events
+
+
+def test_heavy_churn_loses_objects():
+    """Brutal churn on a thin code must produce recorded loss events that
+    agree with the final census."""
+    p = PS.ProtocolParams(
+        n_nodes=60, n_objects=2, object_bytes=800, k_outer=2, n_chunks=2,
+        k_inner=8, r_inner=10, churn_per_year=2000.0, step_hours=24.0,
+        steps=8, seed=0)
+    r = PS.run_protocol(p)
+    assert r.lost_objects > 0
+    assert r.loss_events and len(r.loss_events) == r.lost_objects
+    steps = [t for t, _ in r.loss_events]
+    assert all(0 <= t < p.steps for t in steps)
+    assert r.alive_frac_trace[-1] < 1.0
+
+
+def test_adaptive_rush_biases_refills():
+    """The adaptive adversary's Locate()-rush must raise the Byzantine
+    share of groups above the static policy's, all else equal."""
+    base = dict(SMALL, byz_fraction=0.25, steps=16)
+    stat = PS.run_protocol(PS.ProtocolParams(**base, seed=11))
+    adpt = PS.run_protocol(PS.ProtocolParams(
+        **base, adv_policy="adaptive", adapt_boost=6.0, seed=11))
+    # compare late-run byzantine occupancy (refills have turned over seats)
+    assert adpt.byz_trace[-5:].mean() > stat.byz_trace[-5:].mean()
+
+
+def test_matched_cell_roundtrip():
+    """to_scenario_kwargs builds a valid engine cell with matching knobs."""
+    from repro.core import scenarios as SC
+
+    p = PS.ProtocolParams(**SMALL, churn_policy="regional",
+                          adv_policy="adaptive")
+    sc = SC.make_scenario(**p.to_scenario_kwargs())
+    assert int(sc.steps) == p.steps
+    assert float(sc.r_inner) == p.r_inner
+    assert int(sc.churn_policy) == SC.CHURN_REGIONAL
+    assert int(sc.adv_policy) == SC.ADV_ADAPTIVE
+
+
+def test_summarize_ci():
+    p = PS.ProtocolParams(**SMALL)
+    res = PS.run_protocol_seeds(p, seeds=range(3))
+    s = PS.summarize(res)
+    m, ci = s["repairs"]
+    vals = [r.repairs for r in res]
+    assert m == float(np.mean(vals))
+    assert ci >= 0.0
