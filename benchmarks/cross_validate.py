@@ -69,6 +69,17 @@ def matched_configs(steps: int, n_objects: int,
         "iid_targeted": PS.ProtocolParams(
             **base, adv_policy="targeted", attack_frac=0.25,
             attack_step=steps // 2),
+        # protocol-only partition scenario vs the engine's mean-field
+        # approximation (policies.ADV_ECLIPSE). Documented deltas: the
+        # engine eclipses a deterministic whole-group share where the
+        # protocol's segment-boundary groups straddle the cut and keep
+        # partial repair, so the engine is the conservative bound —
+        # tests/test_eclipse.py asserts the direction; like iid_targeted,
+        # this row is reported here but not CI-gated by the two-sample test
+        "iid_eclipse": PS.ProtocolParams(
+            **{**base, "churn_per_year": 80.0}, adv_policy="eclipse",
+            attack_frac=0.3, attack_step=steps // 4,
+            eclipse_steps=steps // 3),
     }
 
 

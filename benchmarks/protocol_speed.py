@@ -1,0 +1,164 @@
+"""Protocol-simulator tick-throughput study: PR 3 scalar path vs the
+batched/vectorized engine, at 1K+ nodes.
+
+For a paper-shaped deployment (R=64 groups on 1K nodes; 10K nodes at
+``BENCH_SCALE=full``) this times, per engine × VRF backend:
+
+* **setup** — object stores through the VRF placement path (once), and
+* **steady-state tick cost** — the median of the per-tick wall times
+  recorded by the ``run_protocol`` probe hook, after a warm-up prefix;
+  the median is robust to transient host-noise spikes and the setup
+  never enters the per-tick measurement at all.
+
+``engine="reference"`` is the preserved PR 3 implementation (scalar
+``verify_selection`` per claim × receiver, per-node dict loops, no lookup
+caching) — the baseline the ≥10× acceptance criterion is measured
+against. ``engine="vectorized"`` is the batched path: one memoized
+``verify_selection_batch`` round per (re)ingest, persistent array claim
+tables (``repro.core.claims_engine``), table-driven repair pre-checks and
+block-drawn churn. ``vrf="arx"`` additionally routes cold verification
+batches through the ``kernels/prf_select`` pairs kernel; its steady-state
+ticks pay python int packing in Locate() rounds, so the memoized hash
+backend usually leads once caches are warm — both are reported.
+
+The second scenario is the PR's protocol-only adversary at paper scale: a
+1K-node, one-simulated-month run with an eclipse window cutting 25% of
+the ring for a week — a configuration the mean-field engine cannot
+express — which must finish inside the CI bench budget.
+
+Emits ``results/bench/protocol_speed.csv`` and the machine-readable
+trajectory point ``results/bench/BENCH_protocol_speed.json`` that the CI
+``bench-regression`` job diffs against (``scripts/check_bench_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from benchmarks.common import RESULTS, SCALE, emit
+from repro.core import protocol_sim as PS
+
+# steady-state tick cost = median of the per-tick wall times (probe hook)
+# after a warm-up prefix — identical legs for every engine, and the
+# median throws away transient host-noise spikes that a two-leg
+# difference would fold straight into the estimate
+TICKS = 12
+WARMUP_TICKS = 3  # early ticks are cheaper (views not yet churned)
+
+
+def _base_params(n_nodes: int) -> PS.ProtocolParams:
+    return PS.ProtocolParams(
+        n_nodes=n_nodes, n_objects=max(6, 12 * n_nodes // 1000),
+        n_chunks=5, object_bytes=1024, k_outer=2, k_inner=16, r_inner=64,
+        byz_fraction=0.1, churn_per_year=4.0, step_hours=12.0,
+        claim_every=1, seed=0)
+
+
+def _clear_shared_caches() -> None:
+    """Reset the process-global memo caches between variants.
+
+    Benchmark runs share one seed, hence one object/key population — a
+    later variant would otherwise inherit the earlier one's warm ring/
+    threshold memos and measure a mix of engines."""
+    from repro.core import selection as sel
+
+    sel._threshold_for.cache_clear()
+    sel._node_point.cache_clear()
+
+
+def _tick_cost(p: PS.ProtocolParams, engine: str,
+               ticks: int = TICKS) -> dict:
+    _clear_shared_caches()
+    marks = []
+    t0 = time.time()
+    r = PS.run_protocol(dataclasses.replace(p, steps=ticks), engine=engine,
+                        probe=lambda t, net: marks.append(time.time()))
+    total = time.time() - t0
+    diffs = [b - a for a, b in zip(marks, marks[1:])][WARMUP_TICKS - 1:]
+    tick_s = sorted(diffs)[len(diffs) // 2]
+    return {
+        "engine": engine, "vrf": p.vrf, "n_nodes": p.n_nodes,
+        "n_groups": r.n_groups,
+        "setup_s": round(total - (marks[-1] - marks[0]), 2),
+        "tick_ms": round(tick_s * 1e3, 1),
+        "ticks_per_s": round(1.0 / tick_s, 3),
+        "node_ticks_per_s": int(p.n_nodes / tick_s),
+        "alive_frac_final": round(float(r.alive_frac_trace[-1]), 4),
+        "repairs": int(r.repairs),
+    }
+
+
+def _eclipse_month(n_nodes: int) -> dict:
+    """1K-node, one-simulated-month eclipse run (the protocol-only
+    scenario): 25% of the ring cut for 14 ticks (one week at 12h steps)."""
+    p = dataclasses.replace(
+        _base_params(n_nodes), steps=60, adv_policy="eclipse",
+        attack_frac=0.25, attack_step=20, eclipse_steps=14,
+        churn_per_year=26.0)
+    t0 = time.time()
+    r = PS.run_protocol(p, engine="vectorized")
+    wall = time.time() - t0
+    return {
+        "engine": "vectorized", "vrf": p.vrf, "n_nodes": n_nodes,
+        "n_groups": r.n_groups, "scenario": "eclipse-1month",
+        "wall_s": round(wall, 1),
+        "tick_ms": round(wall / p.steps * 1e3, 1),
+        "alive_frac_final": round(float(r.alive_frac_trace[-1]), 4),
+        "lost_objects": int(r.lost_objects),
+        "repairs": int(r.repairs),
+    }
+
+
+def run():
+    n = 1000
+    rows = []
+    variants = [("vectorized", "hash"), ("vectorized", "arx"),
+                ("reference", "hash")]
+    for engine, vrf in variants:
+        p = dataclasses.replace(_base_params(n), vrf=vrf)
+        rows.append(_tick_cost(p, engine))
+    ecl = _eclipse_month(n)
+    rows.append(ecl)
+    if SCALE == "full":  # 10K-node leg, vectorized only (the point of it)
+        p = _base_params(10_000)
+        rows.append(_tick_cost(p, "vectorized"))
+    emit("protocol_speed", rows)
+
+    ref = next(r for r in rows if r["engine"] == "reference")
+    vec = {r["vrf"]: r for r in rows
+           if r["engine"] == "vectorized" and "scenario" not in r
+           and r["n_nodes"] == n}
+    point = {
+        "bench": "protocol_speed", "scale": SCALE, "n_nodes": n,
+        "headline": {
+            "tick_ms_reference": ref["tick_ms"],
+            "tick_ms_vectorized_hash": vec["hash"]["tick_ms"],
+            "tick_ms_vectorized_arx": vec["arx"]["tick_ms"],
+            "node_ticks_per_s": vec["hash"]["node_ticks_per_s"],
+            "speedup_hash": round(ref["tick_ms"] / vec["hash"]["tick_ms"],
+                                  1),
+            "speedup_arx": round(ref["tick_ms"] / vec["arx"]["tick_ms"], 1),
+            # the acceptance metric: fastest batched backend vs PR 3 scalar
+            # (the two backends trade places with host noise; either one
+            # is a fair reading of "the batched path")
+            "speedup_best": round(ref["tick_ms"]
+                                  / min(vec["hash"]["tick_ms"],
+                                        vec["arx"]["tick_ms"]), 1),
+            "eclipse_month_s": ecl["wall_s"],
+        },
+        "rows": rows,
+    }
+    with open(RESULTS / "BENCH_protocol_speed.json", "w") as f:
+        json.dump(point, f, indent=1)
+    h = point["headline"]
+    print(f"  -> tick {h['tick_ms_reference']}ms (PR 3 scalar) vs "
+          f"{h['tick_ms_vectorized_hash']}ms (vectorized, hash) / "
+          f"{h['tick_ms_vectorized_arx']}ms (arx kernel): "
+          f"{h['speedup_hash']}x / {h['speedup_arx']}x at {n} nodes; "
+          f"1-month eclipse run {h['eclipse_month_s']}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ def main() -> int:
         fault_tolerance,
         fragment_trace,
         latency,
+        protocol_speed,
         repair_traffic,
         roofline,
         selection_micro,
@@ -33,6 +34,7 @@ def main() -> int:
         ("selection_micro", selection_micro.run),
         ("durability_model", durability_model.run),
         ("engine_speed", engine_speed.run),
+        ("protocol_speed", protocol_speed.run),
         ("cross_validation", cross_validate.run),
         ("roofline", roofline.run),
     ]

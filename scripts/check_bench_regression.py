@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Gate benchmark throughput against the committed trajectory point.
+
+The repo commits one machine-readable ``BENCH_<name>.json`` per benchmark
+(the "trajectory": every PR that touches performance refreshes it). The CI
+``bench-regression`` job snapshots the committed files, re-runs the
+benchmarks at ``BENCH_SCALE=quick``, and calls this script to compare the
+fresh numbers with the snapshot:
+
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/bench-baseline --current results/bench
+
+A throughput metric may regress by at most ``--tolerance`` (default 0.30,
+the >30% gate; override with ``BENCH_REGRESSION_TOLERANCE`` for noisy
+hosts). Only metrics present in BOTH files are compared, so adding new
+fields never breaks older baselines. Higher-is-better metrics are the
+``*_per_s`` and ``speedup*`` families; ``*_ms``/``*_s`` latencies are
+compared in the inverse direction.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+# headline metrics gated per benchmark: name -> higher_is_better
+GATED = {
+    "steps_per_s": True,
+    "samples_per_s": True,
+    "node_ticks_per_s": True,
+    "speedup_vs_loop": True,
+    "speedup_best": True,
+    "engine_s": False,
+    "tick_ms_vectorized_hash": False,
+    "tick_ms_vectorized_arx": False,
+    "eclipse_month_s": False,
+}
+
+
+def _flatten(headline: dict, prefix: str = "") -> dict[str, float]:
+    out: dict[str, float] = {}
+    for k, v in headline.items():
+        if isinstance(v, dict):
+            out.update(_flatten(v, f"{prefix}{k}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[f"{prefix}{k}"] = float(v)
+    return out
+
+
+def compare(baseline: dict, current: dict, tolerance: float,
+            name: str) -> list[str]:
+    if baseline.get("scale") != current.get("scale"):
+        return [f"{name}: scale mismatch "
+                f"({baseline.get('scale')} vs {current.get('scale')}) — "
+                "not comparable"]
+    base = _flatten(baseline.get("headline", {}))
+    cur = _flatten(current.get("headline", {}))
+    failures = []
+    for key in sorted(set(base) & set(cur)):
+        leaf = key.rsplit(".", 1)[-1]
+        if leaf not in GATED:
+            continue
+        b, c = base[key], cur[key]
+        if b <= 0:
+            continue
+        # lower-is-better metrics invert; a current value of 0 there is an
+        # infinite improvement, never a regression
+        ratio = c / b if GATED[leaf] else (float("inf") if c == 0
+                                           else b / c)
+        status = "ok" if ratio >= 1.0 - tolerance else "REGRESSION"
+        print(f"  {name}:{key}: baseline={b:g} current={c:g} "
+              f"({ratio:.2f}x of baseline) {status}")
+        if status != "ok":
+            failures.append(f"{name}:{key} at {ratio:.2f}x of baseline "
+                            f"(tolerance {1.0 - tolerance:.2f}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", default="results/bench",
+                    help="directory holding the freshly emitted files")
+    ap.add_argument("--tolerance", type=float, default=float(
+        os.environ.get("BENCH_REGRESSION_TOLERANCE", "0.30")),
+        help="allowed fractional throughput loss (default 0.30)")
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline)
+    cur_dir = pathlib.Path(args.current)
+    baselines = sorted(base_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no BENCH_*.json under {base_dir} — nothing to gate")
+        return 1
+    failures: list[str] = []
+    compared = 0
+    for bpath in baselines:
+        cpath = cur_dir / bpath.name
+        if not cpath.exists():
+            failures.append(f"{bpath.name}: benchmark emitted no fresh "
+                            f"file at {cpath}")
+            continue
+        compared += 1
+        failures += compare(json.loads(bpath.read_text()),
+                            json.loads(cpath.read_text()),
+                            args.tolerance, bpath.stem)
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nbench regression gate passed ({compared} trajectory "
+          f"point(s), tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

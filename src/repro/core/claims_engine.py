@@ -1,0 +1,363 @@
+"""Persistent array-table engine for the per-tick persistence-claim round.
+
+``group.broadcast_claims`` + ``prune_dead_members`` — the PR 3 scalar path —
+cost one ``verify_selection`` hash round-trip *and* several dict operations
+per (claim, receiver) pair, every tick. The closed form of the round (see
+:meth:`ClaimsEngine.round`) makes the verifications batchable, but a naive
+per-round table build still pays O(members × viewers) dict traffic just to
+re-write timestamps that change the same way every round. This engine keeps
+the group state resident in arrays *between* rounds and touches Python
+dicts only where the round actually changes something:
+
+* **Membership** lives in a persistent presence matrix ``P[viewer, member]``
+  per group. A steady round changes no membership at all — insertions
+  (re-admissions) and prune deletions are rare events applied to the real
+  ``GroupView.members`` dicts one by one, preserving the exact insertion
+  order the scalar loop would produce.
+* **Timestamps** are virtualized. A claim round refreshes almost every
+  (viewer, member) pair to "now", so the engine stores one ``bulk_ts`` per
+  view plus a small exception dict for the members that were *not*
+  refreshed (dead, eclipsed, or unclaimed). The effective timestamp of a
+  member is ``max(dict value, bulk_ts)`` — or ``max(dict value, exception
+  entry)`` when tracked — which reproduces the reference prune decisions
+  exactly while writing O(exceptions) instead of O(members) per view. Dict
+  values written by shared protocol code (MembershipTimer merges, repair
+  bootstraps) dominate via the ``max``, so external writes need no hook.
+* **Verification** flags (does this viewer hold a verifying claim for this
+  group?) are computed once per (re)ingest through
+  ``selection.verify_selection_batch`` — one memoized batch VRF pass, a
+  single vectorized ``kernels/prf_select`` dispatch on the ARX registry —
+  and reused until the group is touched or the population count changes.
+
+Groups mutated outside the round (repairs, timer merges) are marked dirty
+via :meth:`touch` and re-ingested from their dicts at the next round; until
+then the engine refuses to answer pre-check queries for them, so callers
+fall back to the exact dict walk. Bit-compatibility of the whole scheme
+against the scalar loop is enforced end-to-end by
+``tests/test_protocol_golden.py``.
+"""
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+from repro.core import chunks as C
+from repro.core import selection as sel
+from repro.core.network import Node, SimNetwork
+
+_NEG_INF = float("-inf")
+
+
+class _GState:
+    """Resident claim-round state of one chunk group."""
+
+    __slots__ = ("chash", "anchor", "r_target", "vnids", "vrows", "vpos",
+                 "views", "colnids", "colpos", "colrows", "vcol", "P",
+                 "claim_ok", "bulk_ts", "stale_ts", "nn", "tril", "counts")
+
+    def __init__(self, chash: bytes):
+        self.chash = chash
+        self.anchor = C.hash_point(chash)
+        self.r_target = 0
+        self.vnids: list[int] = []     # viewer nids, ascending (turn order)
+        self.vrows: np.ndarray | None = None
+        self.vpos: dict[int, int] = {}
+        self.views: list = []          # GroupView per viewer
+        self.colnids: list[int] = []   # member-universe nids
+        self.colpos: dict[int, int] = {}
+        self.colrows: np.ndarray | None = None
+        self.vcol: np.ndarray | None = None   # viewer idx -> col idx
+        self.P: np.ndarray | None = None      # [V, C] presence
+        self.claim_ok: np.ndarray | None = None
+        self.bulk_ts: np.ndarray | None = None
+        self.stale_ts: list[dict[int, float]] = []
+        self.nn = -1                   # population count claim_ok was keyed on
+        self.tril: np.ndarray | None = None
+        self.counts: np.ndarray | None = None
+
+
+class ClaimsEngine:
+    """Array-resident claims rounds + repair pre-check counts for one net."""
+
+    def __init__(self, net: SimNetwork):
+        self.net = net
+        self.groups: dict[bytes, _GState] = {}
+        self.dirty: set[bytes] = set()
+        self._started = False
+
+    # -------------------------------------------------------------- ingest
+    def touch(self, chash: bytes) -> None:
+        """Mark a group's dicts as mutated outside the engine (repairs)."""
+        if self._started:
+            self.dirty.add(chash)
+
+    def _discover(self, nodes: list[Node]) -> None:
+        """First round only: full scan for the group universe (object
+        stores all happen before the first tick, so no new group hash can
+        appear afterwards — later viewer changes ride the dirty path)."""
+        seeds: dict[bytes, list[int]] = {}
+        for node in nodes:
+            for chash in node.groups:
+                seeds.setdefault(chash, []).append(node.nid)
+        for chash, nids in seeds.items():
+            g = _GState(chash)
+            self.groups[chash] = g
+            self._ingest(g, seed=nids)
+
+    def _ingest(self, g: _GState, seed: list[int] | None = None) -> None:
+        """(Re)build a group's tables from the live view dicts.
+
+        Keeps the virtual-timestamp state of surviving viewers: an
+        exception entry is reconciled with the (possibly newer) dict value
+        via ``max`` at read time, so external writes since the last round
+        are honored without bookkeeping here.
+        """
+        net = self.net
+        old_bulk = dict(zip(g.vnids, g.bulk_ts)) if g.bulk_ts is not None \
+            else {}
+        old_stale = dict(zip(g.vnids, g.stale_ts))
+        # viewer closure: previous viewers (or the discovery seed), plus
+        # any node referenced by a member dict that holds a view — a new
+        # repair member always appears in the repairing node's view, so
+        # the closure is complete
+        frontier = list(g.vnids) + list(seed or ())
+        seen = set()
+        vn: list[int] = []
+        alive = net.alive_set
+        while frontier:
+            nid = frontier.pop()
+            if nid in seen:
+                continue
+            seen.add(nid)
+            # dead viewers never broadcast, receive, prune, or repair
+            # again (no resurrection), so they are dropped from the
+            # tables outright — without this the viewer matrices grow by
+            # every churn replacement ever repaired in, and the O(V²)
+            # round cost creeps up tick over tick. Alive-only traversal
+            # stays complete: a new member always appears in the (alive)
+            # repairing node's view.
+            if nid not in alive:
+                continue
+            node = net.nodes[nid]
+            view = node.groups.get(g.chash)
+            if view is None:
+                continue
+            bisect.insort(vn, nid)
+            frontier.extend(view.members)
+        g.vnids = vn
+        g.vpos = {nid: j for j, nid in enumerate(vn)}
+        g.views = [net.nodes[nid].groups[g.chash] for nid in vn]
+        g.vrows = np.fromiter((net.row_of[nid] for nid in vn), np.int64,
+                              len(vn))
+        g.r_target = g.views[0].meta.r_target if g.views else 0
+        # member universe: every viewer plus every member nid
+        cols: list[int] = list(vn)
+        colpos = {nid: c for c, nid in enumerate(cols)}
+        for view in g.views:
+            for nid in view.members:
+                if nid not in colpos:
+                    colpos[nid] = len(cols)
+                    cols.append(nid)
+        g.colnids = cols
+        g.colpos = colpos
+        row_of = net.row_of
+        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in cols),
+                                np.int64, len(cols))
+        g.vcol = np.arange(len(vn), dtype=np.int64)  # viewers lead the cols
+        V, Cn = len(vn), len(cols)
+        g.P = np.zeros((V, Cn), bool)
+        for j, view in enumerate(g.views):
+            for nid in view.members:
+                g.P[j, colpos[nid]] = True
+        g.bulk_ts = np.fromiter((old_bulk.get(nid, _NEG_INF) for nid in vn),
+                                np.float64, V)
+        g.stale_ts = [old_stale.get(nid) or {} for nid in vn]
+        g.tril = np.tril(np.ones((V, V), bool), k=-1)
+        g.counts = None
+        self._verify_claims(g)
+
+    def _verify_claims(self, g: _GState) -> None:
+        """claim_ok[v]: viewer holds >= 1 verifying claim proof (batched)."""
+        net = self.net
+        proofs, owners = [], []
+        for j, nid in enumerate(g.vnids):
+            for proof in net.nodes[nid].claim_proofs_by_chash.get(
+                    g.chash, {}).values():
+                proofs.append(proof)
+                owners.append(j)
+        g.claim_ok = np.zeros(len(g.vnids), bool)
+        if proofs:
+            ok = sel.verify_selection_batch(
+                net.registry, proofs, [g.anchor] * len(proofs), g.r_target,
+                net.n_nodes)
+            np.logical_or.at(g.claim_ok, owners, ok)
+        g.nn = net.n_nodes
+
+    # --------------------------------------------------------------- round
+    def round(self, nodes: list[Node], timeout_s: float) -> None:
+        """One claim round — bit-identical to the scalar loop::
+
+            for node in nodes:                      # ring order
+                if eclipsed(node): continue
+                broadcast_claims(net, node)
+                prune_dead_members(net, node, timeout_s)
+
+        Closed form (``pos`` = turn order, ``M0`` = pre-round views): for a
+        receiver R earlier than sender S, S's view may already contain R's
+        own refresh, so ``A(S→R) = ok(S→R) ∧ (R ∈ M0(S) ∨ A0(R→S))``;
+        for a later receiver ``A(S→R) = ok(S→R) ∧ R ∈ M0(S)`` — one
+        boolean matrix identity per group. Membership edits and prune
+        decisions are applied to the real dicts in exact turn order;
+        timestamps refresh virtually (``bulk_ts`` + exceptions).
+        """
+        net = self.net
+        now = net.now
+        if not self._started:
+            self._started = True
+            self._discover(nodes)
+        for chash in self.dirty:
+            g = self.groups.get(chash)
+            if g is not None:
+                self._ingest(g)
+        self.dirty.clear()
+        alive_rows = net.alive_rows
+        eclipse_on = net.eclipse is not None
+        for g in self.groups.values():
+            V = len(g.vnids)
+            if V == 0:
+                continue
+            if g.nn != net.n_nodes:
+                self._verify_claims(g)  # population shift re-keys Alg. 2
+            va = alive_rows[g.vrows]
+            if V - int(va.sum()) > max(8, V // 8):
+                # enough viewers died since the last ingest: compact the
+                # tables (amortized O(1) per death; keeps V ~ alive set)
+                self._ingest(g)
+                V = len(g.vnids)
+                if V == 0:
+                    continue
+                va = alive_rows[g.vrows]
+            if eclipse_on:
+                ecl = np.fromiter((net.is_eclipsed(nid) for nid in g.vnids),
+                                  bool, V)
+                recv = va & ~ecl
+            else:
+                recv = va
+            send = g.claim_ok & recv
+            m0 = g.P[:, :V]  # viewer-viewer presence (viewers lead cols)
+            okm = send[:, None] & recv[None, :]
+            np.fill_diagonal(okm, False)
+            a0 = okm & m0
+            a = okm & (m0 | (g.tril & a0.T))
+            # --- rare membership events -------------------------------
+            # a view needs a prune pass when it tracks a timestamp
+            # exception OR its bulk refresh is itself near the timeout
+            # (first round; a viewer returning from an eclipse window) —
+            # then every member must be checked, like the reference does.
+            # Insertion = the SENDER is new to the RECEIVER's view:
+            # m0[j, s] is "s ∈ view(j)", so the test for edge (s, r) is
+            # ~m0[r, s] — the transpose, not ~m0[s, r].
+            ins_s, ins_r = np.nonzero(a & ~m0.T)
+            suspect = recv & (now - g.bulk_ts > timeout_s)
+            events = sorted(
+                set(int(r) for r in ins_r)
+                | {j for j in range(V)
+                   if suspect[j] or (recv[j] and g.stale_ts[j])})
+            if events:
+                self._apply_events(g, a, ins_s, ins_r, events, suspect,
+                                   now, timeout_s)
+            # --- virtual timestamp maintenance ------------------------
+            refr = np.zeros_like(g.P)
+            refr[:, :V] = a.T
+            nonrefr = g.P & ~refr & recv[:, None]
+            nonrefr[np.arange(V), np.arange(V)] = False  # self-entry: never
+            nr_r, nr_c = np.nonzero(nonrefr)
+            if nr_r.size:
+                for j, c in zip(nr_r, nr_c):
+                    st = g.stale_ts[j]
+                    nid = g.colnids[c]
+                    if nid not in st:
+                        last = g.views[j].members[nid]
+                        bulk = g.bulk_ts[j]
+                        st[nid] = last if last > bulk else bulk
+            g.bulk_ts[recv] = now
+            g.counts = None
+
+    def _apply_events(self, g: _GState, a, ins_s, ins_r, events, suspect,
+                      now: float, timeout_s: float) -> None:
+        """Apply insertions and prunes to the real dicts in turn order."""
+        ins_by_r: dict[int, list[int]] = {}
+        for s, r in zip(ins_s, ins_r):
+            ins_by_r.setdefault(int(r), []).append(int(s))
+        for j in events:
+            view = g.views[j]
+            mem = view.members
+            self_nid = g.vnids[j]
+            st = g.stale_ts[j]
+            senders = sorted(ins_by_r.get(j, ()))
+            k = bisect.bisect_left(senders, j)
+            for s in senders[:k]:       # inserted before j's own turn
+                mem[g.vnids[s]] = now
+                g.P[j, s] = True
+                st.pop(g.vnids[s], None)
+            # ---- j's own turn: the prune pass -------------------------
+            scan = (mem if suspect[j] else list(st))
+            readds: list[int] = []  # pruned members re-added after the turn
+            for nid in list(scan):
+                if nid == self_nid:
+                    continue            # reference never prunes self
+                sidx = g.vpos.get(nid)
+                edge = sidx is not None and sidx != j and a[sidx, j]
+                if edge and sidx < j:
+                    st.pop(nid, None)   # refreshed before the turn: fresh
+                    continue
+                if nid not in mem:
+                    st.pop(nid, None)   # vanished externally (re-ingest)
+                    continue
+                last = mem[nid]
+                tracked = st.get(nid)
+                eff = last
+                if tracked is not None and tracked > eff:
+                    eff = tracked
+                if tracked is None and g.bulk_ts[j] > eff:
+                    eff = g.bulk_ts[j]
+                if now - eff > timeout_s:   # the reference prune test
+                    del mem[nid]
+                    st.pop(nid, None)
+                    g.P[j, g.colpos[nid]] = False
+                    if edge:            # re-added at the sender's turn
+                        readds.append(sidx)
+                elif edge:
+                    st.pop(nid, None)   # refreshed after the turn
+            # post-turn events land in sender-turn order: fresh inserts
+            # and prune-then-readd claims interleave on that one axis
+            for s in sorted(senders[k:] + readds):
+                mem[g.vnids[s]] = now
+                g.P[j, s] = True
+                st.pop(g.vnids[s], None)
+
+    # ----------------------------------------------------- repair pre-check
+    def precheck_count(self, nid: int, chash: bytes) -> int | None:
+        """Alive-member count of ``nid``'s view, or None if the engine
+        cannot vouch for it (dirty group / unknown view) — callers then
+        fall back to the exact dict walk."""
+        if chash in self.dirty:
+            return None
+        g = self.groups.get(chash)
+        if g is None:
+            return None
+        j = g.vpos.get(nid)
+        if j is None:
+            return None
+        if g.counts is None:
+            alive_cols = np.zeros(len(g.colnids), bool)
+            valid = g.colrows >= 0
+            alive_cols[valid] = self.net.alive_rows[g.colrows[valid]]
+            g.counts = (g.P & alive_cols[None, :]).sum(axis=1)
+        return int(g.counts[j])
+
+    def begin_repair_tick(self) -> None:
+        """Invalidate cached counts (liveness changed since last tick)."""
+        for g in self.groups.values():
+            g.counts = None

@@ -8,6 +8,30 @@ themselves into groups they were not selected for.
 
 ``MembershipTimer`` re-runs Locate() so views *eventually* converge even when
 the client-issued bootstrap membership was missed (§4.3.3).
+
+Two implementations of the per-step claim round live here:
+
+* the **scalar path** — :func:`broadcast_claims` + :func:`prune_dead_members`
+  per node, one ``verify_selection`` sha256 round-trip per (claim, receiver)
+  pair.  This is the PR 3 reference the protocol golden regression pins.
+* the **vectorized path** — ``repro.core.claims_engine.ClaimsEngine``
+  runs the same round as array ops over persistent per-group tables with
+  ONE batched selection-proof verification per (re)ingest
+  (``selection.verify_selection_batch``).  It is *bit-identical* to
+  running the scalar loop over the same node order: the sequential view
+  updates have a closed form (derivation in ``ClaimsEngine.round``),
+  including dict insertion order, prune timing, and effective timestamps,
+  so downstream repair iteration order — and hence RNG consumption — is
+  unchanged.
+
+Partition/eclipse semantics (``SimNetwork.eclipse``): an eclipsed node is
+alive but unreachable — its claims are dropped in both directions and its
+own membership timers freeze (a node that observes *total* connectivity
+loss must not evict its whole view; it waits out the partition instead, so
+it returns with its views intact — the invariant
+``tests/test_eclipse.py`` checks). Unaffected nodes keep pruning the
+silent segment after the claim timeout, exactly as they would prune
+crashed peers.
 """
 from __future__ import annotations
 
@@ -36,15 +60,14 @@ def make_claims(node: Node) -> list[PersistenceClaim]:
     analysis covers — so claims are built from group views, not payloads.
     """
     claims = []
-    for chash, view in node.groups.items():
-        for (ch, idx), proof in node.claim_proofs.items():
-            if ch == chash:
-                claims.append(
-                    PersistenceClaim(
-                        chash=chash, index=idx, proof=proof,
-                        sender_nid=node.nid,
-                    )
+    for chash in node.groups:
+        for idx, proof in node.claim_proofs_by_chash.get(chash, {}).items():
+            claims.append(
+                PersistenceClaim(
+                    chash=chash, index=idx, proof=proof,
+                    sender_nid=node.nid,
                 )
+            )
     return claims
 
 
@@ -68,7 +91,13 @@ def receive_claim(net: SimNetwork, receiver: Node, claim: PersistenceClaim) -> b
 
 
 def broadcast_claims(net: SimNetwork, node: Node) -> int:
-    """One heartbeat round for ``node``; returns #claims accepted anywhere."""
+    """One heartbeat round for ``node``; returns #claims accepted anywhere.
+
+    Eclipsed senders reach nobody and eclipsed receivers hear nothing —
+    the partition drops claims in both directions.
+    """
+    if net.is_eclipsed(node.nid):
+        return 0
     accepted = 0
     for claim in make_claims(node):
         view = node.groups.get(claim.chash)
@@ -76,7 +105,8 @@ def broadcast_claims(net: SimNetwork, node: Node) -> int:
             continue
         for peer_nid in list(view.members):
             peer = net.nodes.get(peer_nid)
-            if peer is None or not peer.alive or peer.nid == node.nid:
+            if (peer is None or not peer.alive or peer.nid == node.nid
+                    or net.is_eclipsed(peer_nid)):
                 continue
             if receive_claim(net, peer, claim):
                 accepted += 1
@@ -94,21 +124,67 @@ def prune_dead_members(net: SimNetwork, node: Node, timeout_s: float) -> None:
             del view.members[nid]
 
 
-def membership_timer(net: SimNetwork, node: Node, chash: bytes) -> None:
-    """MembershipTimer() of §4.3.3: merge Locate() results into the view."""
+def membership_timer(net: SimNetwork, node: Node, chash: bytes,
+                     batch: bool = False, cache: dict | None = None) -> None:
+    """MembershipTimer() of §4.3.3: merge Locate() results into the view.
+
+    ``batch=True`` verifies every candidate's stored claim proofs through
+    ``selection.verify_selection_batch`` (memoized, one VRF pass) instead
+    of scalar per-proof calls; a candidate is (re)admitted iff *any* of
+    its proofs verifies, so the admitted set — and the resulting view
+    state — is identical either way. Eclipsed nodes cannot run Locate().
+
+    The admitted set is caller-independent — a pure function of the ring,
+    the candidates' stored proofs, and the population count, none of which
+    change between repairs inside one tick — so repair ticks pass
+    ``cache`` (a per-tick ``{chash: admitted nids}`` dict) and every view
+    of the same short group merges the one computed set. The repair loop
+    evicts a group's entry whenever a repair adds a member (new proofs /
+    new view), keeping the cached set exact.
+    """
+    if net.is_eclipsed(node.nid):
+        return
     view = node.groups.get(chash)
     if view is None:
         return
+    if cache is not None:
+        admit = cache.get(chash)
+        if admit is not None:
+            now = net.now
+            for nid in admit:
+                view.members[nid] = now
+            return
     anchor = C.hash_point(chash)
     cands = net.candidates(anchor, min(4 * view.meta.r_target, net.n_nodes))
+    if batch:
+        proofs, owners = [], []
+        for cand in cands:
+            if cand.groups.get(chash) is None:
+                continue
+            for proof in cand.claim_proofs_by_chash.get(chash, {}).values():
+                proofs.append(proof)
+                owners.append(cand)
+        admit = []
+        if proofs:
+            ok = sel.verify_selection_batch(
+                net.registry, proofs, [anchor] * len(proofs),
+                view.meta.r_target, net.n_nodes)
+            seen = set()
+            for cand, good in zip(owners, ok):
+                if good and cand.nid not in seen:
+                    seen.add(cand.nid)
+                    admit.append(cand.nid)
+            for nid in admit:
+                view.members[nid] = net.now
+        if cache is not None:
+            cache[chash] = admit
+        return
     for cand in cands:
         peer_view = cand.groups.get(chash)
         if peer_view is None:
             continue
         # peers who can present a verifiable claim are (re)admitted
-        for (ch, idx), proof in cand.claim_proofs.items():
-            if ch != chash:
-                continue
+        for proof in cand.claim_proofs_by_chash.get(chash, {}).values():
             if sel.verify_selection(
                 net.registry, proof, anchor, view.meta.r_target, net.n_nodes
             ):

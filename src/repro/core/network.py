@@ -16,7 +16,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import selection as sel
-from repro.core.vrf import RING, KeyPair, VRFRegistry, node_id
+from repro.core.vrf import RING, KeyPair, make_registry, node_id
 
 # --- geo latency model (one-way ms between the paper's 5 AWS regions) -----
 REGIONS = ("us-west", "ap-southeast", "eu-central", "sa-east", "af-south")
@@ -77,11 +77,16 @@ class Node:
         self.region = region
         self.byzantine = byzantine
         self.alive = True
+        self.row = -1  # dense index into the network's alive table
         self.fragments: dict[tuple[bytes, int], bytes] = {}
         self.groups: dict[bytes, GroupView] = {}
         # selection proofs stored alongside fragments (§4.3.3: avoids
-        # regenerating VRF proofs every heartbeat interval)
+        # regenerating VRF proofs every heartbeat interval), plus a
+        # per-chunk index so claim construction / MembershipTimer checks
+        # read only the group's own proofs instead of scanning every
+        # fragment the node holds
         self.claim_proofs: dict[tuple[bytes, int], object] = {}
+        self.claim_proofs_by_chash: dict[bytes, dict[int, object]] = {}
 
     # -- selection (Alg. 2) -------------------------------------------------
     def selection_proof(self, fragment_hash: int, anchor: int, r_target: int):
@@ -100,12 +105,14 @@ class Node:
         view.members[self.nid] = self.net.now
         if proof is not None:
             self.claim_proofs[(meta.chash, index)] = proof
+            self.claim_proofs_by_chash.setdefault(meta.chash, {})[index] = \
+                proof
         if not self.byzantine:
             self.fragments[(meta.chash, index)] = payload
         return True
 
     def serve_fragments(self, chash: bytes) -> dict[int, bytes]:
-        if self.byzantine or not self.alive:
+        if self.byzantine or not self.alive or self.net.is_eclipsed(self.nid):
             return {}
         return {
             idx: data
@@ -121,7 +128,7 @@ class Node:
 
     def cached_chunk(self, chash: bytes) -> bytes | None:
         view = self.groups.get(chash)
-        if view is None or self.byzantine:
+        if view is None or self.byzantine or self.net.is_eclipsed(self.nid):
             return None
         if view.chunk_cache is not None and self.net.now < view.cache_expiry:
             return view.chunk_cache
@@ -129,8 +136,23 @@ class Node:
 
 
 class SimNetwork:
-    def __init__(self, seed: int = 0, latency: LatencyModel | None = None):
-        self.registry = VRFRegistry()
+    """In-process peer network.
+
+    ``vrf=`` picks the selection-proof registry backend (see
+    ``repro.core.vrf.make_registry``): ``"hash"`` is the PR 3 keyed-sha256
+    construction (bit-stable, the default), ``"arx"`` the batched
+    ``kernels/prf_select`` construction used for 1K+-node protocol runs.
+
+    ``eclipse`` models a partition/eclipse adversary: when set to a ring
+    interval ``(lo, hi)``, every node whose id falls inside it is *alive
+    but unreachable* — DHT lookups skip it, it serves no fragments or
+    cached chunks, and the protocol layer drops its claims and freezes its
+    timers (see ``protocol_sim``). Set/cleared by the simulation loop.
+    """
+
+    def __init__(self, seed: int = 0, latency: LatencyModel | None = None,
+                 vrf: str = "hash", cache_lookups: bool = False):
+        self.registry = make_registry(vrf)
         self.rng = np.random.default_rng(seed)
         self.latency = latency or LatencyModel()
         self.nodes: dict[int, Node] = {}
@@ -138,6 +160,26 @@ class SimNetwork:
         self.now = 0.0  # seconds
         self.repair_traffic_bytes = 0
         self.repair_count = 0
+        self.eclipse: tuple[int, int] | None = None  # cut ring segment
+        # dense per-node tables for the vectorized tick path: row i of
+        # alive_rows is nodes' liveness in creation order (Node.row)
+        self._rows: list[Node] = []
+        self.alive_rows = np.zeros(0, dtype=bool)
+        # DHT-lookup memo: candidates() is a pure function of the ring and
+        # the eclipse cut, both of which change only at churn/window edges,
+        # while a repair tick re-runs the same ~R-wide lookups for every
+        # member of every short group. Invalidates on any membership or
+        # partition change (_ring_version). Off by default so the scalar
+        # reference path stays the unmodified PR 3 implementation the
+        # protocol_speed benchmark baselines against; the vectorized
+        # engine turns it on (results are identical either way — the
+        # lookup is deterministic).
+        self.cache_lookups = cache_lookups
+        self._ring_version = 0
+        self._cand_state: tuple = (-1, None)
+        self._cand_cache: dict[tuple[int, int], list[Node]] = {}
+        self.row_of: dict[int, int] = {}    # nid -> dense row
+        self.alive_set: set[int] = set()    # alive nids (mirror of .alive)
 
     # -- membership ----------------------------------------------------------
     @property
@@ -151,11 +193,24 @@ class SimNetwork:
         self.registry.register(kp)
         self.nodes[node.nid] = node
         bisect.insort(self._ring, node.nid)
+        node.row = len(self._rows)
+        self._rows.append(node)
+        if node.row >= self.alive_rows.shape[0]:  # amortized growth
+            grown = np.zeros(max(64, 2 * self.alive_rows.shape[0]), bool)
+            grown[:self.alive_rows.shape[0]] = self.alive_rows
+            self.alive_rows = grown
+        self.alive_rows[node.row] = True
+        self.row_of[node.nid] = node.row
+        self.alive_set.add(node.nid)
+        self._ring_version += 1
         return node
 
     def fail_node(self, nid: int) -> None:
         node = self.nodes[nid]
         node.alive = False
+        self.alive_rows[node.row] = False
+        self.alive_set.discard(nid)
+        self._ring_version += 1
         i = bisect.bisect_left(self._ring, nid)
         if i < len(self._ring) and self._ring[i] == nid:
             self._ring.pop(i)
@@ -163,30 +218,58 @@ class SimNetwork:
     def alive_nodes(self) -> list[Node]:
         return [self.nodes[n] for n in self._ring]
 
+    # -- partition / eclipse -------------------------------------------------
+    def is_eclipsed(self, nid: int) -> bool:
+        """True iff ``nid`` sits inside the cut ring segment (unreachable)."""
+        e = self.eclipse
+        if e is None:
+            return False
+        lo, hi = e
+        p = nid % RING
+        return lo <= p < hi if lo <= hi else (p >= lo or p < hi)
+
     # -- DHT-style lookup ----------------------------------------------------
     def candidates(self, point: int, count: int) -> list[Node]:
-        """Best-effort nearest-on-ring lookup (the paper's DHT-Lookup)."""
+        """Best-effort nearest-on-ring lookup (the paper's DHT-Lookup).
+
+        Eclipsed nodes are unreachable at the routing layer, so the walk
+        passes over them (exactly as it passes over failed nodes, which
+        are not in the ring at all).
+        """
         if not self._ring:
             return []
+        key = None
+        if self.cache_lookups:
+            state = (self._ring_version, self.eclipse)
+            if state != self._cand_state:
+                self._cand_state = state
+                self._cand_cache.clear()
+            key = (point, count)
+            hit = self._cand_cache.get(key)
+            if hit is not None:
+                return hit
         count = min(count, len(self._ring))
         i = bisect.bisect_left(self._ring, point % RING)
         # walk outwards on the ring from the insertion point
         out: list[int] = []
         lo, hi = i - 1, i
         n = len(self._ring)
-        while len(out) < count:
+        seen = 0
+        while len(out) < count and seen < n:
             lo_id = self._ring[lo % n]
             hi_id = self._ring[hi % n]
             if sel.ring_distance(point, lo_id) <= sel.ring_distance(point, hi_id):
-                out.append(lo_id)
-                lo -= 1
+                nxt, lo = lo_id, lo - 1
             else:
-                out.append(hi_id)
-                hi += 1
-            if len(out) >= n:
-                break
+                nxt, hi = hi_id, hi + 1
+            seen += 1
+            if not self.is_eclipsed(nxt):
+                out.append(nxt)
         uniq = list(dict.fromkeys(out))[:count]
-        return [self.nodes[n_] for n_ in uniq]
+        found = [self.nodes[n_] for n_ in uniq]
+        if key is not None:
+            self._cand_cache[key] = found
+        return found
 
     # -- latency accounting ----------------------------------------------------
     def rtt(self, a: Node, b: Node) -> float:

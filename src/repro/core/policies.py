@@ -49,6 +49,21 @@ Adversary (``adv_policy``):
 * ``targeted`` (:data:`ADV_TARGETED`) — greedy targeted kill at
   ``attack_step`` under the A.3 cost model (:func:`kill_cost`), budget
   ``attack_frac · n_nodes`` (paper Fig. 6 bottom).
+* ``eclipse`` (:data:`ADV_ECLIPSE`) — partition adversary: the ring
+  segment covering ``attack_frac`` of id space is cut off for
+  ``eclipse_steps`` steps starting at ``attack_step``. Eclipsed nodes are
+  *alive but unreachable* — they keep their fragments and views, but no
+  claims or repairs cross the cut, so their groups churn without repair
+  for the whole window. Only the protocol layer can express the cut
+  itself; the engine runs the documented **mean-field approximation**
+  (:func:`eclipse_groups`, :func:`eclipse_active`): VRF placement is
+  ring-local, so a fraction ``attack_frac`` of chunk groups sit inside
+  the segment, and those groups get repair (and refills, traffic, cache
+  warming) suppressed during the window while i.i.d. churn continues.
+  The approximation is *deterministic* where the protocol's eclipsed set
+  is binomial across seeds (anchors are hash-uniform), and it charges
+  whole groups where the protocol's segment-boundary groups straddle the
+  cut — both documented leaks cross-validated by ``tests/test_eclipse.py``.
 
 Cache policy is the scalar ``cache_ttl_hours`` knob (0 disables); the
 hit/miss traffic semantics are documented in ``repair.py`` and reproduced
@@ -67,8 +82,10 @@ CHURN_POLICIES = {"iid": CHURN_IID, "regional": CHURN_REGIONAL}
 ADV_STATIC = 0
 ADV_ADAPTIVE = 1
 ADV_TARGETED = 2
+ADV_ECLIPSE = 3
 ADVERSARY_POLICIES = {
     "static": ADV_STATIC, "adaptive": ADV_ADAPTIVE, "targeted": ADV_TARGETED,
+    "eclipse": ADV_ECLIPSE,
 }
 
 N_REGIONS = 16  # regional-burst fault domains (racks/AZs)
@@ -159,6 +176,33 @@ def refill_byz_probability(adv_policy, byz_fraction, adapt_boost, xp=jnp):
         adv_policy == ADV_ADAPTIVE,
         xp.clip(byz_fraction * adapt_boost, 0.0, 0.95),
         byz_fraction)
+
+
+def ring_segment(attack_frac: float, ring: int) -> tuple[int, int]:
+    """The cut ring interval of the eclipse adversary (protocol layer).
+
+    Deterministic ``[0, attack_frac · ring)`` — node ids are hash-uniform,
+    so the segment's population share is ``attack_frac`` in expectation and
+    the choice of origin carries no information."""
+    return (0, int(attack_frac * ring))
+
+
+def eclipse_active(adv_policy, t, attack_step, eclipse_steps, xp=jnp):
+    """True while the eclipse window is open: ``attack_step ≤ t <
+    attack_step + eclipse_steps`` under the ``eclipse`` policy."""
+    return ((adv_policy == ADV_ECLIPSE) & (t >= attack_step)
+            & (t < attack_step + eclipse_steps))
+
+
+def eclipse_groups(gidx, attack_frac, n_groups, xp=jnp):
+    """Engine mean-field mask of eclipsed groups.
+
+    VRF placement is ring-local, so the protocol's cut segment captures a
+    fraction ``attack_frac`` of group anchors; the engine (which has no
+    anchors) eclipses the first ``round(attack_frac · n_groups)`` groups —
+    the right mean, no across-seed variance (documented approximation)."""
+    n_ecl = xp.round(attack_frac * n_groups)
+    return gidx < n_ecl
 
 
 def kill_cost(honest, k_inner, frags_per_node, xp=jnp):

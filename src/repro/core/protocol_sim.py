@@ -69,6 +69,7 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core import chunks as C
+from repro.core import claims_engine as CE
 from repro.core import group as G
 from repro.core import policies as P
 from repro.core import repair as R
@@ -107,7 +108,9 @@ class ProtocolParams:
     adapt_boost: float = 2.0
     attack_frac: float = 0.0
     attack_step: int = 0
+    eclipse_steps: int = 0  # partition window length (eclipse policy)
     claim_every: int = 1  # persistence-claim broadcast period (steps)
+    vrf: str = "hash"  # selection-proof registry backend (vrf.make_registry)
     seed: int = 0
 
     @property
@@ -128,7 +131,7 @@ class ProtocolParams:
             churn_policy=self.churn_policy, adv_policy=self.adv_policy,
             burst_prob=self.burst_prob, burst_mult=self.burst_mult,
             adapt_boost=self.adapt_boost, attack_frac=self.attack_frac,
-            attack_step=self.attack_step,
+            attack_step=self.attack_step, eclipse_steps=self.eclipse_steps,
         )
         kw.update(overrides)
         return kw
@@ -209,10 +212,9 @@ def _census(net: SimNetwork, registry: dict, k_inner: int):
     return honest, byz, honest >= k_inner
 
 
-def _churn_step(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
-                p_fail: float, p_fail_b: float, counter: list[int]) -> int:
-    """One churn half-step: i.i.d. thinning (+ regional burst), replace
-    failures with fresh arrivals. Returns the number of failures."""
+def _burst_coin(net: SimNetwork, rng, p: ProtocolParams, p_fail: float):
+    """The shared head of both churn implementations: draw the burst coin
+    and precompute the second-thinning probabilities."""
     churn_id = P.churn_policy_id(p.churn_policy)
     u = rng.random(2)
     burst, region = P.burst_from_uniforms(
@@ -221,6 +223,26 @@ def _churn_step(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
         np.float64(p_fail), p.burst_mult, xp=np))
     p_extra_b = float(P.byz_churn_probability(
         P.adv_policy_id(p.adv_policy), p_extra, xp=np))
+    return burst, region, p_extra, p_extra_b
+
+
+def _respawn(net: SimNetwork, rng, p: ProtocolParams, failed: list[int],
+             counter: list[int]) -> int:
+    """Replace ``failed`` nodes with fresh arrivals (population constant)."""
+    for nid in failed:
+        net.fail_node(nid)
+        _spawn(net, rng, p.byz_fraction, counter)
+    return len(failed)
+
+
+def _churn_scalar_body(net: SimNetwork, rng, client_nid: int, p_fail: float,
+                       p_fail_b: float, burst, region, p_extra: float,
+                       p_extra_b: float) -> list[int]:
+    """The PR 3 per-node thinning loop: one ``rng.random()`` per eligible
+    node, with the burst's second thinning draw interleaved per node.
+    Shared verbatim by the reference engine (every step) and the
+    vectorized engine (burst steps, whose interleaved draws a block draw
+    cannot reproduce). Returns the failed nids in ring order."""
     failed = []
     for node in net.alive_nodes():
         if node.nid == client_nid:
@@ -233,10 +255,42 @@ def _churn_step(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
             dead = rng.random() < (p_extra_b if node.byzantine else p_extra)
         if dead:
             failed.append(node.nid)
-    for nid in failed:
-        net.fail_node(nid)
-        _spawn(net, rng, p.byz_fraction, counter)
-    return len(failed)
+    return failed
+
+
+def _churn_step(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
+                p_fail: float, p_fail_b: float, counter: list[int]) -> int:
+    """One churn half-step: i.i.d. thinning (+ regional burst), replace
+    failures with fresh arrivals. Returns the number of failures."""
+    burst, region, p_extra, p_extra_b = _burst_coin(net, rng, p, p_fail)
+    failed = _churn_scalar_body(net, rng, client_nid, p_fail, p_fail_b,
+                                burst, region, p_extra, p_extra_b)
+    return _respawn(net, rng, p, failed, counter)
+
+
+def _churn_step_vec(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
+                    p_fail: float, p_fail_b: float,
+                    counter: list[int]) -> int:
+    """Vectorized churn: one block uniform draw + array thinning masks.
+
+    numpy's block ``rng.random(m)`` consumes the bit stream exactly like
+    ``m`` scalar draws, so on non-burst steps (every i.i.d. step, and the
+    ``1 − burst_prob`` share of regional steps) the failure set is
+    bit-identical to :func:`_churn_step`. Burst steps fall through to the
+    shared scalar body to preserve the interleaved stream.
+    """
+    burst, region, p_extra, p_extra_b = _burst_coin(net, rng, p, p_fail)
+    if burst:
+        failed = _churn_scalar_body(net, rng, client_nid, p_fail, p_fail_b,
+                                    burst, region, p_extra, p_extra_b)
+        return _respawn(net, rng, p, failed, counter)
+    elig = [n for n in net.alive_nodes() if n.nid != client_nid]
+    us = rng.random(len(elig))
+    pf = np.where(np.fromiter((n.byzantine for n in elig), bool, len(elig)),
+                  p_fail_b, p_fail)
+    dead = us < pf
+    failed = [n.nid for n, d in zip(elig, dead) if d]
+    return _respawn(net, rng, p, failed, counter)
 
 
 def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
@@ -287,7 +341,9 @@ def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
 
 
 def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
-                 frag_len: dict, pick) -> tuple[float, int, int, int]:
+                 frag_len: dict, pick, batch: bool = False,
+                 claims: "CE.ClaimsEngine | None" = None,
+                 ) -> tuple[float, int, int, int]:
     """One decentralized repair tick: every alive node checks each of its
     group views and repairs the ones short of ``R`` (repair.py §4.3.4).
 
@@ -296,19 +352,60 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
     views converge via MembershipTimer before they would add anyone.
     Returns ``(traffic_units, repairs, cache_hits, attempts)``; bytes are
     converted to object-size units with each group's true fragment length.
+
+    The vectorized engine passes ``batch=True`` (batched VRF rounds inside
+    ``repair_group``) and the :class:`~repro.core.claims_engine.
+    ClaimsEngine`, whose resident tables turn the ``≥ R`` pre-check into
+    an O(1) count lookup. Any group a ``repair_group`` call (or the
+    inlined timer merge) may have mutated is marked dirty on the engine
+    and falls back to the exact dict walk until the next claim round
+    re-ingests it — so the pre-check outcome is identical to the scalar
+    path's, call for call.
     """
     frag_units = 1.0 / (p.k_outer * p.k_inner)
     ttl = p.cache_ttl_hours
     traffic_units, repairs, hits, attempts = 0.0, 0, 0, 0
+    if claims is not None:
+        claims.begin_repair_tick()  # liveness changed since the last tick
+    timer_cache: dict | None = {} if batch else None
     for node in list(net.alive_nodes()):
         if node.byzantine:
             continue  # Fig. 6 adversary stores nothing and repairs nothing
         for chash in list(node.groups):
             if chash not in registry:
                 continue
-            if len(G.alive_members(net, node, chash)) >= p.r_inner:
+            n_alive = (claims.precheck_count(node.nid, chash)
+                       if claims is not None else None)
+            if n_alive is None:
+                n_alive = len(G.alive_members(net, node, chash))
+            if n_alive >= p.r_inner:
                 continue  # cheap pre-check; repair_group re-verifies
-            s = R.repair_group(net, node, chash, cache_ttl=ttl, pick=pick)
+            if batch and not net.is_eclipsed(node.nid):
+                # inline the call's no-op fast path: in steady state almost
+                # every under-R view is restored by MembershipTimer alone
+                # (an earlier member already repaired the group), and such
+                # a repair_group call's ONLY effect is the timer merge.
+                # Apply the cached admit set directly and skip the call
+                # when the merged view is back at R — bit-identical state
+                # (same writes, same order, no RNG anywhere on this path).
+                admit = timer_cache.get(chash)
+                if admit is not None:
+                    mem = node.groups[chash].members
+                    for nid in admit:
+                        mem[nid] = net.now
+                    if claims is not None:
+                        claims.touch(chash)  # merge outdated the tables
+                    alive_set = net.alive_set
+                    if sum(1 for nid in mem if nid in alive_set) \
+                            >= p.r_inner:
+                        continue
+            s = R.repair_group(net, node, chash, cache_ttl=ttl, pick=pick,
+                               batch=batch, timer_cache=timer_cache)
+            if claims is not None:
+                # MembershipTimer inside repair_group may have changed the
+                # view even when nothing was repaired — stop trusting the
+                # table for this group until the next re-ingest
+                claims.touch(chash)
             if s.repaired:
                 attempts += 1
             repairs += s.repaired
@@ -317,22 +414,42 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
     return traffic_units, repairs, hits, attempts
 
 
-def run_protocol(p: ProtocolParams) -> ProtocolResult:
+def run_protocol(p: ProtocolParams, engine: str = "vectorized",
+                 probe=None) -> ProtocolResult:
     """Run one seeded protocol-level simulation end to end.
 
     Builds the network, stores ``n_objects`` real objects through the VRF
     placement path, then advances ``steps`` scan-equivalent steps (churn →
-    attack → claims → repair → record). Deterministic: identical ``p``
-    (including ``seed``) produces an identical :class:`ProtocolResult`
-    (validated by ``tests/test_protocol_sim.py``).
+    attack → eclipse window → claims → repair → record). Deterministic:
+    identical ``p`` (including ``seed``) produces an identical
+    :class:`ProtocolResult` (validated by ``tests/test_protocol_sim.py``).
+
+    ``engine`` picks the tick implementation:
+
+    * ``"vectorized"`` (default) — block-drawn churn, the closed-form
+      array claims round (``group.claims_phase``), table-driven repair
+      pre-checks, and batched VRF verification (one memoized
+      ``verify_selection_batch`` pass per tick; a single vectorized
+      ``kernels/prf_select`` dispatch on the ``vrf="arx"`` backend).
+    * ``"reference"`` — the preserved PR 3 scalar path: per-claim
+      ``verify_selection`` sha256 loops and per-node dict updates.
+
+    Both engines consume the identical RNG stream and produce bit-identical
+    results (``tests/test_protocol_golden.py`` pins them to a golden
+    capture of the PR 3 commit); ``benchmarks/protocol_speed.py`` measures
+    the throughput gap. ``probe(t, net)``, if given, is called after each
+    step's census — a read-only hook for invariant tests.
     """
+    if engine not in ("vectorized", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
+    vec = engine == "vectorized"
     rng = np.random.default_rng(p.seed)
-    net = SimNetwork(seed=p.seed)
+    net = SimNetwork(seed=p.seed, vrf=p.vrf, cache_lookups=vec)
     counter = [0]
     for _ in range(p.n_nodes):
         _spawn(net, rng, p.byz_fraction, counter)
     client_node = next(n for n in net.alive_nodes() if not n.byzantine)
-    client = VaultClient(net, client_node)
+    client = VaultClient(net, client_node, batch=vec)
 
     code = p.code_params
     registry: dict[bytes, int] = {}   # chash -> flat group index
@@ -353,7 +470,7 @@ def run_protocol(p: ProtocolParams) -> ProtocolResult:
             if adv_id == P.ADV_ADAPTIVE else None)
     # bootstrap: top groups up to R (client stores may undershoot when the
     # candidate set thins out); uncounted, like the engine's exact-R init
-    _repair_tick(net, p, registry, frag_len, pick)
+    _repair_tick(net, p, registry, frag_len, pick, batch=vec)
 
     p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
     p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
@@ -367,17 +484,30 @@ def run_protocol(p: ProtocolParams) -> ProtocolResult:
     traffic_units, repairs, cache_hits, attempts = 0.0, 0, 0, 0
     honest_min, members_max = np.inf, 0.0
 
+    segment = P.ring_segment(p.attack_frac, RING)
+    claim_timeout = 3.0 * p.step_hours * max(p.claim_every, 1)
+    claims = CE.ClaimsEngine(net) if vec else None
     for t in range(p.steps):
         net.now += p.step_hours
-        _churn_step(net, rng, p, client_node.nid, p_fail, p_fail_b, counter)
+        if adv_id == P.ADV_ECLIPSE:
+            in_window = p.attack_step <= t < p.attack_step + p.eclipse_steps
+            net.eclipse = segment if in_window else None
+        churn = _churn_step_vec if vec else _churn_step
+        churn(net, rng, p, client_node.nid, p_fail, p_fail_b, counter)
         if adv_id == P.ADV_TARGETED and t == p.attack_step:
             _targeted_attack(net, rng, p, registry, p.k_inner)
         if p.claim_every and t % p.claim_every == 0:
-            for node in list(net.alive_nodes()):
-                G.broadcast_claims(net, node)
-                G.prune_dead_members(net, node, 3.0 * p.step_hours
-                                     * max(p.claim_every, 1))
-        tu, rp, ch, at = _repair_tick(net, p, registry, frag_len, pick)
+            nodes = list(net.alive_nodes())
+            if vec:
+                claims.round(nodes, claim_timeout)
+            else:
+                for node in nodes:
+                    if net.is_eclipsed(node.nid):
+                        continue  # partitioned: no claims, timers frozen
+                    G.broadcast_claims(net, node)
+                    G.prune_dead_members(net, node, claim_timeout)
+        tu, rp, ch, at = _repair_tick(
+            net, p, registry, frag_len, pick, batch=vec, claims=claims)
         traffic_units += tu
         repairs += rp
         cache_hits += ch
@@ -395,6 +525,9 @@ def run_protocol(p: ProtocolParams) -> ProtocolResult:
             if int(o) not in lost_seen:
                 lost_seen.add(int(o))
                 loss_events.append((t, int(o)))
+        if probe is not None:
+            probe(t, net)
+    net.eclipse = None  # window cannot outlive the run
 
     if p.steps == 0:  # nothing simulated: census the freshly-stored state
         honest, byz, alive = _census(net, registry, p.k_inner)

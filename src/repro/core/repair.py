@@ -53,7 +53,7 @@ def _fresh_index(net: SimNetwork, view) -> int:
 
 def _locate_new_member(
     net: SimNetwork, chash: bytes, fhash: int, r_target: int,
-    exclude: set[int], pick=None,
+    exclude: set[int], pick=None, batch: bool = False,
 ) -> tuple[Node, sel.SelectionProof] | None:
     """Locate() restricted to nodes not already in the group.
 
@@ -65,21 +65,32 @@ def _locate_new_member(
     ``protocol_sim.rush_picker``). Every responder passed to ``pick`` has
     already survived proof verification; the bias can only reorder
     *legitimately selected* candidates, never admit forged ones.
+
+    ``batch=True`` proves and verifies the whole candidate round through
+    ``selection.make_selection_proofs_batch`` / ``verify_selection_batch``
+    (one VRF pass each) instead of per-candidate scalar calls; the
+    responder list — order included — is identical.
     """
     anchor = C.hash_point(chash)
     cands = net.candidates(anchor, min(4 * r_target, net.n_nodes))
     responders: list[tuple[int, Node, sel.SelectionProof]] = []
-    for cand in cands:
-        if cand.nid in exclude or not cand.alive:
-            continue
-        proof, selected = cand.selection_proof(fhash, anchor, r_target)
-        if not selected:
-            continue
-        if not sel.verify_selection(
-            net.registry, proof, anchor, r_target, net.n_nodes
-        ):
-            continue
-        responders.append((sel.ring_distance(anchor, cand.nid), cand, proof))
+    if batch:
+        elig = [c for c in cands if c.nid not in exclude and c.alive]
+        responders = sel.verified_responders(
+            net.registry, elig, fhash, anchor, r_target, net.n_nodes)
+    else:
+        for cand in cands:
+            if cand.nid in exclude or not cand.alive:
+                continue
+            proof, selected = cand.selection_proof(fhash, anchor, r_target)
+            if not selected:
+                continue
+            if not sel.verify_selection(
+                net.registry, proof, anchor, r_target, net.n_nodes
+            ):
+                continue
+            responders.append(
+                (sel.ring_distance(anchor, cand.nid), cand, proof))
     if not responders:
         return None
     if pick is None:
@@ -96,47 +107,74 @@ def _pull_and_decode(
     """New member pulls >= K_inner fragments, decodes, verifies the chunk.
 
     Returns (chunk, traffic_bytes, latency_s). Raises InsufficientFragments
-    if the view cannot supply K_inner distinct fragments.
+    if the view cannot supply enough fragments.
+
+    The pull starts at exactly ``K_inner`` fragments (the paper's minimum
+    repair amplification) in view order. About 1 in 255 index
+    combinations is rank-deficient over GF(256); since the view order is
+    stable, a group that hits one would otherwise retry the *same*
+    singular set every tick forever — a deterministic repair livelock
+    that, at 1K+ nodes, snowballed into a network-wide repair storm (the
+    PR 3 scalar path has the same latent bug; it simply never ran at a
+    scale that exposed it). On rank deficiency the requester pulls
+    additional fragments one at a time and retries — exactly what a real
+    repairer does when a decode fails — with the extra traffic charged.
     """
-    frags: dict[int, bytes] = {}
-    holders: list[Node] = []
+    available: list[tuple[int, bytes, Node]] = []
+    seen: set[int] = set()
     for m in members:
-        served = m.serve_fragments(chash)
-        took = False
-        for idx, payload in served.items():
-            if idx not in frags and len(frags) < meta.k_inner:
-                frags[idx] = payload
-                took = True
-        if took:
-            holders.append(m)
-    if len(frags) < meta.k_inner:
+        for idx, payload in m.serve_fragments(chash).items():
+            if idx not in seen:
+                seen.add(idx)
+                available.append((idx, payload, m))
+    if len(available) < meta.k_inner:
         raise InsufficientFragments(
-            f"repair: {len(frags)}/{meta.k_inner} fragments reachable"
+            f"repair: {len(available)}/{meta.k_inner} fragments reachable"
         )
-    traffic = sum(len(p) for p in frags.values())
+    n_pull = meta.k_inner
+    while True:
+        frags = {idx: payload for idx, payload, _ in available[:n_pull]}
+        try:
+            chunk = C.inner_decode(chash, meta.k_inner, frags)
+            break
+        except InsufficientFragments:
+            if n_pull >= len(available):
+                raise
+            n_pull += 1  # rank-deficient combination: pull one more
+    holders = list(dict.fromkeys(m for _, _, m in available[:n_pull]))
+    traffic = sum(len(payload) for _, payload, _ in available[:n_pull])
     rtts = net.rtts(requester, holders) if holders else np.zeros(1)
-    chunk = C.inner_decode(chash, meta.k_inner, frags)
     return chunk, traffic, float(np.max(rtts))
 
 
 def repair_group(
     net: SimNetwork, node: Node, chash: bytes, cache_ttl: float = 0.0,
-    max_new: int | None = None, pick=None,
+    max_new: int | None = None, pick=None, batch: bool = False,
+    timer_cache: dict | None = None,
 ) -> RepairStats:
     """One repair pass from ``node``'s local view (§4.3.4).
 
     Restores the group to ``R`` alive members (or as close as the candidate
     set allows). Returns traffic/latency accounting for the benchmarks.
     ``pick`` forwards to :func:`_locate_new_member` (response-order bias of
-    the adaptive adversary; ``None`` = nearest-selected, the default).
+    the adaptive adversary; ``None`` = nearest-selected, the default);
+    ``batch`` selects the batched VRF path there and in MembershipTimer
+    (identical results, one vectorized verification round per call).
+
+    An eclipsed repairer is cut off from Locate() and every peer — the
+    repair no-ops until the partition heals.
     """
     stats = RepairStats()
+    if net.is_eclipsed(node.nid):
+        return stats
     view = node.groups.get(chash)
     if view is None:
         return stats
     meta = view.meta
-    # refresh the view first (MembershipTimer — §4.3.3)
-    G.membership_timer(net, node, chash)
+    # refresh the view first (MembershipTimer — §4.3.3); the per-tick
+    # timer cache shares the verified-candidate set across the group's
+    # viewers (see membership_timer) and is evicted below on any repair
+    G.membership_timer(net, node, chash, batch=batch, cache=timer_cache)
     alive = G.alive_members(net, node, chash)
     deficit = meta.r_target - len(alive)
     if max_new is not None:
@@ -150,12 +188,16 @@ def repair_group(
         index = _fresh_index(net, view)
         fhash = C.fragment_hash(chash, index)
         found = _locate_new_member(net, chash, fhash, meta.r_target, exclude,
-                                   pick=pick)
+                                   pick=pick, batch=batch)
         if found is None:
             continue  # candidate set exhausted; next timer tick retries
         new_member, proof = found
-        # RepairRequest: sender's view bootstraps the new member (§4.3.4)
-        membership = {nid: net.now for nid in alive}
+        # RepairRequest: sender's view bootstraps the new member (§4.3.4).
+        # Peers behind a partition cut are omitted — the repairer cannot
+        # vouch for their liveness, and forwarding them fresh would let an
+        # unreachable node's apparent liveness cross the cut.
+        membership = {nid: net.now for nid in alive
+                      if not net.is_eclipsed(nid)}
         lat = net.rtt(node, new_member)  # the RepairRequest round
         # (a) warm chunk cache anywhere in the view → one-fragment traffic
         warm = next(
@@ -191,6 +233,10 @@ def repair_group(
         stats.repaired += 1
         lat_worst = max(lat_worst, lat)
     stats.latency_s = lat_worst
+    if stats.repaired and timer_cache is not None:
+        # the new members hold fresh verifiable proofs — the cached
+        # admitted set for this group is stale from here on
+        timer_cache.pop(chash, None)
     net.repair_traffic_bytes += stats.traffic_bytes
     net.repair_count += stats.repaired
     return stats

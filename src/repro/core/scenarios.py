@@ -92,6 +92,7 @@ CHURN_POLICIES = P.CHURN_POLICIES
 ADV_STATIC = P.ADV_STATIC
 ADV_ADAPTIVE = P.ADV_ADAPTIVE
 ADV_TARGETED = P.ADV_TARGETED
+ADV_ECLIPSE = P.ADV_ECLIPSE
 ADVERSARY_POLICIES = P.ADVERSARY_POLICIES
 N_REGIONS = P.N_REGIONS
 
@@ -128,6 +129,7 @@ class Scenario(NamedTuple):
     adapt_boost: np.float32
     attack_frac: np.float32
     attack_step: np.int32
+    eclipse_steps: np.int32
     frags_per_node: np.float32
     replication: np.float32
     seed: np.int32
@@ -159,7 +161,8 @@ def make_scenario(
     churn_policy: int | str = CHURN_IID, adv_policy: int | str = ADV_STATIC,
     burst_prob: float = 0.05, burst_mult: float = 20.0,
     adapt_boost: float = 2.0, attack_frac: float = 0.0, attack_step: int = 0,
-    frags_per_node: int = 1, replication: int = 3, seed: int = 0,
+    eclipse_steps: int = 0, frags_per_node: int = 1, replication: int = 3,
+    seed: int = 0,
 ) -> Scenario:
     """Build one sweep cell (all leaves traced — heterogeneous cells share
     one compiled executable).
@@ -177,10 +180,13 @@ def make_scenario(
     Policies (shared definitions: ``repro.core.policies``): ``churn_policy``
     ``"iid"``/``"regional"`` (ids accepted) with ``burst_prob`` per-step
     burst probability and ``burst_mult`` rate multiplier;
-    ``adv_policy`` ``"static"``/``"adaptive"``/``"targeted"`` with
-    ``adapt_boost`` refill bias, ``attack_frac`` of ``n_nodes`` as kill
-    budget at step ``attack_step``, and ``frags_per_node`` cost
-    amortization (A.3). ``replication`` sizes the Ceph-like baseline of
+    ``adv_policy`` ``"static"``/``"adaptive"``/``"targeted"``/``"eclipse"``
+    with ``adapt_boost`` refill bias, ``attack_frac`` of ``n_nodes`` as
+    kill budget at step ``attack_step`` (for ``eclipse``: the cut ring
+    fraction, window ``[attack_step, attack_step + eclipse_steps)`` —
+    the mean-field approximation of the protocol-level partition), and
+    ``frags_per_node`` cost amortization (A.3). ``replication`` sizes the
+    Ceph-like baseline of
     :func:`run_replicated_grid`. ``seed`` is normally overridden by the
     grid runners' ``seeds`` axis.
 
@@ -210,6 +216,7 @@ def make_scenario(
         adapt_boost=np.float32(adapt_boost),
         attack_frac=np.float32(attack_frac),
         attack_step=np.int32(attack_step),
+        eclipse_steps=np.int32(eclipse_steps),
         frags_per_node=np.float32(frags_per_node),
         replication=np.float32(replication), seed=np.int32(seed),
     )
@@ -350,6 +357,15 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
 
     a = alive & (h >= sc.k_inner)  # decode impossible => absorbing
     deficit = jnp.maximum(jnp.where(a, sc.r_inner - (h + b), 0.0), 0.0)
+    # eclipse mean-field (policies.ADV_ECLIPSE): groups inside the cut ring
+    # segment get no repair — no refills, traffic, or cache warming — while
+    # the partition window is open; churn keeps thinning them meanwhile.
+    # One select per step; identity (all-False mask) for other policies.
+    gidx_e = jnp.arange(st.max_groups, dtype=jnp.int32)
+    ecl = (P.eclipse_active(sc.adv_policy, t, sc.attack_step,
+                            sc.eclipse_steps)
+           & P.eclipse_groups(gidx_e, sc.attack_frac, inv.n_groups))
+    deficit = jnp.where(ecl, 0.0, deficit)
     new_b = smp.binom(kr, deficit, inv.refill_p)
     h = h + (deficit - new_b)
     b = b + new_b

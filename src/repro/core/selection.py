@@ -17,7 +17,10 @@ verifiability) with the decay rate normalized by R; see DESIGN.md §7.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+
+import numpy as np
 
 from repro.core.vrf import HASHLEN, RING, VRFRegistry, node_id
 
@@ -77,3 +80,133 @@ def verify_selection(
         return False
     d = distance_metric(anchor, node_id(sp.pk), n_nodes)
     return sp.r < selection_threshold(d, r_target)
+
+
+# --------------------------------------------------------------- batch paths
+# node_id is a pure sha256 of pk; the batch verifier caches ring points so
+# re-verified claims cost zero hashing. The scalar verify_selection above is
+# deliberately left uncached — it IS the PR 3 reference path the protocol
+# benchmarks use as their baseline.
+_node_point = functools.lru_cache(maxsize=None)(node_id)
+
+
+@functools.lru_cache(maxsize=1 << 20)
+def _threshold_for(anchor: int, pk: bytes, r_target: int,
+                   n_nodes: int) -> int:
+    """Memoized ``selection_threshold(distance(anchor, pk))``.
+
+    The (anchor, candidate) pairs of a deployment recur every Locate() /
+    store / verification round, and the threshold arithmetic (256-bit ring
+    distance, float division, exp) is the per-candidate cost that is left
+    once VRF evaluation is batched. Pure function — exact same integers
+    as the scalar path computes inline.
+    """
+    return selection_threshold(
+        distance_metric(anchor, _node_point(pk), n_nodes), r_target)
+
+
+def make_selection_proofs_batch(
+    registry: VRFRegistry, keys: list[tuple[bytes, bytes]], fragment_hash: int,
+    anchor: int, r_target: int, n_nodes: int,
+) -> tuple[list[SelectionProof | None], np.ndarray]:
+    """Batched SelectionProof() over candidate keypairs ``[(sk, pk), ...]``
+    for ONE fragment hash (the Locate() round shape).
+
+    Element-for-element equal to :func:`make_selection_proof`:
+    ``proofs[i]`` is the same proof object and ``selected[i]`` the same
+    coin the scalar call would produce for ``keys[i]`` — except that for
+    unselected candidates ``proofs[i]`` is ``None`` (their proof objects
+    are never used by any caller: an unselected candidate does not
+    respond). The VRF work goes through ``registry.prove_batch`` — pure
+    array arithmetic for the ARX registry — while the threshold side is
+    exact integer math behind the :func:`_threshold_for` memo.
+    """
+    alpha = fragment_hash.to_bytes(HASHLEN // 8, "big")
+    rs, prfs = registry.prove_batch([sk for sk, _ in keys],
+                                    [alpha] * len(keys))
+    proofs: list[SelectionProof | None] = []
+    selected = np.empty(len(keys), bool)
+    for i, (_, pk) in enumerate(keys):
+        sel_i = rs[i] < _threshold_for(anchor, pk, r_target, n_nodes)
+        selected[i] = sel_i
+        proofs.append(SelectionProof(pk=pk, r=rs[i], proof=prfs[i],
+                                     fragment_hash=fragment_hash)
+                      if sel_i else None)
+    return proofs, selected
+
+
+def verified_responders(
+    registry: VRFRegistry, candidates: list, fragment_hash: int,
+    anchor: int, r_target: int, n_nodes: int,
+) -> list[tuple[int, object, SelectionProof]]:
+    """One batched Locate()/store selection round over node candidates.
+
+    Proves every candidate for ``fragment_hash`` in one
+    :func:`make_selection_proofs_batch` pass, verifies the selected ones
+    in one :func:`verify_selection_batch` pass, and returns the verified
+    responders as ``(ring_distance(anchor, node), node, proof)`` in
+    candidate order — the shape both ``vault.VaultClient`` store rounds
+    and ``repair._locate_new_member`` consume (``min()`` over the result
+    reproduces the scalar paths' first-nearest tie-break exactly).
+    Candidates need ``.kp``/``.nid`` (``network.Node``).
+    """
+    if not candidates:
+        return []
+    proofs, selected = make_selection_proofs_batch(
+        registry, [(c.kp.sk, c.kp.pk) for c in candidates], fragment_hash,
+        anchor, r_target, n_nodes)
+    idx = [i for i in range(len(candidates)) if selected[i]]
+    ok = verify_selection_batch(
+        registry, [proofs[i] for i in idx], [anchor] * len(idx), r_target,
+        n_nodes)
+    return [(ring_distance(anchor, candidates[i].nid), candidates[i],
+             proofs[i]) for i, good in zip(idx, ok) if good]
+
+
+def verify_selection_batch(
+    registry: VRFRegistry, sps: list[SelectionProof], anchors: list[int],
+    r_target: int, n_nodes: int,
+) -> np.ndarray:
+    """Batched VerifySelection() — element-for-element equal to the scalar
+    :func:`verify_selection` (pinned by ``tests/test_vrf_selection.py``).
+
+    Verdicts are memoized in ``registry.selection_cache`` keyed on the full
+    proof tuple (pk, input, r, proof, anchor, population), so persistence
+    claims re-broadcast every heartbeat verify once ever (until ``n_nodes``
+    shifts, which re-keys the distance metric). Cache misses go through
+    ``registry.verify_batch`` in one call — for :class:`~repro.core.vrf.
+    ArxVRFRegistry` that is a single vectorized ``prf_select_pairs``
+    evaluation per tick. The distance/threshold side runs per element in
+    exact Python ints (the 256-bit ring does not fit machine words); it is
+    a few arithmetic ops against the VRF's hashing, and only on misses.
+    """
+    n = len(sps)
+    out = np.zeros(n, bool)
+    cache = registry.selection_cache
+    keys = []
+    miss = []
+    for i, (sp, anchor) in enumerate(zip(sps, anchors)):
+        k = (sp.pk, sp.fragment_hash, sp.r, sp.proof, anchor, r_target,
+             n_nodes)
+        keys.append(k)
+        v = cache.get(k)
+        if v is None:
+            miss.append(i)
+        else:
+            out[i] = v
+    if miss:
+        vrf_ok = registry.verify_batch(
+            [sps[i].pk for i in miss],
+            [sps[i].fragment_hash.to_bytes(HASHLEN // 8, "big")
+             for i in miss],
+            [sps[i].r for i in miss],
+            [sps[i].proof for i in miss])
+        for j, i in enumerate(miss):
+            ok = bool(vrf_ok[j])
+            if ok:
+                sp = sps[i]
+                ok = sp.r < _threshold_for(anchors[i], sp.pk, r_target,
+                                           n_nodes)
+            cache[keys[i]] = ok
+            out[i] = ok
+    return out

@@ -30,12 +30,23 @@ class OpStats:
 
 
 class VaultClient:
-    """A participating node issuing client operations (paper §4.3.1)."""
+    """A participating node issuing client operations (paper §4.3.1).
 
-    def __init__(self, net: SimNetwork, node: Node, backend: str = "numpy"):
+    ``batch=True`` runs each STORE selection round through the batched
+    VRF APIs (``selection.make_selection_proofs_batch`` /
+    ``verify_selection_batch``) — one vectorized proof round per fragment
+    index instead of a scalar prove/verify per candidate. The placement
+    (and every byte of network state) is identical: the round picks the
+    same nearest verified-selected candidate with the same first-minimum
+    tie-break, and no RNG is involved.
+    """
+
+    def __init__(self, net: SimNetwork, node: Node, backend: str = "numpy",
+                 batch: bool = False):
         self.net = net
         self.node = node
         self.backend = backend
+        self.batch = batch
 
     # ------------------------------------------------------------------ STORE
     def store(
@@ -92,22 +103,32 @@ class VaultClient:
             picked: Node | None = None
             best_d = None
             picked_proof = None
-            for cand in cands:
-                if cand.nid in members or not cand.alive:
-                    continue
-                proof, selected = cand.selection_proof(
-                    fhash, anchor, params.r_inner
-                )
-                if not selected:
-                    continue
-                if not sel.verify_selection(
-                    self.net.registry, proof, anchor, params.r_inner,
-                    self.net.n_nodes,
-                ):
-                    continue  # forged / stale proof — never admitted
-                d = sel.ring_distance(anchor, cand.nid)
-                if best_d is None or d < best_d:
-                    picked, best_d, picked_proof = cand, d, proof
+            if self.batch:
+                elig = [c for c in cands
+                        if c.nid not in members and c.alive]
+                responders = sel.verified_responders(
+                    self.net.registry, elig, fhash, anchor, params.r_inner,
+                    self.net.n_nodes)
+                if responders:
+                    best_d, picked, picked_proof = min(
+                        responders, key=lambda t: t[0])
+            else:
+                for cand in cands:
+                    if cand.nid in members or not cand.alive:
+                        continue
+                    proof, selected = cand.selection_proof(
+                        fhash, anchor, params.r_inner
+                    )
+                    if not selected:
+                        continue
+                    if not sel.verify_selection(
+                        self.net.registry, proof, anchor, params.r_inner,
+                        self.net.n_nodes,
+                    ):
+                        continue  # forged / stale proof — never admitted
+                    d = sel.ring_distance(anchor, cand.nid)
+                    if best_d is None or d < best_d:
+                        picked, best_d, picked_proof = cand, d, proof
             if picked is None:
                 continue
             t0 = time.perf_counter()

@@ -11,6 +11,21 @@ ed25519-VRF behind the same three functions (DESIGN.md §4).
 Security property preserved for every protocol/test in this repo: an
 adversary who does not hold ``sk`` can neither predict ``r`` for a new input
 nor forge a ``(r, proof)`` pair that verifies under an honest ``pk``.
+
+Two registry backends share that contract (``make_registry``):
+
+* :class:`VRFRegistry` — the PR 3 keyed-sha256 construction, the default.
+  Scalar ``prove``/``verify`` are byte-identical to PR 3 (the protocol
+  golden regression depends on it); ``verify_batch`` is a scalar loop, so
+  batching gains come from the selection-layer memo cache alone.
+* :class:`ArxVRFRegistry` — the same interface on the ``kernels/prf_select``
+  ARX permutation: per-key tag *words* are derived once (sha256, at
+  registration), after which ``prove_batch``/``verify_batch`` are pure
+  int32 array arithmetic — vectorized numpy for small batches, one
+  ``prf_select_pairs`` kernel dispatch for per-tick batches. Outputs are
+  32-bit values scaled to the full ring (uniformity at 2^-32 granularity —
+  ample for selection simulation; the two backends are statistically
+  equivalent but not byte-compatible).
 """
 from __future__ import annotations
 
@@ -19,8 +34,15 @@ import hashlib
 import hmac
 import os
 
+import numpy as np
+
 HASHLEN = 256  # bits of VRF output / ring identifier space
 RING = 1 << HASHLEN
+
+ARX_OUT_BITS = 32                      # ArxVRF raw output width
+ARX_SHIFT = HASHLEN - ARX_OUT_BITS     # scale factor to ring units
+_ARX_PROOF_C0 = 0x9E3779B9             # proof-lane tag tweak (golden ratio)
+_ARX_PROOF_C1 = 0x85EBCA6B
 
 
 def _h(*parts: bytes) -> bytes:
@@ -56,6 +78,12 @@ class VRFRegistry:
 
     def __init__(self) -> None:
         self._tags: dict[bytes, bytes] = {}
+        # memo for the *selection* layer (selection.verify_selection_batch):
+        # full VerifySelection verdicts keyed on the whole proof tuple, so a
+        # claim re-verified every heartbeat costs one dict hit instead of
+        # fresh hashing. Lives here because its lifetime is the registry's
+        # ("public keys are known by all nodes" — one per simulated net).
+        self.selection_cache: dict[tuple, bool] = {}
 
     def register(self, kp: KeyPair) -> None:
         self._tags[kp.pk] = _tag(kp.sk)
@@ -74,6 +102,146 @@ class VRFRegistry:
         r_ok = int.from_bytes(_h(b"vrf-out", t, alpha), "big") == r
         p_ok = hmac.compare_digest(_h(b"vrf-proof", t, alpha), proof)
         return r_ok and p_ok
+
+    # -- batch interface (element-wise equal to the scalar calls) ----------
+    def prove_batch(self, sks: list[bytes], alphas: list[bytes]):
+        """[VRF_sk(alpha)] for each (sk, alpha) pair -> (rs, proofs)."""
+        out = [self.prove(sk, a) for sk, a in zip(sks, alphas)]
+        return [r for r, _ in out], [p for _, p in out]
+
+    def verify_batch(self, pks, alphas, rs, proofs) -> np.ndarray:
+        """Element-wise :meth:`verify` over equal-length sequences.
+
+        The keyed-sha256 construction has no array form, so this is the
+        scalar loop; ``ArxVRFRegistry`` overrides it with one vectorized
+        PRF evaluation. Both satisfy ``verify_batch(...)[i] ==
+        verify(pks[i], alphas[i], rs[i], proofs[i])`` exactly
+        (``tests/test_vrf_selection.py``).
+        """
+        return np.fromiter(
+            (self.verify(pk, a, r, pr)
+             for pk, a, r, pr in zip(pks, alphas, rs, proofs)),
+            dtype=bool, count=len(pks))
+
+
+def _arx_words(tag: bytes) -> tuple[int, int]:
+    """Two unsigned 32-bit lanes from a 32-byte verification tag."""
+    return (int.from_bytes(tag[0:4], "little"),
+            int.from_bytes(tag[4:8], "little"))
+
+
+def _alpha_words(alpha: bytes) -> tuple[int, int]:
+    """Two unsigned 32-bit lanes from the low bits of a VRF input."""
+    return (int.from_bytes(alpha[-8:-4], "little"),
+            int.from_bytes(alpha[-4:], "little"))
+
+
+class ArxVRFRegistry(VRFRegistry):
+    """VRF interface on the ``kernels/prf_select`` ARX permutation.
+
+    Key derivation stays sha256 (one-time, at :meth:`register`); per-input
+    evaluation is ``arx_mix`` on int32 lanes, so proving and verifying
+    batch into pure array arithmetic and, for per-tick batches, one
+    ``prf_select_pairs`` kernel dispatch. The 32-bit output is scaled by
+    ``2^ARX_SHIFT`` onto the hash ring; the proof is the 4-byte output of
+    a second, tag-tweaked ARX lane. Statistically interchangeable with the
+    sha256 registry — *not* byte-compatible (placements differ), which is
+    why the protocol golden regression runs on the default hash backend.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._words: dict[bytes, tuple[int, int]] = {}   # pk -> tag lanes
+        self._sk_words: dict[bytes, tuple[int, int]] = {}
+
+    def register(self, kp: KeyPair) -> None:
+        super().register(kp)
+        w = _arx_words(self._tags[kp.pk])
+        self._words[kp.pk] = w
+        self._sk_words[kp.sk] = w
+
+    @staticmethod
+    def _eval(t0: int, t1: int, f0: int, f1: int) -> tuple[int, bytes]:
+        from repro.kernels.prf_select import arx_mix_words
+
+        r32 = arx_mix_words(t0, t1, f0, f1)
+        p32 = arx_mix_words(t0 ^ _ARX_PROOF_C0, t1 ^ _ARX_PROOF_C1, f0, f1)
+        return r32 << ARX_SHIFT, p32.to_bytes(4, "little")
+
+    def prove(self, sk: bytes, alpha: bytes) -> tuple[int, bytes]:
+        w = self._sk_words.get(sk)
+        if w is None:  # unregistered prover (tests): derive on the fly
+            w = _arx_words(_tag(sk))
+        return self._eval(*w, *_alpha_words(alpha))
+
+    def verify(self, pk: bytes, alpha: bytes, r: int, proof: bytes) -> bool:
+        w = self._words.get(pk)
+        if w is None:
+            return False
+        r_want, p_want = self._eval(*w, *_alpha_words(alpha))
+        return r_want == r and hmac.compare_digest(p_want, proof)
+
+    # -- vectorized batch paths -------------------------------------------
+    def _eval_batch(self, words: np.ndarray, fwords: np.ndarray):
+        """(P,2) uint32 tag lanes × (P,2) uint32 input lanes ->
+        (r32, proof32) uint32 arrays, via one fused PRF evaluation over the
+        doubled pair list (output lane then proof lane)."""
+        from repro.kernels.prf_select import prf_select_pairs
+
+        tweak = np.array([_ARX_PROOF_C0, _ARX_PROOF_C1], np.uint32)
+        tags2 = np.concatenate([words, words ^ tweak], axis=0)
+        f2 = np.concatenate([fwords, fwords], axis=0)
+        out = prf_select_pairs(tags2.view(np.int32), f2.view(np.int32))
+        out = np.asarray(out).view(np.uint32)
+        n = words.shape[0]
+        return out[:n], out[n:]
+
+    def prove_batch(self, sks: list[bytes], alphas: list[bytes]):
+        n = len(sks)
+        words = np.empty((n, 2), np.uint32)
+        fwords = np.empty((n, 2), np.uint32)
+        for i, (sk, a) in enumerate(zip(sks, alphas)):
+            w = self._sk_words.get(sk)
+            words[i] = w if w is not None else _arx_words(_tag(sk))
+            fwords[i] = _alpha_words(a)
+        r32, p32 = self._eval_batch(words, fwords)
+        rs = [r << ARX_SHIFT for r in r32.tolist()]
+        proofs = [p.to_bytes(4, "little") for p in p32.tolist()]
+        return rs, proofs
+
+    def verify_batch(self, pks, alphas, rs, proofs) -> np.ndarray:
+        n = len(pks)
+        words = np.zeros((n, 2), np.uint32)
+        fwords = np.empty((n, 2), np.uint32)
+        known = np.ones(n, bool)
+        for i, (pk, a) in enumerate(zip(pks, alphas)):
+            w = self._words.get(pk)
+            if w is None:
+                known[i] = False
+            else:
+                words[i] = w
+            fwords[i] = _alpha_words(a)
+        r32, p32 = self._eval_batch(words, fwords)
+        r32l, p32l = r32.tolist(), p32.tolist()
+        ok = np.fromiter(
+            ((r32l[i] << ARX_SHIFT) == rs[i]
+             and p32l[i].to_bytes(4, "little") == proofs[i]
+             for i in range(n)), dtype=bool, count=n)
+        return ok & known
+
+
+VRF_BACKENDS = {"hash": VRFRegistry, "arx": ArxVRFRegistry}
+
+
+def make_registry(backend: str = "hash") -> VRFRegistry:
+    """Registry factory: ``"hash"`` (PR 3 keyed-sha256, bit-stable) or
+    ``"arx"`` (``kernels/prf_select`` ARX lanes, batch-vectorizable)."""
+    try:
+        return VRF_BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown VRF backend {backend!r}; pick from "
+            f"{sorted(VRF_BACKENDS)}") from None
 
 
 def node_id(pk: bytes) -> int:

@@ -54,6 +54,57 @@ def arx_mix(a, b, c, d, rounds: int = ROUNDS):
     return a ^ _rotl(b, 13) ^ _rotl(c, 7) ^ d
 
 
+_MASK32 = 0xFFFFFFFF
+
+
+def arx_mix_words(a: int, b: int, c: int, d: int, rounds: int = ROUNDS) -> int:
+    """Host-scalar mirror of :func:`arx_mix` on unsigned 32-bit ints.
+
+    Bit-identical to the kernel lanes (pinned by
+    ``tests/test_prf_kernel.py``); used by ``core/vrf.ArxVRFRegistry`` for
+    one-off proofs where a kernel dispatch would cost more than it saves.
+    """
+    def rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (32 - k))) & _MASK32
+
+    for _ in range(rounds):
+        a = (a + b) & _MASK32
+        d = rotl(d ^ a, 16)
+        c = (c + d) & _MASK32
+        b = rotl(b ^ c, 12)
+        a = (a + b) & _MASK32
+        d = rotl(d ^ a, 8)
+        c = (c + d) & _MASK32
+        b = rotl(b ^ c, 7)
+    return a ^ rotl(b, 13) ^ rotl(c, 7) ^ d
+
+
+def arx_mix_np(a, b, c, d, rounds: int = ROUNDS):
+    """Vectorized numpy mirror of :func:`arx_mix` (uint32 arrays in/out).
+
+    Integer-array overflow wraps silently in numpy, so this is exact
+    modular arithmetic — the same bits as the kernel — without tracing.
+    Used for small pair batches below the kernel dispatch threshold.
+    """
+    import numpy as np
+
+    a, b, c, d = (np.asarray(x, np.uint32) for x in (a, b, c, d))
+
+    def rotl(x, k):
+        return (x << np.uint32(k)) | (x >> np.uint32(32 - k))
+
+    for _ in range(rounds):
+        a = a + b
+        d = rotl(d ^ a, 16)
+        c = c + d
+        b = rotl(b ^ c, 12)
+        a = a + b
+        d = rotl(d ^ a, 8)
+        c = c + d
+        b = rotl(b ^ c, 7)
+    return a ^ rotl(b, 13) ^ rotl(c, 7) ^ d
+
+
 def _prf_kernel(t_ref, f_ref, o_ref):
     tags = t_ref[...]  # (TN, 2) int32
     fh = f_ref[...]  # (TF, 2) int32
@@ -91,3 +142,66 @@ def prf_select_kernel(
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.int32),
         interpret=interpret,
     )(tags, fhashes)
+
+
+# ------------------------------------------------------------- pairs variant
+PAIRS_SUBLANES = 8     # VPU tile rows (int32 min sublane count)
+PAIRS_LANES = 128      # VPU tile columns
+# below this many pairs the jit dispatch overhead (~0.5 ms on the CPU
+# interpreter) dwarfs the work — vectorized numpy wins; measured on the
+# 2-core host via benchmarks/protocol_speed.py
+PAIRS_KERNEL_MIN = 2048
+
+
+def _prf_pairs_kernel(t0_ref, t1_ref, f0_ref, f1_ref, o_ref):
+    o_ref[...] = arx_mix(t0_ref[...], t1_ref[...], f0_ref[...], f1_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _prf_pairs_call(t0, t1, f0, f1, interpret: bool):
+    rows = t0.shape[0]
+    spec = pl.BlockSpec((PAIRS_SUBLANES, PAIRS_LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _prf_pairs_kernel,
+        grid=(rows // PAIRS_SUBLANES,),
+        in_specs=[spec] * 4,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, PAIRS_LANES), jnp.int32),
+        interpret=interpret,
+    )(t0, t1, f0, f1)
+
+
+def prf_select_pairs(tags, fhashes, interpret: bool | None = None):
+    """tags (P,2) int32, fhashes (P,2) int32 -> (P,) int32 PRF values.
+
+    The *pairwise* companion to :func:`prf_select_kernel`: where that
+    kernel fills a (nodes × fragments) grid — the Locate()/repair-storm
+    shape — this one evaluates P independent (node tag, fragment hash)
+    pairs, the shape of batched selection-proof verification (one claim =
+    one pair). Pairs are padded to full (8, 128) VPU tiles and evaluated
+    as four elementwise int32 planes; batches under ``PAIRS_KERNEL_MIN``
+    skip the dispatch and use the bit-identical numpy mirror
+    :func:`arx_mix_np` (equivalence pinned by ``tests/test_prf_kernel.py``).
+    """
+    import numpy as np
+
+    tags = np.asarray(tags, np.int32)
+    fhashes = np.asarray(fhashes, np.int32)
+    p = tags.shape[0]
+    assert tags.shape == (p, 2) and fhashes.shape == (p, 2), (
+        tags.shape, fhashes.shape)
+    if p == 0:
+        return np.zeros(0, np.int32)
+    if p < PAIRS_KERNEL_MIN:
+        out = arx_mix_np(tags[:, 0].view(np.uint32), tags[:, 1].view(np.uint32),
+                         fhashes[:, 0].view(np.uint32),
+                         fhashes[:, 1].view(np.uint32))
+        return out.view(np.int32)
+    tile = PAIRS_SUBLANES * PAIRS_LANES
+    pad = (-p) % tile
+    planes = []
+    for col in (tags[:, 0], tags[:, 1], fhashes[:, 0], fhashes[:, 1]):
+        full = np.concatenate([col, np.zeros(pad, np.int32)])
+        planes.append(full.reshape(-1, PAIRS_LANES))
+    out = _prf_pairs_call(*planes, interpret=resolve_interpret(interpret))
+    return np.asarray(out).reshape(-1)[:p]

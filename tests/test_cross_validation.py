@@ -35,6 +35,9 @@ from benchmarks.cross_validate import (  # noqa: E402
 def rows():
     configs = matched_configs(**QUICK_KW)
     configs.pop("iid_targeted")
+    # the eclipse approximation is a documented one-sided bound, asserted
+    # directionally by tests/test_eclipse.py instead of the CI band here
+    configs.pop("iid_eclipse")
     return compare(configs, proto_seeds=QUICK_PROTO_SEEDS)
 
 

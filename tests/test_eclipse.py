@@ -1,0 +1,162 @@
+"""Eclipse/partition adversary: determinism, partition-window invariants,
+engine equivalence, and the cross-validation row against the engine's
+documented mean-field approximation.
+
+Timestamp-sensitive invariants run on ``engine="reference"`` (the
+vectorized engine virtualizes view timestamps; its *behavior* is pinned
+bit-identical separately below and by the golden suite).
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import policies as P
+from repro.core import protocol_sim as PS
+from repro.core import scenarios as SC
+from repro.core.vrf import RING
+
+ECL = dict(n_nodes=80, n_objects=2, object_bytes=1200, k_outer=2,
+           n_chunks=3, k_inner=5, r_inner=10, byz_fraction=0.1,
+           churn_per_year=60.0, step_hours=24.0, steps=12,
+           adv_policy="eclipse", attack_frac=0.3, attack_step=3,
+           eclipse_steps=5, claim_every=1)
+
+
+def _window(p):
+    return range(p.attack_step, p.attack_step + p.eclipse_steps)
+
+
+def test_eclipse_deterministic_and_engines_agree():
+    """Same seed => identical traces; vectorized == reference bit-for-bit
+    (the eclipse policy is new in this PR, so the PR 3 golden cannot pin
+    it — this equivalence is its golden)."""
+    for seed in (0, 1):
+        p = PS.ProtocolParams(**ECL, seed=seed)
+        a = PS.run_protocol(p, engine="reference")
+        b = PS.run_protocol(p, engine="vectorized")
+        c = PS.run_protocol(p, engine="vectorized")
+        for x, y in ((a, b), (b, c)):
+            np.testing.assert_array_equal(x.honest_trace, y.honest_trace)
+            np.testing.assert_array_equal(x.byz_trace, y.byz_trace)
+            np.testing.assert_array_equal(x.alive_frac_trace,
+                                          y.alive_frac_trace)
+            assert x.loss_events == y.loss_events
+            assert x.repair_traffic_units == y.repair_traffic_units
+            assert x.repairs == y.repairs
+
+
+def test_partition_window_invariants():
+    """During the cut: no claims or repairs cross it — eclipsed nodes gain
+    no fragments and no view updates, unaffected nodes never record a
+    fresh claim from the silent segment — and eclipsed nodes return with
+    their views (and fragments) intact."""
+    p = PS.ProtocolParams(**ECL, seed=2)
+    lo, hi = P.ring_segment(p.attack_frac, RING)
+    snaps = {}
+    violations = []
+
+    def probe(t, net):
+        in_win = t in _window(p)
+        for node in net.nodes.values():
+            if not node.alive:
+                continue
+            ecl = net.is_eclipsed(node.nid)
+            if in_win and ecl:
+                snap = (tuple(node.fragments),
+                        {ch: tuple(v.members) for ch, v in
+                         node.groups.items()})
+                prev = snaps.get(node.nid)
+                if prev is not None and prev != snap:
+                    violations.append(("frozen", t, node.nid))
+                snaps[node.nid] = snap
+            if in_win and not ecl:
+                # no fresh claim/timer timestamp from an eclipsed peer may
+                # appear in an unaffected node's views during the window
+                win_start = (p.attack_step + 1) * p.step_hours
+                for ch, view in node.groups.items():
+                    for nid, last in view.members.items():
+                        if net.is_eclipsed(nid) and last >= win_start \
+                                and nid != node.nid:
+                            violations.append(("crossed", t, node.nid))
+        if not in_win:
+            snaps.clear()
+
+    r = PS.run_protocol(p, engine="reference", probe=probe)
+    assert not violations, violations[:5]
+    assert r.n_groups == p.n_objects * p.n_chunks
+
+
+def test_eclipse_suppresses_repair_and_recovers():
+    """The cut hurts while open (honest membership decays unrepaired in
+    eclipsed groups) and repair resumes once it heals."""
+    base = dict(ECL, steps=14, attack_frac=0.4, eclipse_steps=6)
+    seeds = range(5)
+    ecl = [PS.run_protocol(PS.ProtocolParams(**base, seed=s))
+           for s in seeds]
+    static = [PS.run_protocol(PS.ProtocolParams(
+        **{**base, "adv_policy": "static", "eclipse_steps": 0}, seed=s))
+        for s in seeds]
+    w_end = base["attack_step"] + base["eclipse_steps"]
+    # during the window the eclipsed runs fall behind the static runs
+    e_mid = np.mean([r.honest_trace[w_end - 1].mean() for r in ecl])
+    s_mid = np.mean([r.honest_trace[w_end - 1].mean() for r in static])
+    assert e_mid < s_mid
+    # post-window repair pulls the eclipse runs' live groups back up
+    e_end = np.mean([r.honest_trace[-1][r.honest_trace[-1]
+                                        >= base["k_inner"]].mean()
+                     for r in ecl
+                     if (r.honest_trace[-1] >= base["k_inner"]).any()])
+    assert e_end > e_mid
+
+
+def test_engine_eclipse_policy():
+    """Engine mean-field: repairs are suppressed for the eclipsed share of
+    groups during the window — and eclipse_steps=0 degenerates exactly to
+    the static policy."""
+    cell = dict(n_objects=10, n_chunks=4, k_outer=2, k_inner=8, r_inner=20,
+                n_nodes=2000, byz_fraction=0.0, churn_per_year=120.0,
+                step_hours=12.0, steps=30, adv_policy="eclipse",
+                attack_frac=0.5, attack_step=8, eclipse_steps=12)
+    ecl = SC.run_grid([cell], seeds=range(4), sampler="fast")
+    noop = SC.run_grid([dict(cell, eclipse_steps=0)], seeds=range(4),
+                       sampler="fast")
+    static = SC.run_grid([dict(cell, adv_policy="static")], seeds=range(4),
+                         sampler="fast")
+    # a zero-length window is exactly the static adversary, bit for bit
+    for f in ("repairs", "lost_objects", "alive_frac_trace",
+              "repair_traffic_units"):
+        np.testing.assert_array_equal(np.asarray(getattr(noop, f)),
+                                      np.asarray(getattr(static, f)))
+    # an open window suppresses repairs and costs durability
+    assert float(np.mean(ecl.repairs)) < float(np.mean(static.repairs))
+    assert (float(np.mean(np.asarray(ecl.alive_frac_trace)[..., -1]))
+            <= float(np.mean(np.asarray(static.alive_frac_trace)[..., -1])))
+
+
+def test_cross_validation_row_against_engine_approximation():
+    """Small-scale cross-validation of the new protocol-only scenario: the
+    engine's mean-field eclipse must (a) agree with the protocol on the
+    end state within the two-sample 95% band, and (b) err on the
+    conservative side (it suppresses whole groups where the protocol's
+    segment-boundary groups keep partial repair)."""
+    proto_p = PS.ProtocolParams(
+        n_nodes=200, n_objects=3, object_bytes=1500, k_outer=2, n_chunks=5,
+        k_inner=6, r_inner=14, byz_fraction=0.1, churn_per_year=80.0,
+        step_hours=12.0, steps=30, claim_every=2, adv_policy="eclipse",
+        attack_frac=0.3, attack_step=8, eclipse_steps=10)
+    proto = PS.run_protocol_seeds(proto_p, seeds=range(5))
+    eng = SC.run_grid([proto_p.to_scenario_kwargs()], seeds=range(8),
+                      sampler="fast")
+    pa = np.array([r.alive_frac_trace[-1] for r in proto])
+    ea = np.asarray(eng.alive_frac_trace)[0, :, proto_p.steps - 1]
+    pm, pc = SC.mean_ci(pa)
+    em, ec = SC.mean_ci(ea)
+    # conservative direction, with two-sample noise allowance
+    assert float(em) <= float(pm) + float(np.hypot(ec, pc))
+    # and not wildly off: the layers describe the same experiment
+    assert abs(float(em) - float(pm)) <= max(
+        2.5 * float(np.hypot(ec, pc)), 0.25)
+    pl, _ = SC.mean_ci(np.array([r.lost_objects for r in proto],
+                                np.float64))
+    el, elc = SC.mean_ci(np.asarray(eng.lost_objects)[0].astype(np.float64))
+    assert float(el) >= float(pl) - float(np.hypot(elc, pc)) - 1.0

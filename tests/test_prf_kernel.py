@@ -73,3 +73,58 @@ def test_selection_mask_expected_count():
     mask = ops.selection_mask(tags, fh, d, r_target)
     per_frag = mask.sum(axis=0)
     assert 0.7 * r_target < per_frag.mean() < 1.3 * r_target
+
+
+# ------------------------------------------------------------- pairs variant
+from repro.kernels.prf_select import (PAIRS_KERNEL_MIN, arx_mix,
+                                      arx_mix_np, arx_mix_words,
+                                      prf_select_pairs)
+
+
+@pytest.mark.parametrize("p", [0, 1, 7, 300, PAIRS_KERNEL_MIN,
+                               PAIRS_KERNEL_MIN + 1, 5000])
+def test_pairs_matches_numpy_mirror(p):
+    """Kernel path, numpy path, and padding edges agree bit-for-bit."""
+    rng = np.random.default_rng(p)
+    tags = rng.integers(-(2**31), 2**31 - 1, (p, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (p, 2)).astype(np.int32)
+    got = prf_select_pairs(tags, fh)
+    want = arx_mix_np(
+        tags[:, 0].view(np.uint32), tags[:, 1].view(np.uint32),
+        fh[:, 0].view(np.uint32), fh[:, 1].view(np.uint32)).view(np.int32)
+    assert got.shape == (p,)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pairs_matches_scalar_words_and_jnp():
+    """All four implementations of the ARX permutation are bit-identical:
+    host scalar ints, vectorized numpy, traced jnp, and the pairs kernel."""
+    rng = np.random.default_rng(0)
+    p = 4096  # above PAIRS_KERNEL_MIN: exercises the pallas path
+    tags = rng.integers(0, 2**32, (p, 2), np.uint64).astype(np.uint32)
+    fh = rng.integers(0, 2**32, (p, 2), np.uint64).astype(np.uint32)
+    k = prf_select_pairs(tags.view(np.int32), fh.view(np.int32))
+    k = k.view(np.uint32)
+    npv = arx_mix_np(tags[:, 0], tags[:, 1], fh[:, 0], fh[:, 1])
+    np.testing.assert_array_equal(k, npv)
+    j = np.asarray(arx_mix(
+        jnp.asarray(tags[:, 0].view(np.int32)),
+        jnp.asarray(tags[:, 1].view(np.int32)),
+        jnp.asarray(fh[:, 0].view(np.int32)),
+        jnp.asarray(fh[:, 1].view(np.int32)))).view(np.uint32)
+    np.testing.assert_array_equal(j, npv)
+    for i in (0, 17, p - 1):
+        assert arx_mix_words(int(tags[i, 0]), int(tags[i, 1]),
+                             int(fh[i, 0]), int(fh[i, 1])) == int(npv[i])
+
+
+def test_pairs_agrees_with_grid_kernel_diagonal():
+    """pairs(tags, fh)[i] equals the (i, i) entry of the N×F grid kernel —
+    the two entry points compute one PRF."""
+    rng = np.random.default_rng(3)
+    n = 8
+    tags = rng.integers(-(2**31), 2**31 - 1, (n, 2)).astype(np.int32)
+    fh = rng.integers(-(2**31), 2**31 - 1, (128, 2)).astype(np.int32)
+    grid = np.asarray(prf_select_kernel(tags, fh, tile_n=8, tile_f=128))
+    pairs = prf_select_pairs(tags, fh[:n])
+    np.testing.assert_array_equal(pairs, np.diagonal(grid)[:n])

@@ -1,0 +1,155 @@
+"""Golden regression: the vectorized protocol tick path is bit-identical
+to the PR 3 scalar path at small scale.
+
+``tests/data/golden_protocol_pr3.json`` was captured from the PR 3 commit
+(the pure scalar per-claim/per-dict implementation) by running this module
+as a script::
+
+    PYTHONPATH=src python -m tests.test_protocol_golden --regen
+
+The test runs every captured config through BOTH engines of
+``protocol_sim.run_protocol`` — ``engine="reference"`` (the preserved PR 3
+scalar path) and ``engine="vectorized"`` (batched VRF verification +
+array-table tick path) — and requires every field of ``ProtocolResult``,
+including the full per-step traces and loss-event tuples, to match the
+golden values exactly. Any change to RNG consumption order, view-dict
+update order, claim acceptance, or repair scheduling shows up here as a
+hard failure, not a statistical drift.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import protocol_sim as PS
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_protocol_pr3.json"
+
+# Small-scale configs covering every policy axis the PR 3 simulator had.
+# (Eclipse is new in this PR, so it is pinned by vectorized==reference
+# equivalence in tests/test_eclipse.py, not by this PR 3 golden file.)
+_BASE = dict(n_nodes=80, n_objects=2, object_bytes=1200, k_outer=2,
+             n_chunks=3, k_inner=5, r_inner=10, byz_fraction=0.15,
+             churn_per_year=40.0, step_hours=24.0, steps=8, claim_every=2)
+
+CONFIGS: dict[str, PS.ProtocolParams] = {
+    "iid_static": PS.ProtocolParams(**_BASE, seed=0),
+    "iid_static_seed1": PS.ProtocolParams(**_BASE, seed=1),
+    "regional_burst": PS.ProtocolParams(
+        **_BASE, churn_policy="regional", burst_prob=0.4, burst_mult=8.0,
+        seed=2),
+    "iid_adaptive": PS.ProtocolParams(
+        **_BASE, adv_policy="adaptive", adapt_boost=4.0, seed=3),
+    "iid_targeted": PS.ProtocolParams(
+        **_BASE, adv_policy="targeted", attack_frac=0.3, attack_step=3,
+        seed=4),
+    "iid_cache": PS.ProtocolParams(**_BASE, cache_ttl_hours=72.0, seed=5),
+    # prune-heavy: the claim timeout (3 steps at claim_every=1) is shorter
+    # than the run, so stale-member pruning and timer re-admission fire
+    # constantly — the pattern that stresses the engine's virtual
+    # timestamps. (Captured from engine="reference", which the tests above
+    # pin bit-identical to the PR 3 commit.)
+    "heavy_prune": PS.ProtocolParams(
+        **{**_BASE, "step_hours": 48.0, "claim_every": 1,
+           "churn_per_year": 80.0, "steps": 10}, seed=6),
+}
+
+_SCALARS = ("repair_traffic_units", "repairs", "cache_hits", "lost_objects",
+            "lost_fraction", "final_honest_mean", "honest_min",
+            "members_max", "n_groups", "repair_attempts")
+
+
+def _digest(r: PS.ProtocolResult) -> dict:
+    return {
+        **{f: getattr(r, f) for f in _SCALARS},
+        "alive_frac_trace": np.asarray(r.alive_frac_trace).tolist(),
+        "honest_trace": np.asarray(r.honest_trace).tolist(),
+        "byz_trace": np.asarray(r.byz_trace).tolist(),
+        "loss_events": [list(e) for e in r.loss_events],
+    }
+
+
+def _capture(run_kwargs: dict | None = None) -> dict:
+    kw = run_kwargs or {}
+    return {name: _digest(PS.run_protocol(p, **kw))
+            for name, p in CONFIGS.items()}
+
+
+def _assert_matches(got: dict, want: dict, label: str) -> None:
+    for name, ref in want.items():
+        cur = got[name]
+        for field, val in ref.items():
+            if isinstance(val, float):
+                assert cur[field] == pytest.approx(val, rel=0, abs=0), (
+                    f"{label}: {name}.{field}")
+            else:
+                assert cur[field] == val, f"{label}: {name}.{field}"
+
+
+@pytest.fixture(scope="module")
+def golden() -> dict:
+    assert GOLDEN.exists(), (
+        f"{GOLDEN} missing — regenerate with "
+        "`PYTHONPATH=src python -m tests.test_protocol_golden --regen` "
+        "from a known-good commit")
+    return json.loads(GOLDEN.read_text())
+
+
+def test_reference_engine_matches_pr3_golden(golden):
+    """The preserved scalar path still reproduces PR 3 bit-for-bit."""
+    _assert_matches(_capture({"engine": "reference"}), golden, "reference")
+
+
+def test_vectorized_engine_matches_pr3_golden(golden):
+    """The batched/vectorized tick path is bit-identical to PR 3."""
+    _assert_matches(_capture({"engine": "vectorized"}), golden, "vectorized")
+
+
+def test_default_engine_is_vectorized():
+    p = CONFIGS["iid_static"]
+    a = PS.run_protocol(p)
+    b = PS.run_protocol(p, engine="vectorized")
+    np.testing.assert_array_equal(a.honest_trace, b.honest_trace)
+    assert a.repair_traffic_units == b.repair_traffic_units
+
+
+def test_view_state_bit_identical():
+    """Stronger than the ProtocolResult pin: the raw membership dicts —
+    keys AND insertion order, for every view of every node — must match
+    between engines at every step. (Timestamp *values* are virtualized by
+    the vectorized engine and compared only through behavior: prunes,
+    repairs, and the result fields above.)"""
+    p = PS.ProtocolParams(
+        **{**_BASE, "claim_every": 1, "churn_per_year": 120.0,
+           "steps": 8}, seed=9)
+    states: dict[tuple, dict] = {}
+
+    def probe(tag):
+        def _p(t, net):
+            states[(tag, t)] = {
+                (n.nid, ch): tuple(v.members)
+                for n in net.nodes.values() for ch, v in n.groups.items()}
+        return _p
+
+    PS.run_protocol(p, engine="reference", probe=probe("r"))
+    PS.run_protocol(p, engine="vectorized", probe=probe("v"))
+    for t in range(p.steps):
+        assert states[("r", t)] == states[("v", t)], f"views diverge at {t}"
+
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        # capture from the reference engine (the preserved PR 3 scalar
+        # path) — regenerate ONLY from a commit whose reference engine is
+        # known-good
+        data = _capture({"engine": "reference"})
+        GOLDEN.write_text(json.dumps(data, indent=1))
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)

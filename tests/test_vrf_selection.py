@@ -1,9 +1,12 @@
-"""VRF + Algorithm 2 selection: determinism, verifiability, distribution."""
+"""VRF + Algorithm 2 selection: determinism, verifiability, distribution,
+and the batched paths pinned element-for-element against the scalar ones."""
 import numpy as np
+import pytest
 
 from repro.core import chunks as C
 from repro.core import selection as sel
-from repro.core.vrf import RING, KeyPair, VRFRegistry, node_id
+from repro.core.vrf import (RING, KeyPair, VRFRegistry, make_registry,
+                            node_id)
 
 
 def test_vrf_deterministic_and_verifiable():
@@ -96,3 +99,103 @@ def test_distance_metric_units():
     assert abs(
         sel.distance_metric(RING - spacing // 2, spacing // 2, n) - 2.0
     ) < 0.01
+
+
+# ---------------------------------------------------------------- batch paths
+def _population(reg, n=24):
+    kps = [KeyPair.generate(bytes([i]) * 8) for i in range(n)]
+    for kp in kps:
+        reg.register(kp)
+    return kps
+
+
+@pytest.mark.parametrize("backend", ["hash", "arx"])
+def test_registry_batch_matches_scalar(backend):
+    """verify_batch / prove_batch are element-for-element the scalar calls."""
+    reg = make_registry(backend)
+    kps = _population(reg)
+    alphas = [bytes([i]) * 32 for i in range(len(kps))]
+    rs, proofs = reg.prove_batch([kp.sk for kp in kps], alphas)
+    for kp, a, r, p in zip(kps, alphas, rs, proofs):
+        assert (r, p) == reg.prove(kp.sk, a)
+        assert reg.verify(kp.pk, a, r, p)
+    ok = reg.verify_batch([kp.pk for kp in kps], alphas, rs, proofs)
+    assert ok.all()
+    # tampered elements fail exactly where the scalar verifier fails
+    bad_rs = list(rs)
+    bad_rs[3] ^= 1 << 200
+    bad_proofs = list(proofs)
+    bad_proofs[7] = bytes(len(bad_proofs[7]))
+    ok = reg.verify_batch([kp.pk for kp in kps], alphas, bad_rs, bad_proofs)
+    want = [reg.verify(kp.pk, a, r, p) for kp, a, r, p in
+            zip(kps, alphas, bad_rs, bad_proofs)]
+    assert list(ok) == want
+    assert not ok[3] and not ok[7] and ok.sum() == len(kps) - 2
+
+
+@pytest.mark.parametrize("backend", ["hash", "arx"])
+def test_selection_batch_pins_scalar_path(backend):
+    """The tentpole correctness pin: make_selection_proofs_batch and
+    verify_selection_batch agree with the scalar Alg. 2 functions
+    element-for-element — selected coins, proof objects, and verdicts."""
+    reg = make_registry(backend)
+    kps = _population(reg, 32)
+    n_nodes, r_target = 32, 8
+    anchor = C.hash_point(b"chunk")
+    fhash = C.fragment_hash(b"chunk", 5)
+    proofs, selected = sel.make_selection_proofs_batch(
+        reg, [(kp.sk, kp.pk) for kp in kps], fhash, anchor, r_target,
+        n_nodes)
+    scalar = [sel.make_selection_proof(reg, kp.sk, kp.pk, fhash, anchor,
+                                       r_target, n_nodes) for kp in kps]
+    for i, (sp, sel_i) in enumerate(scalar):
+        assert bool(selected[i]) == sel_i
+        if sel_i:
+            assert proofs[i] == sp  # unselected proofs are lazily omitted
+    sps = [sp for sp, _ in scalar]
+    got = sel.verify_selection_batch(reg, sps, [anchor] * len(sps),
+                                     r_target, n_nodes)
+    want = [sel.verify_selection(reg, sp, anchor, r_target, n_nodes)
+            for sp in sps]
+    assert list(got) == want
+    # memoized second pass is identical
+    again = sel.verify_selection_batch(reg, sps, [anchor] * len(sps),
+                                       r_target, n_nodes)
+    assert list(again) == want
+
+
+def test_selection_batch_cache_keyed_on_proof_bits():
+    """A forged proof must not hit a genuine proof's cached verdict."""
+    reg = make_registry("hash")
+    kps = _population(reg, 8)
+    anchor = C.hash_point(b"c")
+    fhash = C.fragment_hash(b"c", 1)
+    sp, sel_ok = sel.make_selection_proof(reg, kps[0].sk, kps[0].pk, fhash,
+                                          anchor, 8, 8)
+    assert sel.verify_selection_batch(reg, [sp], [anchor], 8, 8)[0]
+    forged = sel.SelectionProof(pk=sp.pk, r=sp.r ^ 1, proof=sp.proof,
+                                fragment_hash=sp.fragment_hash)
+    assert not sel.verify_selection_batch(reg, [forged], [anchor], 8, 8)[0]
+
+
+def test_arx_registry_uniformity_and_unforgeability():
+    reg = make_registry("arx")
+    kps = _population(reg, 4)
+    rs = []
+    for i in range(512):
+        r, _ = reg.prove(kps[0].sk, i.to_bytes(32, "big"))
+        rs.append(r / RING)
+    rs = np.array(rs)
+    assert 0.4 < rs.mean() < 0.6 and rs.min() < 0.1 and rs.max() > 0.9
+    # proofs from one key don't verify under another, nor unregistered keys
+    alpha = (7).to_bytes(32, "big")
+    r, p = reg.prove(kps[1].sk, alpha)
+    assert reg.verify(kps[1].pk, alpha, r, p)
+    assert not reg.verify(kps[2].pk, alpha, r, p)
+    assert not reg.verify_batch([KeyPair.generate(b"zz").pk], [alpha], [r],
+                                [p])[0]
+
+
+def test_make_registry_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown VRF backend"):
+        make_registry("ed25519")
