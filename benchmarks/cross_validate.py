@@ -74,8 +74,9 @@ def matched_configs(steps: int, n_objects: int,
         # engine eclipses a deterministic whole-group share where the
         # protocol's segment-boundary groups straddle the cut and keep
         # partial repair, so the engine is the conservative bound —
-        # tests/test_eclipse.py asserts the direction; like iid_targeted,
-        # this row is reported here but not CI-gated by the two-sample test
+        # tests/test_cross_validation.py gates every metric of this row
+        # except lost_objects, which gets the one-sided bound (protocol
+        # losses must stay under the engine's upper CI band)
         "iid_eclipse": PS.ProtocolParams(
             **{**base, "churn_per_year": 80.0}, adv_policy="eclipse",
             attack_frac=0.3, attack_step=steps // 4,

@@ -9,4 +9,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=${XLA_DEVICES:-1}${XLA_FLAGS:+ $XLA_FLAGS}"
 
+# Persistent XLA compilation cache: repeat runs skip the ~9 s engine jit
+# compiles (only compiles above jax's 1 s min-compile-time threshold are
+# stored). Point JAX_COMPILATION_CACHE_DIR elsewhere to relocate it.
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$HOME/.cache/repro-jax-cache}"
+
 exec python -m pytest -x -q "$@"

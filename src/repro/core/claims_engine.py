@@ -39,6 +39,7 @@ against the scalar loop is enforced end-to-end by
 from __future__ import annotations
 
 import bisect
+from itertools import islice
 
 import numpy as np
 
@@ -48,13 +49,26 @@ from repro.core.network import Node, SimNetwork
 
 _NEG_INF = float("-inf")
 
+_TRIL: dict[int, np.ndarray] = {}
+
+
+def _tril(n: int) -> np.ndarray:
+    """Shared strictly-lower-triangular bool mask (read-only per size)."""
+    t = _TRIL.get(n)
+    if t is None:
+        t = np.tril(np.ones((n, n), bool), k=-1)
+        t.setflags(write=False)
+        _TRIL[n] = t
+    return t
+
 
 class _GState:
     """Resident claim-round state of one chunk group."""
 
     __slots__ = ("chash", "anchor", "r_target", "vnids", "vrows", "vpos",
                  "views", "colnids", "colpos", "colrows", "vcol", "P",
-                 "claim_ok", "bulk_ts", "stale_ts", "nn", "tril", "counts")
+                 "claim_ok", "bulk_ts", "stale_ts", "nn", "tril", "counts",
+                 "rows_v", "mlen", "st_rows")
 
     def __init__(self, chash: bytes):
         self.chash = chash
@@ -72,9 +86,12 @@ class _GState:
         self.claim_ok: np.ndarray | None = None
         self.bulk_ts: np.ndarray | None = None
         self.stale_ts: list[dict[int, float]] = []
+        self.st_rows: set[int] = set()  # viewer rows with stale exceptions
         self.nn = -1                   # population count claim_ok was keyed on
         self.tril: np.ndarray | None = None
         self.counts: np.ndarray | None = None
+        self.rows_v = -1               # net.rows_version the row arrays match
+        self.mlen: list[int] = []      # len(view.members) at last table sync
 
 
 class ClaimsEngine:
@@ -150,6 +167,7 @@ class ClaimsEngine:
         g.views = [net.nodes[nid].groups[g.chash] for nid in vn]
         g.vrows = np.fromiter((net.row_of[nid] for nid in vn), np.int64,
                               len(vn))
+        g.rows_v = net.rows_version
         g.r_target = g.views[0].meta.r_target if g.views else 0
         # member universe: every viewer plus every member nid
         cols: list[int] = list(vn)
@@ -173,16 +191,219 @@ class ClaimsEngine:
         g.bulk_ts = np.fromiter((old_bulk.get(nid, _NEG_INF) for nid in vn),
                                 np.float64, V)
         g.stale_ts = [old_stale.get(nid) or {} for nid in vn]
-        g.tril = np.tril(np.ones((V, V), bool), k=-1)
+        g.st_rows = {j for j, st in enumerate(g.stale_ts) if st}
+        g.tril = _tril(V)
         g.counts = None
+        g.mlen = [len(v.members) for v in g.views]
         self._verify_claims(g)
 
+    def _patch(self, g: _GState) -> bool:
+        """Apply an add-only membership delta to the resident tables.
+
+        Between rounds, shared protocol code only ever *adds* members to
+        view dicts (repair placements, MembershipTimer re-admissions) —
+        prunes happen inside the round, which keeps the tables in sync
+        itself. So a dirty group's per-view growth since the last sync
+        point (``mlen``) locates every membership change, and the tables
+        are patched in O(changed entries) instead of the full O(V × C)
+        dict rebuild of :meth:`_ingest`. At 10K nodes this is the
+        difference between the claim round riding repairs for free and
+        re-ingests dominating the tick. Returns False when the delta
+        cannot be expressed (caller falls back to the full ingest).
+
+        Matches ``_ingest`` observably: sorted viewer (turn) order, the
+        same bulk/stale timestamp carry-over, ``-inf`` bulk stamps for
+        new viewers (→ a full prune scan on their first turn), and
+        ``claim_ok`` recomputed only for the new rows — existing viewers'
+        proof sets cannot change outside a (re)ingest, and a population
+        shift re-keys every row in :meth:`round` regardless. The one
+        divergence — dead viewers are *kept* instead of dropped — is
+        behavior-neutral (their send/recv lanes are liveness-masked) and
+        bounded by the compaction trigger in :meth:`round`.
+        """
+        net = self.net
+        V = len(g.vnids)
+        if V == 0 or g.P is None or len(g.mlen) != V:
+            return False
+        grown = [j for j in range(V)
+                 if len(g.views[j].members) != g.mlen[j]]
+        if not grown:
+            return True        # timestamp-only touch: tables still exact
+        # -- discover new nids and viewer promotions. Closure argument: a
+        # new repair member always appears in the repairing viewer's
+        # (grown) view, and new viewers' own views only reference nids
+        # already known or found by this scan.
+        colpos = g.colpos
+        vpos = g.vpos
+        alive = net.alive_set
+        nodes = net.nodes
+
+        def _viewer(nid: int):
+            if nid not in alive:
+                return None
+            node = nodes.get(nid)
+            return None if node is None else node.groups.get(g.chash)
+
+        new_cols: list[int] = []       # nids with no column yet
+        promote: dict[int, object] = {}  # nid -> view (needs a viewer row)
+        seen: set[int] = set()
+        stack: list[int] = []
+        # add-only delta => the new entries are exactly the dict TAIL of
+        # each grown view (insertion order), so the discovery scan walks
+        # only len(members) - mlen[j] nids, not the whole view
+        n_new = {j: len(g.views[j].members) - g.mlen[j] for j in grown}
+        for j in grown:
+            for nid in islice(reversed(g.views[j].members), n_new[j]):
+                if nid in seen:
+                    continue
+                seen.add(nid)
+                if nid not in colpos:
+                    stack.append(nid)
+                elif nid not in vpos:
+                    # existing member-only column that acquired a view
+                    # since the last ingest (repair target drawn from a
+                    # stale view): the full rebuild would admit it as a
+                    # viewer now, so must we
+                    view = _viewer(nid)
+                    if view is not None:
+                        promote[nid] = view
+        while stack:
+            nid = stack.pop()
+            new_cols.append(nid)
+            view = _viewer(nid)
+            if view is None:
+                continue
+            promote[nid] = view
+            for m in view.members:
+                if m in seen or m in colpos:
+                    continue
+                seen.add(m)
+                stack.append(m)
+        grown_nids = [g.vnids[j] for j in grown]
+        if not promote:
+            # light path: new bits (and maybe new member-only columns) only
+            if new_cols:
+                for nid in new_cols:
+                    colpos[nid] = len(g.colnids)
+                    g.colnids.append(nid)
+                row_of = net.row_of
+                g.colrows = np.concatenate([
+                    g.colrows,
+                    np.fromiter((row_of.get(nid, -1) for nid in new_cols),
+                                np.int64, len(new_cols))])
+                g.P = np.concatenate(
+                    [g.P, np.zeros((V, len(new_cols)), bool)], axis=1)
+            for j in grown:
+                view = g.views[j]
+                # old members' bits are already set — tail only
+                for nid in islice(reversed(view.members), n_new[j]):
+                    g.P[j, colpos[nid]] = True
+                g.mlen[j] = len(view.members)
+            g.counts = None
+            return True
+        # -- new viewer rows: rebuild the index arrays around a sorted
+        # merge, permuting the old table blocks into place
+        vn_new = sorted(set(g.vnids) | set(promote))
+        V2 = len(vn_new)
+        vpos2 = {nid: j for j, nid in enumerate(vn_new)}
+        old_view = dict(zip(g.vnids, g.views))  # keeps reaped viewers' refs
+        views2 = [old_view.get(nid) or promote[nid] for nid in vn_new]
+        row_of = net.row_of
+        tail = ([nid for nid in g.colnids if nid not in vpos2]
+                + [nid for nid in new_cols if nid not in vpos2])
+        cols2 = vn_new + tail
+        colpos2 = {nid: c for c, nid in enumerate(cols2)}
+        rmap = np.fromiter((vpos2[nid] for nid in g.vnids), np.int64, V)
+        cmap = np.fromiter((colpos2[nid] for nid in g.colnids), np.int64,
+                           len(g.colnids))
+        P2 = np.zeros((V2, len(cols2)), bool)
+        P2[np.ix_(rmap, cmap)] = g.P
+        bulk2 = np.full(V2, _NEG_INF)
+        bulk2[rmap] = g.bulk_ts
+        stale2: list[dict[int, float]] = [{} for _ in range(V2)]
+        for j, st in zip(rmap, g.stale_ts):
+            stale2[j] = st
+        claim2 = np.zeros(V2, bool)
+        claim2[rmap] = g.claim_ok
+        old_rows = set(int(j) for j in rmap)
+        proofs, owners = [], []
+        for j2, nid in enumerate(vn_new):
+            if j2 in old_rows:
+                continue
+            node = nodes.get(nid)
+            if node is None:
+                continue
+            for proof in node.claim_proofs_by_chash.get(
+                    g.chash, {}).values():
+                proofs.append(proof)
+                owners.append(j2)
+        if proofs:
+            okv = sel.verify_selection_batch(
+                net.registry, proofs, [g.anchor] * len(proofs), g.r_target,
+                net.n_nodes)
+            np.logical_or.at(claim2, owners, okv)
+        g.vnids = vn_new
+        g.vpos = vpos2
+        g.views = views2
+        g.vrows = np.fromiter((row_of.get(nid, -1) for nid in vn_new),
+                              np.int64, V2)
+        g.rows_v = net.rows_version
+        g.colnids = cols2
+        g.colpos = colpos2
+        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in cols2),
+                                np.int64, len(cols2))
+        g.vcol = np.arange(V2, dtype=np.int64)
+        g.P = P2
+        g.claim_ok = claim2
+        g.bulk_ts = bulk2
+        g.stale_ts = stale2
+        g.st_rows = {j for j, st in enumerate(stale2) if st}
+        g.tril = _tril(V2)
+        n_new_nid = {grown_nids[i]: n_new[j] for i, j in enumerate(grown)}
+        for nid in set(grown_nids) | set(promote):
+            j2 = vpos2[nid]
+            row = P2[j2]
+            mem = views2[j2].members
+            # promoted rows start all-zero and need the full view; grown
+            # rows carried their old bits through the permutation — tail
+            tail = n_new_nid.get(nid)
+            it = mem if tail is None else islice(reversed(mem), tail)
+            for m in it:
+                row[colpos2[m]] = True
+        g.counts = None
+        g.mlen = [len(v.members) for v in views2]
+        return True
+
+    def _refresh_rows(self, g: _GState) -> None:
+        """Re-derive cached row-index gathers after a row-table compaction.
+
+        ``SimNetwork._compact_rows`` renumbers ``Node.row``, so any stale
+        ``vrows``/``colrows`` would index the wrong liveness slots. Reaped
+        (dead) nids are no longer in ``row_of`` and map to -1 — callers
+        gather through a ``>= 0`` mask, which reproduces exactly the
+        "row present but alive_rows False" answer the pre-reaper tables
+        gave for dead nodes.
+        """
+        row_of = self.net.row_of
+        g.vrows = np.fromiter((row_of.get(nid, -1) for nid in g.vnids),
+                              np.int64, len(g.vnids))
+        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in g.colnids),
+                                np.int64, len(g.colnids))
+        g.rows_v = self.net.rows_version
+
     def _verify_claims(self, g: _GState) -> None:
-        """claim_ok[v]: viewer holds >= 1 verifying claim proof (batched)."""
+        """claim_ok[v]: viewer holds >= 1 verifying claim proof (batched).
+
+        Reaped viewers (dead since the last ingest) contribute no proofs —
+        behavior-neutral, since a dead viewer's ``claim_ok`` is always
+        masked by the liveness gather before use."""
         net = self.net
         proofs, owners = [], []
         for j, nid in enumerate(g.vnids):
-            for proof in net.nodes[nid].claim_proofs_by_chash.get(
+            node = net.nodes.get(nid)
+            if node is None:
+                continue
+            for proof in node.claim_proofs_by_chash.get(
                     g.chash, {}).values():
                 proofs.append(proof)
                 owners.append(j)
@@ -218,7 +439,7 @@ class ClaimsEngine:
             self._discover(nodes)
         for chash in self.dirty:
             g = self.groups.get(chash)
-            if g is not None:
+            if g is not None and not self._patch(g):
                 self._ingest(g)
         self.dirty.clear()
         alive_rows = net.alive_rows
@@ -229,7 +450,10 @@ class ClaimsEngine:
                 continue
             if g.nn != net.n_nodes:
                 self._verify_claims(g)  # population shift re-keys Alg. 2
-            va = alive_rows[g.vrows]
+            if g.rows_v != net.rows_version:
+                self._refresh_rows(g)
+            vr = g.vrows
+            va = (vr >= 0) & alive_rows[np.where(vr >= 0, vr, 0)]
             if V - int(va.sum()) > max(8, V // 8):
                 # enough viewers died since the last ingest: compact the
                 # tables (amortized O(1) per death; keeps V ~ alive set)
@@ -260,18 +484,40 @@ class ClaimsEngine:
             # ~m0[r, s] — the transpose, not ~m0[s, r].
             ins_s, ins_r = np.nonzero(a & ~m0.T)
             suspect = recv & (now - g.bulk_ts > timeout_s)
+            ins_set = {int(r) for r in ins_r}
+            # A stale-exception turn with no insertions and a fresh bulk
+            # stamp is a complete no-op unless some tracked entry would
+            # actually fire: either its tracked timestamp already exceeds
+            # the timeout (the tracked value lower-bounds the effective
+            # one, so a real prune implies this test fires — conservative),
+            # or a live sender edge into this view would pop it. Scanning
+            # just the tracked entries here lets ``_apply_events`` skip the
+            # (numerous) turns that would only walk their dicts and return.
+            stale_slow: set[int] = set()
+            for j in g.st_rows:
+                if not recv[j] or j in ins_set or suspect[j]:
+                    continue
+                for nid, ts in g.stale_ts[j].items():
+                    if now - ts > timeout_s:
+                        stale_slow.add(j)
+                        break
+                    sidx = g.vpos.get(nid)
+                    if sidx is not None and sidx != j and a[sidx, j]:
+                        stale_slow.add(j)
+                        break
             events = sorted(
-                set(int(r) for r in ins_r)
-                | {j for j in range(V)
-                   if suspect[j] or (recv[j] and g.stale_ts[j])})
+                ins_set
+                | {int(j) for j in np.nonzero(suspect)[0]}
+                | stale_slow)
             if events:
                 self._apply_events(g, a, ins_s, ins_r, events, suspect,
                                    now, timeout_s)
+                g.mlen = [len(v.members) for v in g.views]
             # --- virtual timestamp maintenance ------------------------
-            refr = np.zeros_like(g.P)
-            refr[:, :V] = a.T
-            nonrefr = g.P & ~refr & recv[:, None]
-            nonrefr[np.arange(V), np.arange(V)] = False  # self-entry: never
+            nonrefr = g.P & recv[:, None]
+            nonrefr[:, :V] &= ~a.T
+            d = np.arange(V)
+            nonrefr[d, d] = False  # self-entry: never
             nr_r, nr_c = np.nonzero(nonrefr)
             if nr_r.size:
                 for j, c in zip(nr_r, nr_c):
@@ -281,6 +527,7 @@ class ClaimsEngine:
                         last = g.views[j].members[nid]
                         bulk = g.bulk_ts[j]
                         st[nid] = last if last > bulk else bulk
+                g.st_rows.update(nr_r.tolist())
             g.bulk_ts[recv] = now
             g.counts = None
 
@@ -296,6 +543,19 @@ class ClaimsEngine:
             self_nid = g.vnids[j]
             st = g.stale_ts[j]
             senders = sorted(ins_by_r.get(j, ()))
+            if not suspect[j] and not st:
+                # pure-insert turn (the common case: a fresh repair
+                # member's claim landing in up-to-date views): no tracked
+                # exceptions and a fresh bulk stamp mean the prune scan is
+                # provably empty, so the turn reduces to the insertions —
+                # in the same dict order the full turn would produce
+                # (before-turn senders then after-turn senders, both
+                # ascending; ``readds`` needs a prune to be non-empty)
+                for s in senders:
+                    mem[g.vnids[s]] = now
+                    g.P[j, s] = True
+                g.st_rows.discard(j)
+                continue
             k = bisect.bisect_left(senders, j)
             for s in senders[:k]:       # inserted before j's own turn
                 mem[g.vnids[s]] = now
@@ -336,6 +596,8 @@ class ClaimsEngine:
                 mem[g.vnids[s]] = now
                 g.P[j, s] = True
                 st.pop(g.vnids[s], None)
+            if not st:
+                g.st_rows.discard(j)
 
     # ----------------------------------------------------- repair pre-check
     def precheck_count(self, nid: int, chash: bytes) -> int | None:
@@ -351,6 +613,8 @@ class ClaimsEngine:
         if j is None:
             return None
         if g.counts is None:
+            if g.rows_v != self.net.rows_version:
+                self._refresh_rows(g)
             alive_cols = np.zeros(len(g.colnids), bool)
             valid = g.colrows >= 0
             alive_cols[valid] = self.net.alive_rows[g.colrows[valid]]

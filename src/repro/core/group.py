@@ -125,7 +125,8 @@ def prune_dead_members(net: SimNetwork, node: Node, timeout_s: float) -> None:
 
 
 def membership_timer(net: SimNetwork, node: Node, chash: bytes,
-                     batch: bool = False, cache: dict | None = None) -> None:
+                     batch: bool = False, cache: dict | None = None,
+                     prev: dict | None = None) -> None:
     """MembershipTimer() of §4.3.3: merge Locate() results into the view.
 
     ``batch=True`` verifies every candidate's stored claim proofs through
@@ -141,6 +142,16 @@ def membership_timer(net: SimNetwork, node: Node, chash: bytes,
     of the same short group merges the one computed set. The repair loop
     evicts a group's entry whenever a repair adds a member (new proofs /
     new view), keeping the cached set exact.
+
+    ``prev`` extends the same argument ACROSS ticks: stored proofs (and
+    view presence) change only through ``store_fragment``, i.e. through a
+    repair — and repairs evict the group's ``prev`` entry too. Between
+    evictions the only moving part is the candidate window itself (churn
+    shifts the ring; eclipse windows mask segments), so a donor entry
+    ``(candidate nids, admit-verdict set, n_nodes)`` stays exact for every
+    candidate it has already judged: only window *newcomers* need a proof
+    verification, and the admitted list is rebuilt in the fresh
+    candidate-walk order (dict-insertion order is observable downstream).
     """
     if net.is_eclipsed(node.nid):
         return
@@ -157,6 +168,49 @@ def membership_timer(net: SimNetwork, node: Node, chash: bytes,
     anchor = C.hash_point(chash)
     cands = net.candidates(anchor, min(4 * view.meta.r_target, net.n_nodes))
     if batch:
+        ent = prev.get(chash) if prev is not None else None
+        if ent is not None and ent[2] == net.n_nodes:
+            old_cands, adm = ent[0], ent[1]
+            # one pass: collect admit (candidate order), window newcomers,
+            # and the fresh candidate-nid set together — newcomers are
+            # rare, so the rebuild below almost never runs
+            cset = set()
+            admit = []
+            newcomers = []
+            for c in cands:
+                nid = c.nid
+                cset.add(nid)
+                if nid in adm:
+                    admit.append(nid)
+                elif nid not in old_cands:
+                    newcomers.append(c)
+            if newcomers:
+                proofs, owners = [], []
+                for cand in newcomers:
+                    if cand.groups.get(chash) is None:
+                        continue
+                    for proof in (cand.claim_proofs_by_chash
+                                  .get(chash, {}).values()):
+                        proofs.append(proof)
+                        owners.append(cand)
+                fresh = False
+                if proofs:
+                    ok = sel.verify_selection_batch(
+                        net.registry, proofs, [anchor] * len(proofs),
+                        view.meta.r_target, net.n_nodes)
+                    for cand, good in zip(owners, ok):
+                        if good and cand.nid not in adm:
+                            adm.add(cand.nid)
+                            fresh = True
+                if fresh:   # re-walk to slot new verdicts in cand order
+                    admit = [c.nid for c in cands if c.nid in adm]
+            now = net.now
+            for nid in admit:
+                view.members[nid] = now
+            if cache is not None:
+                cache[chash] = admit
+            prev[chash] = (cset, adm, net.n_nodes)
+            return
         proofs, owners = [], []
         for cand in cands:
             if cand.groups.get(chash) is None:
@@ -178,6 +232,8 @@ def membership_timer(net: SimNetwork, node: Node, chash: bytes,
                 view.members[nid] = net.now
         if cache is not None:
             cache[chash] = admit
+        if prev is not None:
+            prev[chash] = ({c.nid for c in cands}, set(admit), net.n_nodes)
         return
     for cand in cands:
         peer_view = cand.groups.get(chash)

@@ -178,8 +178,21 @@ class SimNetwork:
         self._ring_version = 0
         self._cand_state: tuple = (-1, None)
         self._cand_cache: dict[tuple[int, int], list[Node]] = {}
+        # batched-Locate state: selection.LocateRound instances keyed by
+        # (anchor, count, r_target), valid while the ring + eclipse cut are
+        # unchanged (same invalidation condition as the candidate memo)
+        self._locate_state: tuple = (-1, None)
+        self._locate_cache: dict[tuple, "sel.LocateRound"] = {}
+        self._locate_prev: dict[tuple, "sel.LocateRound"] = {}
         self.row_of: dict[int, int] = {}    # nid -> dense row
         self.alive_set: set[int] = set()    # alive nids (mirror of .alive)
+        # dead-node reaper bookkeeping: fail_node drops the node's dict
+        # state immediately; the dense row tables are compacted lazily once
+        # dead rows outnumber max(64, alive) — amortized O(1) per death.
+        # rows_version stamps each compaction so row-index holders
+        # (claims_engine) can refresh their cached gathers.
+        self.rows_version = 0
+        self._dead_rows = 0
 
     # -- membership ----------------------------------------------------------
     @property
@@ -214,6 +227,41 @@ class SimNetwork:
         i = bisect.bisect_left(self._ring, nid)
         if i < len(self._ring) and self._ring[i] == nid:
             self._ring.pop(i)
+        # --- dead-node reaper -------------------------------------------
+        # A failed node never rejoins (churn replaces it with a fresh
+        # keypair), and every live read path is guarded (`nid in
+        # net.nodes` / `.get` / alive filters), so its per-node dict state
+        # — fragments, claim proofs, group views, keypair, memoized
+        # selection verdicts — is unreachable garbage from here on.
+        # Dropping it immediately keeps a churn-heavy simulated month at
+        # bounded memory instead of accruing every keypair ever spawned.
+        del self.nodes[nid]
+        del self.row_of[nid]
+        self._rows[node.row] = None
+        self._dead_rows += 1
+        self.registry.evict(node.kp)
+        if self._dead_rows > max(64, len(self._ring)):
+            self._compact_rows()
+
+    def _compact_rows(self) -> None:
+        """Rebuild the dense row tables over the surviving nodes.
+
+        Reassigns ``Node.row`` / ``row_of`` and shrinks ``alive_rows`` to
+        the live population (with the same amortized headroom growth as
+        ``add_node``). Bumps ``rows_version``: any cached row-index arrays
+        (``claims_engine`` gathers) are stale and must be re-derived from
+        ``row_of``.
+        """
+        rows = [n for n in self._rows if n is not None]
+        self._rows = rows
+        self.row_of = {}
+        self.alive_rows = np.zeros(max(64, 2 * len(rows)), dtype=bool)
+        for i, node in enumerate(rows):
+            node.row = i
+            self.row_of[node.nid] = i
+        self.alive_rows[:len(rows)] = True
+        self._dead_rows = 0
+        self.rows_version += 1
 
     def alive_nodes(self) -> list[Node]:
         return [self.nodes[n] for n in self._ring]
@@ -250,26 +298,73 @@ class SimNetwork:
                 return hit
         count = min(count, len(self._ring))
         i = bisect.bisect_left(self._ring, point % RING)
-        # walk outwards on the ring from the insertion point
+        # Walk outwards on the ring from the insertion point: ``lo`` moves
+        # counter-clockwise from slot i-1, ``hi`` clockwise from slot i.
+        # Together they sweep disjoint slots until they meet — ``remaining``
+        # counts the unvisited slots between them, and when it reaches 1
+        # both pointers reference the same final slot (lo ≡ hi mod n), so
+        # the walk terminates without ever revisiting a node. Every
+        # reachable (non-eclipsed) node is therefore visited exactly once,
+        # and the result needs no dedup: a short return means the ring
+        # genuinely has fewer than ``count`` reachable nodes.
         out: list[int] = []
         lo, hi = i - 1, i
         n = len(self._ring)
-        seen = 0
-        while len(out) < count and seen < n:
-            lo_id = self._ring[lo % n]
-            hi_id = self._ring[hi % n]
-            if sel.ring_distance(point, lo_id) <= sel.ring_distance(point, hi_id):
-                nxt, lo = lo_id, lo - 1
+        remaining = n
+        ring = self._ring
+        ecl = self.eclipse
+        half = RING >> 1
+        # only the advanced pointer needs a fresh distance each step —
+        # carry the other side's value (ring_distance inlined: this loop
+        # dominates every Locate()/MembershipTimer walk at 10K nodes)
+        d = (point - ring[lo % n]) % RING
+        dlo = d if d <= half else RING - d
+        d = (point - ring[hi % n]) % RING
+        dhi = d if d <= half else RING - d
+        while len(out) < count and remaining:
+            if dlo <= dhi:
+                nxt, lo = ring[lo % n], lo - 1
+                d = (point - ring[lo % n]) % RING
+                dlo = d if d <= half else RING - d
             else:
-                nxt, hi = hi_id, hi + 1
-            seen += 1
-            if not self.is_eclipsed(nxt):
+                nxt, hi = ring[hi % n], hi + 1
+                d = (point - ring[hi % n]) % RING
+                dhi = d if d <= half else RING - d
+            remaining -= 1
+            if ecl is None or not self.is_eclipsed(nxt):
                 out.append(nxt)
-        uniq = list(dict.fromkeys(out))[:count]
-        found = [self.nodes[n_] for n_ in uniq]
+        found = [self.nodes[n_] for n_ in out]
         if key is not None:
             self._cand_cache[key] = found
         return found
+
+    def locate_round(self, anchor: int, count: int,
+                     r_target: int) -> "sel.LocateRound":
+        """Resident batched-Locate state for one anchor (see
+        ``selection.LocateRound``). Instances persist across slots and
+        ticks; the cache drops whenever membership or the partition cut
+        changes (which also re-keys ``n_nodes``-dependent thresholds)."""
+        state = (self._ring_version, self.eclipse)
+        if state != self._locate_state:
+            self._locate_state = state
+            # fold the stale generation into the donor map: LocateRound
+            # copies per-candidate rows (distances, thresholds, VRF tag
+            # lanes) for nids that survived the membership change. The
+            # map is cumulative across generations — an anchor visited at
+            # tick t and next needed at tick t+3 still finds its donor
+            # (per-nid reuse stays exact however stale the donor: the
+            # copied rows are pure functions of (anchor, nid, r_target,
+            # n_nodes), all matched). Bounded by one entry per anchor.
+            self._locate_prev.update(self._locate_cache)
+            self._locate_cache = {}
+        key = (anchor, count, r_target)
+        lr = self._locate_cache.get(key)
+        if lr is None:
+            lr = sel.LocateRound(self.registry, self.candidates(anchor, count),
+                                 anchor, r_target, self.n_nodes,
+                                 prev=self._locate_prev.get(key))
+            self._locate_cache[key] = lr
+        return lr
 
     # -- latency accounting ----------------------------------------------------
     def rtt(self, a: Node, b: Node) -> float:

@@ -343,6 +343,7 @@ def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
 def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                  frag_len: dict, pick, batch: bool = False,
                  claims: "CE.ClaimsEngine | None" = None,
+                 timer_prev: dict | None = None,
                  ) -> tuple[float, int, int, int]:
     """One decentralized repair tick: every alive node checks each of its
     group views and repairs the ones short of ``R`` (repair.py §4.3.4).
@@ -368,16 +369,62 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
     if claims is not None:
         claims.begin_repair_tick()  # liveness changed since the last tick
     timer_cache: dict | None = {} if batch else None
+    # Liveness is fixed for the whole tick (churn and the attack have
+    # already run; repairs only ever add members), so every view's alive
+    # count is non-decreasing from here on. One vectorized pass over the
+    # resident tables therefore finds every (viewer, group) pair that can
+    # possibly be under R this tick — visiting a >= R view is a pure
+    # no-op in the loop body below, so skipping those pairs is exact.
+    # Only usable when the tables cover every view (claim round just
+    # synced, nothing dirty); nodes that GAIN views mid-tick (fresh
+    # repair members, reported via ``RepairStats.new_nids``) fall back to
+    # the full walk of their group lists.
+    visit: dict[int, set[bytes]] | None = None
+    if claims is not None and claims._started and not claims.dirty:
+        visit = {}
+        alive_rows = net.alive_rows
+        for chash, g in claims.groups.items():
+            if not g.vnids or chash not in registry:
+                continue
+            if g.rows_v != net.rows_version:
+                claims._refresh_rows(g)
+            cr = g.colrows
+            valid = cr >= 0
+            alive_cols = alive_rows[np.where(valid, cr, 0)] & valid
+            g.counts = np.count_nonzero(g.P & alive_cols, axis=1)
+            for j in np.nonzero(g.counts < p.r_inner)[0]:
+                visit.setdefault(g.vnids[int(j)], {})[chash] = \
+                    int(g.counts[j])
+    tick_new: set[int] = set()
     for node in list(net.alive_nodes()):
         if node.byzantine:
             continue  # Fig. 6 adversary stores nothing and repairs nothing
-        for chash in list(node.groups):
+        # The precomputed table count stays EXACT for every (viewer, group)
+        # pair on the visit list until that viewer's own view mutates —
+        # and mid-tick the only mutation paths are the viewer's own visit
+        # (below) and being recruited by someone else's repair, which
+        # lands the viewer in ``tick_new`` and onto the exact-walk path.
+        # So visit-listed pairs skip both the table lookup and the dict
+        # walk: their tick-start count IS the current count.
+        fast_counts: dict | None = None
+        if visit is None or node.nid in tick_new:
+            group_iter = list(node.groups)
+        else:
+            want = visit.get(node.nid)
+            if not want:
+                continue
+            group_iter = [ch for ch in node.groups if ch in want]
+            fast_counts = want
+        for chash in group_iter:
             if chash not in registry:
                 continue
-            n_alive = (claims.precheck_count(node.nid, chash)
-                       if claims is not None else None)
-            if n_alive is None:
-                n_alive = len(G.alive_members(net, node, chash))
+            if fast_counts is not None:
+                n_alive = fast_counts[chash]
+            else:
+                n_alive = (claims.precheck_count(node.nid, chash)
+                           if claims is not None else None)
+                if n_alive is None:
+                    n_alive = len(G.alive_members(net, node, chash))
             if n_alive >= p.r_inner:
                 continue  # cheap pre-check; repair_group re-verifies
             if batch and not net.is_eclipsed(node.nid):
@@ -395,12 +442,18 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                         mem[nid] = net.now
                     if claims is not None:
                         claims.touch(chash)  # merge outdated the tables
+                    # every admitted candidate is ring-resident => alive
+                    # this tick, so |admit| >= R already proves the merged
+                    # view holds R alive members — skip the dict walk
+                    if len(admit) >= p.r_inner:
+                        continue
                     alive_set = net.alive_set
                     if sum(1 for nid in mem if nid in alive_set) \
                             >= p.r_inner:
                         continue
             s = R.repair_group(net, node, chash, cache_ttl=ttl, pick=pick,
-                               batch=batch, timer_cache=timer_cache)
+                               batch=batch, timer_cache=timer_cache,
+                               timer_prev=timer_prev)
             if claims is not None:
                 # MembershipTimer inside repair_group may have changed the
                 # view even when nothing was repaired — stop trusting the
@@ -408,6 +461,7 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                 claims.touch(chash)
             if s.repaired:
                 attempts += 1
+                tick_new.update(s.new_nids)
             repairs += s.repaired
             hits += s.cache_hits
             traffic_units += s.traffic_bytes / frag_len[chash] * frag_units
@@ -470,7 +524,11 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
             if adv_id == P.ADV_ADAPTIVE else None)
     # bootstrap: top groups up to R (client stores may undershoot when the
     # candidate set thins out); uncounted, like the engine's exact-R init
-    _repair_tick(net, p, registry, frag_len, pick, batch=vec)
+    # timer_prev: cross-tick MembershipTimer verdict donor (vectorized
+    # engine only — see group.membership_timer), evicted on every repair
+    timer_prev: dict | None = {} if vec else None
+    _repair_tick(net, p, registry, frag_len, pick, batch=vec,
+                 timer_prev=timer_prev)
 
     p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
     p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
@@ -507,7 +565,8 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
                     G.broadcast_claims(net, node)
                     G.prune_dead_members(net, node, claim_timeout)
         tu, rp, ch, at = _repair_tick(
-            net, p, registry, frag_len, pick, batch=vec, claims=claims)
+            net, p, registry, frag_len, pick, batch=vec, claims=claims,
+            timer_prev=timer_prev)
         traffic_units += tu
         repairs += rp
         cache_hits += ch

@@ -20,6 +20,7 @@ reference.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 
 import numpy as np
@@ -51,6 +52,22 @@ def prf_u64(key: bytes, index: int) -> int:
     return int.from_bytes(prf_bytes(key, index, 8), "little")
 
 
+@functools.lru_cache(maxsize=1 << 16)
+def _coeff_row(seed: bytes, k: int, index: int) -> np.ndarray:
+    """Memoized read-only coefficient row — pure in ``(seed, k, index)``.
+
+    Repair decodes re-derive the same rows every tick (same chunk seeds,
+    overlapping fragment indices); one blake2b stream per distinct row is
+    enough for the whole run. Returned array is marked non-writable —
+    ``coeff_matrix``'s ``np.stack`` copies, ``coeff_row`` copies
+    explicitly."""
+    row = np.frombuffer(prf_bytes(seed, index, k), np.uint8).copy()
+    if not row.any():  # all-zero row is useless; bump deterministically
+        row[index % k] = 1
+    row.setflags(write=False)
+    return row
+
+
 # -------------------------------------------------------------------- RLNC
 @dataclasses.dataclass(frozen=True)
 class RLNC:
@@ -65,13 +82,12 @@ class RLNC:
 
     def coeff_row(self, index: int) -> np.ndarray:
         """Dense GF(256) coefficient row for stream symbol ``index``."""
-        row = np.frombuffer(prf_bytes(self.seed, index, self.k), np.uint8).copy()
-        if not row.any():  # all-zero row is useless; bump deterministically
-            row[index % self.k] = 1
-        return row
+        return _coeff_row(self.seed, self.k, index).copy()
 
     def coeff_matrix(self, indices: list[int] | np.ndarray) -> np.ndarray:
-        return np.stack([self.coeff_row(int(i)) for i in indices], axis=0)
+        seed, k = self.seed, self.k
+        return np.stack([_coeff_row(seed, k, int(i)) for i in indices],
+                        axis=0)
 
     # encode ---------------------------------------------------------------
     def encode(
@@ -107,7 +123,35 @@ def gf256_gaussian_solve(
 
     ``coeffs``: (m, k) with m >= k. Raises InsufficientFragments if the
     matrix is rank-deficient.
+
+    Delegates to the ``kernels/gf256_solve`` single-system entry (the
+    batched dispatcher routes B=1 through the same augmented-matrix
+    path; benchmark-scale batches take the Pallas kernel). Bit-identical
+    to
+    :func:`gf256_gaussian_solve_ref` — the retained scalar reference —
+    including the exact ``InsufficientFragments`` message on
+    rank-deficient input (``tests/test_gf256_solve.py`` pins both).
     """
+    a = np.asarray(coeffs, dtype=np.uint8)
+    y = np.asarray(symbols, dtype=np.uint8)
+    m = a.shape[0]
+    if m < k:
+        raise InsufficientFragments(f"need >= {k} symbols, got {m}")
+    assert a.shape[1] == k, (a.shape, k)
+    from repro.kernels.gf256_solve import gf256_solve_one
+
+    x, ok, fail_col = gf256_solve_one(a, y)
+    if not ok:
+        raise InsufficientFragments(
+            f"rank-deficient at column {fail_col}")
+    return x
+
+
+def gf256_gaussian_solve_ref(
+    coeffs: np.ndarray, symbols: np.ndarray, k: int
+) -> np.ndarray:
+    """Scalar reference solver (the pre-kernel implementation), kept as
+    the bit-pin oracle for ``kernels/gf256_solve``."""
     a = np.asarray(coeffs, dtype=np.uint8).copy()
     y = np.asarray(symbols, dtype=np.uint8).copy()
     m = a.shape[0]

@@ -43,6 +43,9 @@ class RepairStats:
     traffic_bytes: int = 0
     cache_hits: int = 0
     latency_s: float = 0.0  # modeled network latency of the slowest repair
+    # nids placed into the group by this call — these nodes gained a view,
+    # so tick-level schedulers must re-scan their group lists
+    new_nids: list[int] = dataclasses.field(default_factory=list)
 
 
 def _fresh_index(net: SimNetwork, view) -> int:
@@ -66,19 +69,21 @@ def _locate_new_member(
     already survived proof verification; the bias can only reorder
     *legitimately selected* candidates, never admit forged ones.
 
-    ``batch=True`` proves and verifies the whole candidate round through
-    ``selection.make_selection_proofs_batch`` / ``verify_selection_batch``
-    (one VRF pass each) instead of per-candidate scalar calls; the
+    ``batch=True`` runs the round through the net's resident
+    ``selection.LocateRound`` (one vectorized VRF pass over a cached
+    candidate-array set) instead of per-candidate scalar calls; the
     responder list — order included — is identical.
     """
     anchor = C.hash_point(chash)
-    cands = net.candidates(anchor, min(4 * r_target, net.n_nodes))
     responders: list[tuple[int, Node, sel.SelectionProof]] = []
     if batch:
-        elig = [c for c in cands if c.nid not in exclude and c.alive]
-        responders = sel.verified_responders(
-            net.registry, elig, fhash, anchor, r_target, net.n_nodes)
+        lr = net.locate_round(anchor, min(4 * r_target, net.n_nodes),
+                              r_target)
+        if pick is None:  # default nearest-selected: winner-only fast path
+            return lr.nearest(fhash, exclude)
+        responders = lr.responders(fhash, exclude)
     else:
+        cands = net.candidates(anchor, min(4 * r_target, net.n_nodes))
         for cand in cands:
             if cand.nid in exclude or not cand.alive:
                 continue
@@ -150,7 +155,7 @@ def _pull_and_decode(
 def repair_group(
     net: SimNetwork, node: Node, chash: bytes, cache_ttl: float = 0.0,
     max_new: int | None = None, pick=None, batch: bool = False,
-    timer_cache: dict | None = None,
+    timer_cache: dict | None = None, timer_prev: dict | None = None,
 ) -> RepairStats:
     """One repair pass from ``node``'s local view (§4.3.4).
 
@@ -174,7 +179,8 @@ def repair_group(
     # refresh the view first (MembershipTimer — §4.3.3); the per-tick
     # timer cache shares the verified-candidate set across the group's
     # viewers (see membership_timer) and is evicted below on any repair
-    G.membership_timer(net, node, chash, batch=batch, cache=timer_cache)
+    G.membership_timer(net, node, chash, batch=batch, cache=timer_cache,
+                       prev=timer_prev)
     alive = G.alive_members(net, node, chash)
     deficit = meta.r_target - len(alive)
     if max_new is not None:
@@ -230,13 +236,25 @@ def repair_group(
         exclude.add(new_member.nid)
         member_nodes.append(new_member)
         alive.append(new_member.nid)
+        stats.new_nids.append(new_member.nid)
         stats.repaired += 1
         lat_worst = max(lat_worst, lat)
     stats.latency_s = lat_worst
-    if stats.repaired and timer_cache is not None:
+    if stats.repaired:
         # the new members hold fresh verifiable proofs — the cached
         # admitted set for this group is stale from here on
-        timer_cache.pop(chash, None)
+        if timer_cache is not None:
+            timer_cache.pop(chash, None)
+        if timer_prev is not None:
+            # the cross-tick verdict donor stays valid for everyone else:
+            # ``store_fragment`` touched ONLY the recruited members'
+            # proofs, so drop just those verdicts — they re-verify as
+            # window newcomers on the next MembershipTimer pass
+            ent = timer_prev.get(chash)
+            if ent is not None:
+                for nid in stats.new_nids:
+                    ent[0].discard(nid)
+                    ent[1].discard(nid)
     net.repair_traffic_bytes += stats.traffic_bytes
     net.repair_count += stats.repaired
     return stats

@@ -22,7 +22,8 @@ import math
 
 import numpy as np
 
-from repro.core.vrf import HASHLEN, RING, VRFRegistry, node_id
+from repro.core.vrf import (ARX_SHIFT, HASHLEN, RING, ArxVRFRegistry,
+                            VRFRegistry, node_id)
 
 
 def ring_distance(a: int, b: int) -> int:
@@ -86,8 +87,9 @@ def verify_selection(
 # node_id is a pure sha256 of pk; the batch verifier caches ring points so
 # re-verified claims cost zero hashing. The scalar verify_selection above is
 # deliberately left uncached — it IS the PR 3 reference path the protocol
-# benchmarks use as their baseline.
-_node_point = functools.lru_cache(maxsize=None)(node_id)
+# benchmarks use as their baseline. Bounded (LRU) so a churn-heavy month
+# does not accumulate one entry per keypair ever generated.
+_node_point = functools.lru_cache(maxsize=1 << 20)(node_id)
 
 
 @functools.lru_cache(maxsize=1 << 20)
@@ -163,6 +165,257 @@ def verified_responders(
              proofs[i]) for i, good in zip(idx, ok) if good]
 
 
+class LocateRound:
+    """Resident selection state for one (anchor, candidate set, r_target,
+    population) cell, reused across every Locate() slot of a tick.
+
+    :func:`verified_responders` re-derives per-candidate constants — ring
+    distance, selection threshold, VRF tag lanes — on every call, then
+    verifies proofs the candidates just made themselves. Both costs are
+    per-slot invariant: a store round runs up to ``6R`` slots against the
+    same candidate list, and a 10K-node repair tick runs ~1K slots against
+    per-anchor lists that only change at churn/partition edges
+    (``SimNetwork.locate_round`` caches instances on exactly that state).
+    This class hoists the invariants into arrays built once:
+
+    * ``dists``/``thresholds`` — exact integer ring distances and Alg. 2
+      thresholds per candidate (the ``_threshold_for`` memo feeds them).
+    * ARX registries additionally get a ``(P, 2)`` uint32 tag-lane array;
+      a slot is then ONE vectorized PRF evaluation plus a uint64 threshold
+      compare — no per-candidate Python until the ~R selected survivors.
+      The compare is exact: ``r == r32 << 224 < t  iff  r32 < ceil(t /
+      2^224)``, and the ceiling fits uint64.
+    * Verification is elided, not approximated: every candidate is an
+      alive registered node proving over its *own* key, so
+      ``verify_selection`` recomputes byte-identical values and returns
+      the selection coin — the scalar path's verify can only ever confirm
+      (``test_locate_round.py`` pins the responder lists either way). The
+      memoized verdict is still written, so later re-verifications of
+      stored proofs (claims) hit the cache exactly as before.
+
+    ``responders(fhash, exclude)`` returns the same ``(ring_distance,
+    node, proof)`` list, in the same candidate order, as
+    ``verified_responders(registry, [c for c in candidates if c.nid not
+    in exclude and c.alive], ...)``.
+    """
+
+    def __init__(self, registry: VRFRegistry, candidates: list, anchor: int,
+                 r_target: int, n_nodes: int,
+                 prev: "LocateRound | None" = None):
+        self.registry = registry
+        self.candidates = list(candidates)
+        self.anchor = anchor
+        self.r_target = r_target
+        self.n_nodes = n_nodes
+        cands = self.candidates
+        n = len(cands)
+        arx = isinstance(registry, ArxVRFRegistry)
+        # The per-candidate constants are pure functions of (anchor, nid/pk,
+        # r_target, n_nodes). Under steady churn the same anchor recurs
+        # every tick with a near-identical candidate window, so instead of
+        # re-deriving 256-bit ring distances and thresholds per candidate,
+        # copy the rows of the invalidated previous round (matched by nid)
+        # and compute only the handful of newcomers. Exact reuse — the
+        # values are deterministic in the matched key.
+        self._nid_idx: dict | None = None
+        if (prev is not None and prev.anchor == anchor
+                and prev.r_target == r_target and prev.n_nodes == n_nodes
+                and prev.registry is registry):
+            pidx = prev._nid_idx
+            if pidx is None:
+                pidx = {c.nid: i for i, c in enumerate(prev.candidates)}
+            if arx and prev._words is not None:
+                # arx fast lane: responders()/nearest() on this backend
+                # read only ``dists`` + ``_words``/``_thr_hi`` — skip the
+                # python thresholds list and the secret-key gather, both
+                # dead weight here (donor chains stay on this lane too)
+                dists = [0] * n
+                nid_idx = {}
+                src = np.full(n, -1, np.int64)
+                miss = []
+                for i, c in enumerate(cands):
+                    nid = c.nid
+                    nid_idx[nid] = i
+                    j = pidx.get(nid, -1)
+                    if j >= 0:
+                        src[i] = j
+                        dists[i] = prev.dists[j]
+                    else:
+                        miss.append(i)
+                self._nid_idx = nid_idx
+                hit = src >= 0
+                words = np.empty((n, 2), np.uint32)
+                thr_hi = np.empty(n, np.uint64)
+                words[hit] = prev._words[src[hit]]
+                thr_hi[hit] = prev._thr_hi[src[hit]]
+                if miss:
+                    words[miss] = registry.sk_lanes(
+                        [cands[i].kp.sk for i in miss])
+                    for i in miss:
+                        c = cands[i]
+                        dists[i] = ring_distance(anchor, c.nid)
+                        t = _threshold_for(anchor, c.kp.pk, r_target,
+                                           n_nodes)
+                        thr_hi[i] = (t + (1 << ARX_SHIFT) - 1) >> ARX_SHIFT
+                self.dists = dists
+                self.thresholds = None
+                self._sks = None
+                self._words = words
+                self._thr_hi = thr_hi
+                return
+            dists: list = [0] * n
+            thresholds: list = [0] * n
+            nid_idx: dict = {}
+            src = np.full(n, -1, np.int64)
+            miss: list[int] = []
+            for i, c in enumerate(cands):
+                nid = c.nid
+                nid_idx[nid] = i
+                j = pidx.get(nid, -1)
+                if j >= 0:
+                    src[i] = j
+                    dists[i] = prev.dists[j]
+                    thresholds[i] = prev.thresholds[j]
+                else:
+                    miss.append(i)
+            self._nid_idx = nid_idx
+            for i in miss:
+                c = cands[i]
+                dists[i] = ring_distance(anchor, c.nid)
+                thresholds[i] = _threshold_for(anchor, c.kp.pk, r_target,
+                                               n_nodes)
+            self.dists = dists
+            self.thresholds = thresholds
+            self._sks = [c.kp.sk for c in cands]
+            if arx and prev._words is not None:
+                hit = src >= 0
+                words = np.empty((n, 2), np.uint32)
+                thr_hi = np.empty(n, np.uint64)
+                words[hit] = prev._words[src[hit]]
+                thr_hi[hit] = prev._thr_hi[src[hit]]
+                if miss:
+                    words[miss] = registry.sk_lanes(
+                        [self._sks[i] for i in miss])
+                    for i in miss:
+                        t = thresholds[i]
+                        thr_hi[i] = (t + (1 << ARX_SHIFT) - 1) >> ARX_SHIFT
+                self._words = words
+                self._thr_hi = thr_hi
+                return
+            if not arx:
+                self._words = None
+                return
+        self.dists = [ring_distance(anchor, c.nid) for c in cands]
+        self.thresholds = [_threshold_for(anchor, c.kp.pk, r_target, n_nodes)
+                           for c in cands]
+        self._sks = [c.kp.sk for c in cands]
+        if arx:
+            self._words = registry.sk_lanes(self._sks)
+            self._thr_hi = np.fromiter(
+                ((t + (1 << ARX_SHIFT) - 1) >> ARX_SHIFT
+                 for t in self.thresholds), np.uint64, len(self.thresholds))
+        else:
+            self._words = None
+
+    def responders(self, fragment_hash: int, exclude=()) -> list:
+        """One Locate() slot: ``[(ring_distance, node, proof), ...]`` over
+        the resident candidates, excluding ``exclude`` nids — identical to
+        the :func:`verified_responders` result for the filtered list."""
+        cands = self.candidates
+        cache = self.registry.selection_cache
+        out = []
+        if self._words is not None:
+            alpha = fragment_hash.to_bytes(HASHLEN // 8, "big")
+            r32 = self.registry.eval_value_lanes(self._words, alpha)
+            hits = np.nonzero(r32.astype(np.uint64) < self._thr_hi)[0]
+            keep = [int(i) for i in hits
+                    if cands[int(i)].alive and cands[int(i)].nid not in
+                    exclude]
+            if not keep:
+                return out
+            # proof lanes only for the admitted few (~R of the P rows)
+            p32 = self.registry.eval_proof_lanes(self._words[keep], alpha)
+            for j, i in enumerate(keep):
+                c = cands[i]
+                sp = SelectionProof(
+                    pk=c.kp.pk, r=int(r32[i]) << ARX_SHIFT,
+                    proof=int(p32[j]).to_bytes(4, "little"),
+                    fragment_hash=fragment_hash)
+                self._admit(cache, sp)
+                out.append((self.dists[i], c, sp))
+            return out
+        alpha = fragment_hash.to_bytes(HASHLEN // 8, "big")
+        rs, prfs = self.registry.prove_batch(self._sks,
+                                             [alpha] * len(self._sks))
+        for i, c in enumerate(cands):
+            if rs[i] >= self.thresholds[i]:
+                continue
+            if c.nid in exclude or not c.alive:
+                continue
+            sp = SelectionProof(pk=c.kp.pk, r=rs[i], proof=prfs[i],
+                                fragment_hash=fragment_hash)
+            self._admit(cache, sp)
+            out.append((self.dists[i], c, sp))
+        return out
+
+    def nearest(self, fragment_hash: int, exclude=()):
+        """The default Locate() pick — ``min(responders(...), key=dist)``
+        with the same first-minimum tie-break — returning ``(node,
+        proof)`` or None, but materializing only the winner's proof
+        object (the only one any default-pick caller ever uses)."""
+        cands = self.candidates
+        best_i = -1
+        best_d = None
+        if self._words is not None:
+            alpha = fragment_hash.to_bytes(HASHLEN // 8, "big")
+            r32 = self.registry.eval_value_lanes(self._words, alpha)
+            for i in np.nonzero(r32.astype(np.uint64) < self._thr_hi)[0]:
+                i = int(i)
+                c = cands[i]
+                if c.nid in exclude or not c.alive:
+                    continue
+                d = self.dists[i]
+                if best_d is None or d < best_d:
+                    best_d, best_i = d, i
+            if best_i < 0:
+                return None
+            # proof lane for the single winner only
+            p32w = self.registry.eval_proof_lanes(
+                self._words[best_i:best_i + 1], alpha)
+            sp = SelectionProof(
+                pk=cands[best_i].kp.pk, r=int(r32[best_i]) << ARX_SHIFT,
+                proof=int(p32w[0]).to_bytes(4, "little"),
+                fragment_hash=fragment_hash)
+        else:
+            alpha = fragment_hash.to_bytes(HASHLEN // 8, "big")
+            rs, prfs = self.registry.prove_batch(self._sks,
+                                                 [alpha] * len(self._sks))
+            for i, c in enumerate(cands):
+                if rs[i] >= self.thresholds[i]:
+                    continue
+                if c.nid in exclude or not c.alive:
+                    continue
+                d = self.dists[i]
+                if best_d is None or d < best_d:
+                    best_d, best_i = d, i
+            if best_i < 0:
+                return None
+            sp = SelectionProof(pk=cands[best_i].kp.pk, r=rs[best_i],
+                                proof=prfs[best_i],
+                                fragment_hash=fragment_hash)
+        self._admit(self.registry.selection_cache, sp)
+        return cands[best_i], sp
+
+    def _admit(self, cache: dict, sp: SelectionProof) -> None:
+        """Write the (provably True) verification verdict the scalar path
+        would have memoized for this responder's proof."""
+        sub = cache.get(sp.pk)
+        if sub is None:
+            sub = cache[sp.pk] = {}
+        sub[(sp.fragment_hash, sp.r, sp.proof, self.anchor, self.r_target,
+             self.n_nodes)] = True
+
+
 def verify_selection_batch(
     registry: VRFRegistry, sps: list[SelectionProof], anchors: list[int],
     r_target: int, n_nodes: int,
@@ -170,10 +423,12 @@ def verify_selection_batch(
     """Batched VerifySelection() — element-for-element equal to the scalar
     :func:`verify_selection` (pinned by ``tests/test_vrf_selection.py``).
 
-    Verdicts are memoized in ``registry.selection_cache`` keyed on the full
-    proof tuple (pk, input, r, proof, anchor, population), so persistence
-    claims re-broadcast every heartbeat verify once ever (until ``n_nodes``
-    shifts, which re-keys the distance metric). Cache misses go through
+    Verdicts are memoized in ``registry.selection_cache``, two-level —
+    ``pk -> {(input, r, proof, anchor, r_target, population): verdict}`` —
+    so persistence claims re-broadcast every heartbeat verify once ever
+    (until ``n_nodes`` shifts, which re-keys the distance metric), and the
+    dead-node reaper evicts a failed node's history in O(1) (``VRFRegistry.
+    evict``). Cache misses go through
     ``registry.verify_batch`` in one call — for :class:`~repro.core.vrf.
     ArxVRFRegistry` that is a single vectorized ``prf_select_pairs``
     evaluation per tick. The distance/threshold side runs per element in
@@ -184,12 +439,16 @@ def verify_selection_batch(
     out = np.zeros(n, bool)
     cache = registry.selection_cache
     keys = []
+    subcaches = []
     miss = []
     for i, (sp, anchor) in enumerate(zip(sps, anchors)):
-        k = (sp.pk, sp.fragment_hash, sp.r, sp.proof, anchor, r_target,
-             n_nodes)
+        k = (sp.fragment_hash, sp.r, sp.proof, anchor, r_target, n_nodes)
         keys.append(k)
-        v = cache.get(k)
+        sub = cache.get(sp.pk)
+        if sub is None:
+            sub = cache[sp.pk] = {}
+        subcaches.append(sub)
+        v = sub.get(k)
         if v is None:
             miss.append(i)
         else:
@@ -207,6 +466,6 @@ def verify_selection_batch(
                 sp = sps[i]
                 ok = sp.r < _threshold_for(anchors[i], sp.pk, r_target,
                                            n_nodes)
-            cache[keys[i]] = ok
+            subcaches[i][keys[i]] = ok
             out[i] = ok
     return out

@@ -32,10 +32,10 @@ class OpStats:
 class VaultClient:
     """A participating node issuing client operations (paper §4.3.1).
 
-    ``batch=True`` runs each STORE selection round through the batched
-    VRF APIs (``selection.make_selection_proofs_batch`` /
-    ``verify_selection_batch``) — one vectorized proof round per fragment
-    index instead of a scalar prove/verify per candidate. The placement
+    ``batch=True`` runs each STORE selection round through the net's
+    resident ``selection.LocateRound`` — one vectorized proof round per
+    fragment index over candidate arrays built once per ring state,
+    instead of a scalar prove/verify per candidate. The placement
     (and every byte of network state) is identical: the round picks the
     same nearest verified-selected candidate with the same first-minimum
     tie-break, and no RNG is involved.
@@ -104,14 +104,11 @@ class VaultClient:
             best_d = None
             picked_proof = None
             if self.batch:
-                elig = [c for c in cands
-                        if c.nid not in members and c.alive]
-                responders = sel.verified_responders(
-                    self.net.registry, elig, fhash, anchor, params.r_inner,
-                    self.net.n_nodes)
-                if responders:
-                    best_d, picked, picked_proof = min(
-                        responders, key=lambda t: t[0])
+                found = self.net.locate_round(
+                    anchor, cand_count, params.r_inner).nearest(
+                        fhash, members)
+                if found is not None:
+                    picked, picked_proof = found
             else:
                 for cand in cands:
                     if cand.nid in members or not cand.alive:

@@ -79,14 +79,29 @@ class VRFRegistry:
     def __init__(self) -> None:
         self._tags: dict[bytes, bytes] = {}
         # memo for the *selection* layer (selection.verify_selection_batch):
-        # full VerifySelection verdicts keyed on the whole proof tuple, so a
-        # claim re-verified every heartbeat costs one dict hit instead of
-        # fresh hashing. Lives here because its lifetime is the registry's
-        # ("public keys are known by all nodes" — one per simulated net).
-        self.selection_cache: dict[tuple, bool] = {}
+        # full VerifySelection verdicts, two-level — pk -> {rest of the
+        # proof tuple -> verdict} — so a claim re-verified every heartbeat
+        # costs one dict hit instead of fresh hashing, and :meth:`evict`
+        # drops a dead node's entire verdict history in O(1). Lives here
+        # because its lifetime is the registry's ("public keys are known by
+        # all nodes" — one per simulated net).
+        self.selection_cache: dict[bytes, dict[tuple, bool]] = {}
 
     def register(self, kp: KeyPair) -> None:
         self._tags[kp.pk] = _tag(kp.sk)
+
+    def evict(self, kp: KeyPair) -> None:
+        """Forget a failed node's key material and memoized verdicts.
+
+        Called by ``SimNetwork.fail_node`` (the dead-node reaper): a failed
+        node never proves again, and every verification path in the
+        protocol verifies proofs *owned by currently-alive nodes* (claims,
+        MembershipTimer re-admissions, Locate() responses are all
+        self-made), so dropping the tag and the verdict memo is
+        behavior-neutral — it only bounds registry memory under churn.
+        """
+        self._tags.pop(kp.pk, None)
+        self.selection_cache.pop(kp.pk, None)
 
     def prove(self, sk: bytes, alpha: bytes) -> tuple[int, bytes]:
         """VRF_sk(alpha) -> (r, proof). r uniform in [0, 2^HASHLEN)."""
@@ -160,6 +175,11 @@ class ArxVRFRegistry(VRFRegistry):
         self._words[kp.pk] = w
         self._sk_words[kp.sk] = w
 
+    def evict(self, kp: KeyPair) -> None:
+        super().evict(kp)
+        self._words.pop(kp.pk, None)
+        self._sk_words.pop(kp.sk, None)
+
     @staticmethod
     def _eval(t0: int, t1: int, f0: int, f1: int) -> tuple[int, bytes]:
         from repro.kernels.prf_select import arx_mix_words
@@ -182,6 +202,52 @@ class ArxVRFRegistry(VRFRegistry):
         return r_want == r and hmac.compare_digest(p_want, proof)
 
     # -- vectorized batch paths -------------------------------------------
+    def sk_lanes(self, sks: list[bytes]) -> np.ndarray:
+        """(P, 2) uint32 tag lanes for a list of secret keys — the resident
+        array form a ``selection.LocateRound`` keeps across Locate() slots
+        (derive once per candidate set, evaluate per fragment hash)."""
+        out = np.empty((len(sks), 2), np.uint32)
+        for i, sk in enumerate(sks):
+            w = self._sk_words.get(sk)
+            out[i] = w if w is not None else _arx_words(_tag(sk))
+        return out
+
+    def eval_lanes(self, words: np.ndarray, alpha: bytes):
+        """Evaluate every tag-lane row of ``words`` (P, 2) against ONE VRF
+        input — the Locate() round shape. Returns (r32, proof32) uint32
+        arrays; ``r32[i] << ARX_SHIFT`` and ``proof32[i].to_bytes(4,
+        "little")`` are exactly the scalar :meth:`prove` outputs for the
+        i-th key."""
+        fwords = np.broadcast_to(
+            np.array(_alpha_words(alpha), np.uint32), words.shape)
+        return self._eval_batch(words, fwords)
+
+    def eval_value_lanes(self, words: np.ndarray, alpha: bytes):
+        """Value lanes only — half the PRF work of :meth:`eval_lanes`.
+
+        Selection decisions need every candidate's r32, but proofs are
+        materialized for winners only (``LocateRound.nearest``) or the
+        selected few (``responders``) — callers fetch those separately
+        via :meth:`eval_proof_lanes`. Lane rows are independent, so the
+        split is bit-identical to the fused evaluation."""
+        from repro.kernels.prf_select import prf_select_pairs
+
+        fwords = np.ascontiguousarray(np.broadcast_to(
+            np.array(_alpha_words(alpha), np.uint32), words.shape))
+        out = prf_select_pairs(words.view(np.int32), fwords.view(np.int32))
+        return np.asarray(out).view(np.uint32)
+
+    def eval_proof_lanes(self, words: np.ndarray, alpha: bytes):
+        """Proof lanes for the given tag-lane rows (see eval_value_lanes)."""
+        from repro.kernels.prf_select import prf_select_pairs
+
+        tweak = np.array([_ARX_PROOF_C0, _ARX_PROOF_C1], np.uint32)
+        fwords = np.ascontiguousarray(np.broadcast_to(
+            np.array(_alpha_words(alpha), np.uint32), words.shape))
+        out = prf_select_pairs((words ^ tweak).view(np.int32),
+                               fwords.view(np.int32))
+        return np.asarray(out).view(np.uint32)
+
     def _eval_batch(self, words: np.ndarray, fwords: np.ndarray):
         """(P,2) uint32 tag lanes × (P,2) uint32 input lanes ->
         (r32, proof32) uint32 arrays, via one fused PRF evaluation over the

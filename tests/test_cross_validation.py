@@ -13,7 +13,11 @@ criteria:
   demanding the protocol mean inside it would reject agreeing layers;
 * the cached config's known deltas keep their documented *direction*: the
   engine's per-group cache timestamp ignores cache-holder churn, so the
-  protocol must show ≥ engine traffic and ≤ engine hit counts.
+  protocol must show ≥ engine traffic and ≤ engine hit counts;
+* the eclipse config is CI-gated on every metric except ``lost_objects``,
+  where the engine's clean-bisection approximation is a documented
+  one-sided bound: protocol losses must not exceed the engine's upper
+  band (see ``test_eclipse_loss_one_sided_bound``).
 
 Everything is seeded (engine cells and protocol replicas), so this test is
 deterministic — it either always passes or always fails for a given code
@@ -35,9 +39,6 @@ from benchmarks.cross_validate import (  # noqa: E402
 def rows():
     configs = matched_configs(**QUICK_KW)
     configs.pop("iid_targeted")
-    # the eclipse approximation is a documented one-sided bound, asserted
-    # directionally by tests/test_eclipse.py instead of the CI band here
-    configs.pop("iid_eclipse")
     return compare(configs, proto_seeds=QUICK_PROTO_SEEDS)
 
 
@@ -56,12 +57,28 @@ def test_covers_required_policy_axes(rows):
     assert any("regional" in n for n in names)  # iid + regional churn
     assert any("adaptive" in n for n in names)  # static + adaptive adversary
     assert any("static" in n for n in names)
+    assert any("eclipse" in n for n in names)   # partition window
 
 
 def test_loss_within_engine_ci(rows):
     for name in _configs(rows):
+        if "eclipse" in name:
+            continue  # one-sided bound, tested below — documented leak
         r = _get(rows, name, "lost_objects")
         assert r["within_engine_ci"], r
+
+
+def test_eclipse_loss_one_sided_bound(rows):
+    """The engine models an eclipse as a clean bisection: eclipsed groups
+    lose ALL repair capacity for the window. At protocol level, groups
+    whose members straddle the cut keep partial repair, so the engine's
+    loss count is the conservative (pessimistic) bound — the protocol may
+    lose strictly fewer objects, never more. Gate exactly that direction
+    (documented as an abstraction leak in docs/ARCHITECTURE.md)."""
+    name = next(n for n in _configs(rows) if "eclipse" in n)
+    r = _get(rows, name, "lost_objects")
+    assert (r["protocol_mean"]
+            <= r["engine_mean"] + r["engine_ci95"]), r
 
 
 def test_repairs_within_combined_ci(rows):

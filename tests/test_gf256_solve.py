@@ -1,0 +1,157 @@
+"""Bit-pins for ``kernels/gf256_solve`` against the scalar reference.
+
+``rateless.gf256_gaussian_solve_ref`` (the pre-kernel implementation) is
+the oracle: the batched numpy mirror and the Pallas kernel must reproduce
+its solutions byte-for-byte on full-rank systems, and must flag exactly
+the column at which it raises on rank-deficient ones — the simulator's
+decode results (and therefore the protocol goldens) ride on this.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rateless import (RLNC, InsufficientFragments,
+                                 gf256_gaussian_solve,
+                                 gf256_gaussian_solve_ref)
+from repro.kernels.gf256_solve import gf256_solve_batch, gf256_solve_np
+
+
+def _ref_outcome(a, y, k):
+    """(solution, fail_col) from the scalar reference."""
+    try:
+        return gf256_gaussian_solve_ref(a, y, k), -1
+    except InsufficientFragments as e:
+        return None, int(str(e).rsplit(" ", 1)[-1])
+
+
+def _random_systems(rng, B, m, k, L):
+    a = rng.integers(0, 256, (B, m, k), dtype=np.uint8)
+    y = rng.integers(0, 256, (B, m, L), dtype=np.uint8)
+    return a, y
+
+
+def _check_against_ref(a, y, backend):
+    B, _, k = a.shape
+    x, ok, fail = gf256_solve_batch(a, y, backend=backend)
+    for b in range(B):
+        want, want_fail = _ref_outcome(a[b], y[b], k)
+        if want is None:
+            assert not ok[b], b
+            assert fail[b] == want_fail, (b, fail[b], want_fail)
+        else:
+            assert ok[b] and fail[b] == -1, b
+            np.testing.assert_array_equal(x[b], want, err_msg=str(b))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_random_systems_bit_identical(backend):
+    rng = np.random.default_rng(0)
+    for m, k, L in [(4, 4, 1), (6, 4, 37), (16, 16, 130), (21, 16, 257),
+                    (9, 8, 64)]:
+        a, y = _random_systems(rng, 8, m, k, L)
+        _check_against_ref(a, y, backend)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_permuted_pivot_row_swaps(backend):
+    """Zero diagonals force the pivot search below the diagonal — the
+    row-swap path (masked-select in the kernel) must match the scalar
+    swap exactly."""
+    rng = np.random.default_rng(1)
+    k, L = 8, 33
+    systems_a, systems_y = [], []
+    for perm_seed in range(12):
+        prm = np.random.default_rng(perm_seed).permutation(k + 3)
+        a = rng.integers(0, 256, (k + 3, k), dtype=np.uint8)
+        # zero the diagonal so column j never pivots in place
+        a[np.arange(k), np.arange(k)] = 0
+        systems_a.append(a[prm])
+        systems_y.append(rng.integers(0, 256, (k + 3, L), dtype=np.uint8))
+    _check_against_ref(np.stack(systems_a), np.stack(systems_y), backend)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_singular_systems_flag_reference_column(backend):
+    rng = np.random.default_rng(2)
+    k, L = 6, 16
+    mats, syms = [], []
+    # zero column 3 -> fails at column 3
+    a = rng.integers(0, 256, (k + 1, k), dtype=np.uint8)
+    a[:, 3] = 0
+    mats.append(a)
+    # duplicate rows with m == k -> rank k-1 (column of first divergence
+    # is whatever the reference reports; we only require agreement)
+    a = rng.integers(0, 256, (k, k), dtype=np.uint8)
+    a[k - 1] = a[0]
+    mats.append(a)
+    # all-zero matrix -> fails at column 0
+    mats.append(np.zeros((k, k), np.uint8))
+    # linear combination: row2 = row0 ^ row1 (GF(2) subset of GF(256))
+    a = rng.integers(0, 256, (k, k), dtype=np.uint8)
+    a[2] = a[0] ^ a[1]
+    mats.append(a)
+    for a in mats:
+        syms.append(rng.integers(0, 256, (a.shape[0], L), dtype=np.uint8))
+    m = max(a.shape[0] for a in mats)
+    batch_a = np.zeros((len(mats), m, k), np.uint8)
+    batch_y = np.zeros((len(mats), m, L), np.uint8)
+    for i, (a, y) in enumerate(zip(mats, syms)):
+        batch_a[i, :a.shape[0]] = a
+        batch_y[i, :a.shape[0]] = y
+    _check_against_ref(batch_a, batch_y, backend)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_square_random_matches_ref_including_rank_deficient(backend):
+    """m == k random batches: ~1/255-ish of systems are singular; the
+    batch must agree with the reference on every element either way."""
+    rng = np.random.default_rng(3)
+    k, L = 4, 8  # small k raises the singular fraction enough to hit some
+    a, y = _random_systems(rng, 300, k, k, L)
+    x, ok, fail = gf256_solve_batch(a, y, backend=backend)
+    n_singular = 0
+    for b in range(a.shape[0]):
+        want, want_fail = _ref_outcome(a[b], y[b], k)
+        if want is None:
+            n_singular += 1
+            assert not ok[b] and fail[b] == want_fail
+        else:
+            assert ok[b]
+            np.testing.assert_array_equal(x[b], want)
+    assert n_singular >= 1  # the sweep actually exercised the fail path
+
+
+def test_rlnc_decode_round_trip_unchanged():
+    """End-to-end: RLNC.decode (now through the dispatcher) still inverts
+    encode, and the raised message on insufficient rank is unchanged."""
+    rng = np.random.default_rng(4)
+    code = RLNC(k=6, seed=b"solve-pin")
+    blocks = rng.integers(0, 256, (6, 97), dtype=np.uint8)
+    idx = [2, 5, 7, 11, 12, 19]
+    out = code.decode(idx, code.encode(blocks, idx))
+    np.testing.assert_array_equal(out, blocks)
+    with pytest.raises(InsufficientFragments, match="need >= 6 symbols"):
+        code.decode(idx[:4], code.encode(blocks, idx[:4]))
+
+
+def test_scalar_delegate_message_is_exact():
+    a = np.zeros((5, 5), np.uint8)
+    a[np.arange(4), np.arange(4)] = 1  # rank 4: fails at column 4
+    y = np.ones((5, 9), np.uint8)
+    with pytest.raises(InsufficientFragments,
+                       match=r"rank-deficient at column 4$"):
+        gf256_gaussian_solve(a, y, 5)
+    with pytest.raises(InsufficientFragments,
+                       match=r"rank-deficient at column 4$"):
+        gf256_gaussian_solve_ref(a, y, 5)
+
+
+def test_kernel_and_numpy_backends_agree_on_large_batch():
+    """Above SOLVE_KERNEL_MIN the auto dispatcher takes the kernel path;
+    force both and compare whole batches directly."""
+    rng = np.random.default_rng(5)
+    a, y = _random_systems(rng, 24, 18, 16, 192)
+    xn, okn, fn = gf256_solve_batch(a, y, backend="numpy")
+    xk, okk, fk = gf256_solve_batch(a, y, backend="kernel")
+    np.testing.assert_array_equal(okn, okk)
+    np.testing.assert_array_equal(fn, fk)
+    np.testing.assert_array_equal(xn[okn], xk[okk])

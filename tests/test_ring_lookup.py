@@ -1,0 +1,121 @@
+"""Regression tests for ``SimNetwork.candidates()`` — the DHT ring walk.
+
+The seed implementation walked the ring with ``lo``/``hi`` pointers that
+could both visit the same node after wrap-around; the trailing
+``dict.fromkeys(out)[:count]`` dedup then returned *fewer* than ``count``
+nodes even though enough reachable nodes existed, so Locate()/repair could
+falsely conclude no eligible node exists in small or heavily-partitioned
+networks. The walk now terminates when the pointers meet (each ring slot
+is visited exactly once), so a short result always means the ring really
+has fewer than ``count`` reachable nodes.
+"""
+import random
+
+from repro.core import chunks as C
+from repro.core import repair as R
+from repro.core.network import SimNetwork
+from repro.core.vrf import RING
+
+
+def _net(n: int, seed: int = 0) -> SimNetwork:
+    net = SimNetwork(seed=seed)
+    for i in range(n):
+        net.add_node(seed=(seed * 1000 + i).to_bytes(8, "little"))
+    return net
+
+
+def test_full_ring_walk_returns_every_node():
+    """count == n_alive must return the whole ring — no under-fill, no
+    duplicates — from any start point, including exact node ids."""
+    rnd = random.Random(7)
+    for n in (1, 2, 3, 5, 8, 40):
+        net = _net(n, seed=n)
+        points = [rnd.randrange(RING) for _ in range(50)]
+        points += list(net._ring)                      # exact hits
+        points += [(nid + 1) % RING for nid in net._ring]  # just past
+        for p in points:
+            got = net.candidates(p, n)
+            nids = [nd.nid for nd in got]
+            assert len(nids) == n, (n, p, len(nids))
+            assert len(set(nids)) == n  # every node exactly once
+            assert set(nids) == set(net._ring)
+
+
+def test_count_near_n_alive_never_underfills():
+    rnd = random.Random(11)
+    for n in (3, 7, 29):
+        net = _net(n, seed=100 + n)
+        for count in (n - 1, n, n + 5):
+            for _ in range(40):
+                got = net.candidates(rnd.randrange(RING), count)
+                assert len(got) == min(count, n)
+                assert len({nd.nid for nd in got}) == len(got)
+
+
+def test_eclipse_cut_returns_exactly_the_reachable_set():
+    """Under a partition cut the walk must return every *reachable* node
+    when count >= their number — a heavily-partitioned network must not
+    look empty to Locate()."""
+    rnd = random.Random(13)
+    for n in (4, 9, 33):
+        net = _net(n, seed=200 + n)
+        # cut one third of the ring (wrapping variant exercised via offset)
+        for lo_off in (0, RING // 2, RING - RING // 6):
+            lo = lo_off
+            hi = (lo + RING // 3) % RING
+            net.eclipse = (lo, hi)
+            reachable = {nid for nid in net._ring
+                         if not net.is_eclipsed(nid)}
+            for _ in range(25):
+                got = net.candidates(rnd.randrange(RING), n)
+                nids = [nd.nid for nd in got]
+                assert len(nids) == len(reachable), (n, lo_off)
+                assert set(nids) == reachable
+                # and a near-exact count still fills from the survivors
+                k = max(1, len(reachable) - 1)
+                assert len(net.candidates(rnd.randrange(RING), k)) == k
+        net.eclipse = None
+
+
+def test_locate_finds_last_eligible_node_under_partition():
+    """End-to-end regression: with every node but one excluded (and a cut
+    hiding a third of the ring), Locate() must still find the survivor
+    rather than concluding the candidate set is exhausted."""
+    net = _net(24, seed=42)
+    chash = C.chunk_hash(b"ring-lookup-regression")
+    anchor = C.hash_point(chash)
+    r_target = 4 * len(net._ring)
+    net.eclipse = (anchor % RING, (anchor + RING // 3) % RING)
+    reachable = [nid for nid in net._ring if not net.is_eclipsed(nid)]
+    assert len(reachable) >= 2
+    for batch in (False, True):
+        for keep in (reachable[0], reachable[-1]):
+            exclude = set(net._ring) - {keep}
+            # pick a stream index whose VRF coin selects the survivor —
+            # then a miss can only mean the ring walk never reached them
+            node = net.nodes[keep]
+            fhash = next(
+                C.fragment_hash(chash, i) for i in range(64)
+                if node.selection_proof(C.fragment_hash(chash, i), anchor,
+                                        r_target)[1])
+            found = R._locate_new_member(net, chash, fhash, r_target,
+                                         exclude=exclude, batch=batch)
+            assert found is not None, (batch, keep)
+            assert found[0].nid == keep
+    net.eclipse = None
+
+
+def test_walk_matches_bruteforce_distance_order_prefix():
+    """The walk returns nodes in non-decreasing ring distance from the
+    query point (the nearest-on-ring lookup contract Locate() relies on)."""
+    from repro.core import selection as sel
+
+    rnd = random.Random(3)
+    net = _net(17, seed=17)
+    for _ in range(100):
+        p = rnd.randrange(RING)
+        got = [nd.nid for nd in net.candidates(p, 17)]
+        dists = [sel.ring_distance(p, nid) for nid in got]
+        assert dists == sorted(dists)
+        brute = sorted(net._ring, key=lambda nid: sel.ring_distance(p, nid))
+        assert set(got) == set(brute)
