@@ -1,9 +1,9 @@
 """Protocol-simulator tick-throughput study: PR 3 scalar path vs the
 batched/vectorized engine, at 1K+ nodes.
 
-For a paper-shaped deployment (R=64 groups on 1K nodes, plus a 10K-node
-vectorized leg — 6 probe ticks at quick scale, the full probe at
-``BENCH_SCALE=full``) this times, per engine × VRF backend:
+For a paper-shaped deployment (R=64 groups on 1K nodes, plus 10K- and
+100K-node vectorized legs — 6 probe ticks each at quick scale, the full
+probe at ``BENCH_SCALE=full``) this times, per engine × VRF backend:
 
 * **setup** — object stores through the VRF placement path (once), and
 * **steady-state tick cost** — the median of the per-tick wall times
@@ -56,6 +56,27 @@ WARMUP_TICKS = 3  # early ticks are cheaper (views not yet churned)
 # exists in the tree — so it is recorded here as provenance, and the
 # speedup_vs_naive field it feeds is informational, not gated.
 NAIVE_10K_MONTH_TICK_MS = 1721.5
+
+# Cross-group batching provenance: the per-group tick (commit 66c03bc —
+# batched Locate() rounds and the kernelized GF(256) solve, but python
+# loops over the 600 groups for claims, repair solves and membership
+# timers) vs the one-dispatch-per-phase engine, each run as a full
+# 60-tick 10K-node simulated month (n_objects=120, vrf="arx"),
+# interleaved back-to-back on the same idle single-core host within
+# minutes. Median steady-state tick (diffs after a 2-tick warm-up).
+# Recorded here as provenance — the per-group path no longer exists in
+# the tree — while CI gates the live scale_10k / scale_100k points
+# below. The honest split: the steady-state tick median moves only ~4%
+# because ~3/4 of a churned tick is per-repair protocol work (Locate +
+# fragment pulls + rateless decode), already batched per repair since
+# PR 5-6; the cross-group dispatch instead compresses the solve-heavy
+# phases — the same month's full wall clock drops 98.2 s -> 73.9 s
+# (1.33x), and the claims/timer phase cost scales with groups, not
+# nodes, which is what unlocks the 100K-node probe point.
+PER_GROUP_10K_MONTH_TICK_MS = 893.3
+BATCHED_10K_MONTH_TICK_MS = 855.0
+PER_GROUP_10K_MONTH_WALL_S = 98.2
+BATCHED_10K_MONTH_WALL_S = 73.9
 
 
 def _base_params(n_nodes: int) -> PS.ProtocolParams:
@@ -140,6 +161,19 @@ def run():
     r10 = _tick_cost(p10, "vectorized",
                      ticks=TICKS if SCALE == "full" else 6)
     rows.append(r10)
+    # 100K-node probe leg (vectorized/arx only). Methodology: n_objects is
+    # pinned to 120 — the same 600-group universe as the 10K leg — so the
+    # tick cost isolates *population* scaling (Locate() candidate sets,
+    # block-drawn churn, claims-slab row tables all grow with n_nodes
+    # while the per-tick group work stays fixed). A handful of probe
+    # ticks, same median-after-warm-up estimator as every other leg: the
+    # one-dispatch-per-phase tick keeps this inside the CI bench budget
+    # (~35 s setup + ~1.5 s/tick on the reference host).
+    p100 = dataclasses.replace(_base_params(100_000), n_objects=120,
+                               vrf="arx")
+    r100 = _tick_cost(p100, "vectorized",
+                      ticks=TICKS if SCALE == "full" else 6)
+    rows.append(r100)
     emit("protocol_speed", rows)
 
     ref = next(r for r in rows if r["engine"] == "reference")
@@ -172,6 +206,24 @@ def run():
                 "speedup_vs_naive": round(
                     NAIVE_10K_MONTH_TICK_MS / r10["tick_ms"], 1),
             },
+            # leaf names match the gated 1K metrics, so the regression
+            # gate picks the 100K point up automatically
+            "scale_100k": {
+                "tick_ms_vectorized_arx": r100["tick_ms"],
+                "node_ticks_per_s": r100["node_ticks_per_s"],
+            },
+            # interleaved back-to-back month measurement (see the
+            # PER_GROUP_/BATCHED_ constants above for methodology)
+            "month_10k": {
+                "per_group_tick_ms": PER_GROUP_10K_MONTH_TICK_MS,
+                "batched_tick_ms": BATCHED_10K_MONTH_TICK_MS,
+                "speedup": round(PER_GROUP_10K_MONTH_TICK_MS
+                                 / BATCHED_10K_MONTH_TICK_MS, 2),
+                "per_group_wall_s": PER_GROUP_10K_MONTH_WALL_S,
+                "batched_wall_s": BATCHED_10K_MONTH_WALL_S,
+                "wall_speedup": round(PER_GROUP_10K_MONTH_WALL_S
+                                      / BATCHED_10K_MONTH_WALL_S, 2),
+            },
         },
         "rows": rows,
     }
@@ -184,7 +236,8 @@ def run():
           f"{h['speedup_hash']}x / {h['speedup_arx']}x at {n} nodes; "
           f"1-month eclipse run {h['eclipse_month_s']}s; "
           f"10K nodes {h['scale_10k']['tick_ms_vectorized_arx']}ms/tick "
-          f"({h['scale_10k']['speedup_vs_naive']}x vs pre-rework)")
+          f"({h['scale_10k']['speedup_vs_naive']}x vs pre-rework); "
+          f"100K nodes {h['scale_100k']['tick_ms_vectorized_arx']}ms/tick")
     return rows
 
 

@@ -12,6 +12,10 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=${XLA_DEVICES:-1}${XLA_
 # Persistent XLA compilation cache: repeat runs skip the ~9 s engine jit
 # compiles (only compiles above jax's 1 s min-compile-time threshold are
 # stored). Point JAX_COMPILATION_CACHE_DIR elsewhere to relocate it.
-export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$HOME/.cache/repro-jax-cache}"
+# The directory is keyed by the virtual device count: the cache key does
+# NOT cover xla_force_host_platform_device_count, and replaying an entry
+# compiled under a different host topology returns corrupted outputs
+# (uninitialized buffers — bitten by the 8-device CI leg).
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$HOME/.cache/repro-jax-cache-d${XLA_DEVICES:-1}}"
 
 exec python -m pytest -x -q "$@"

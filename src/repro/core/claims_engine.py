@@ -28,6 +28,17 @@ dicts only where the round actually changes something:
   ``selection.verify_selection_batch`` — one memoized batch VRF pass, a
   single vectorized ``kernels/prf_select`` dispatch on the ARX registry —
   and reused until the group is touched or the population count changes.
+* **Cross-group batching**: every per-group table is a numpy *view* into a
+  padded engine-level slab (:class:`_Pool` — ``P3`` is ``(n_groups, Vcap,
+  Ccap)`` etc., pad presence False, pad row indices −1), so the whole
+  round's dense algebra — liveness/eclipse gathers, the claim-delivery
+  matrix identity, suspect screening, non-refresh detection, the bulk
+  timestamp write, and the repair pre-check counts — runs as ONE dispatch
+  over all groups instead of ~``n_groups`` small per-group evaluations.
+  The pad invariants make the batch bit-identical to per-group math: a
+  pad viewer can never be alive (row −1) and a pad member can never be
+  present, so every pad lane is all-False through the whole identity.
+  Only the rare event rows drop back to exact-order Python.
 
 Groups mutated outside the round (repairs, timer merges) are marked dirty
 via :meth:`touch` and re-ingested from their dicts at the next round; until
@@ -62,18 +73,60 @@ def _tril(n: int) -> np.ndarray:
     return t
 
 
-class _GState:
-    """Resident claim-round state of one chunk group."""
+def _cap(n: int) -> int:
+    """Slab capacity for a requested length: ~25% headroom, 8-aligned."""
+    return max(8, -(-(n + (n >> 2)) // 8) * 8)
 
-    __slots__ = ("chash", "anchor", "r_target", "vnids", "vrows", "vpos",
-                 "views", "colnids", "colpos", "colrows", "vcol", "P",
-                 "claim_ok", "bulk_ts", "stale_ts", "nn", "tril", "counts",
+
+class _Pool:
+    """Padded per-group slabs, one leading group axis per table.
+
+    ``P3[gi, :vlen[gi], :clen[gi]]`` is group ``gi``'s presence matrix;
+    the other tables follow the same prefix convention. Slab space beyond
+    a group's prefix keeps the pad invariants — presence/claim False, row
+    indices −1 — so batched expressions over the full slabs are exact.
+    """
+
+    __slots__ = ("n", "vcap", "ccap", "P3", "claim3", "bulk3", "vrows3",
+                 "colrows3", "vlen", "clen", "tracked3")
+
+    def __init__(self, n: int, vcap: int, ccap: int):
+        self.n = n
+        self.vcap = vcap
+        self.ccap = ccap
+        self.P3 = np.zeros((n, vcap, ccap), bool)
+        self.claim3 = np.zeros((n, vcap), bool)
+        self.bulk3 = np.full((n, vcap), _NEG_INF)
+        self.vrows3 = np.full((n, vcap), -1, np.int64)
+        self.colrows3 = np.full((n, ccap), -1, np.int64)
+        self.vlen = np.zeros(n, np.int64)
+        self.clen = np.zeros(n, np.int64)
+        # tracked3[gi, j, c] set => colnids[c] is already a stale_ts[j]
+        # exception of group gi, so the virtual-timestamp walk may skip the
+        # triple (it would find the entry present and write nothing).
+        # Cleared whenever entries can be popped or rows rebuilt:
+        # _apply_events event rows, _clear_slab.
+        self.tracked3 = np.zeros((n, vcap, ccap), bool)
+
+
+class _GState:
+    """Resident claim-round state of one chunk group.
+
+    The array attributes (``P``, ``claim_ok``, ``bulk_ts``, ``vrows``,
+    ``colrows``) are views into the engine's :class:`_Pool` slabs —
+    writes through them land in the batched tensors and vice versa.
+    """
+
+    __slots__ = ("chash", "anchor", "r_target", "gi", "vnids", "vrows",
+                 "vpos", "views", "colnids", "colpos", "colrows", "P",
+                 "claim_ok", "bulk_ts", "stale_ts", "nn", "counts",
                  "rows_v", "mlen", "st_rows")
 
-    def __init__(self, chash: bytes):
+    def __init__(self, chash: bytes, gi: int):
         self.chash = chash
         self.anchor = C.hash_point(chash)
         self.r_target = 0
+        self.gi = gi                   # slab index in the engine pool
         self.vnids: list[int] = []     # viewer nids, ascending (turn order)
         self.vrows: np.ndarray | None = None
         self.vpos: dict[int, int] = {}
@@ -81,14 +134,12 @@ class _GState:
         self.colnids: list[int] = []   # member-universe nids
         self.colpos: dict[int, int] = {}
         self.colrows: np.ndarray | None = None
-        self.vcol: np.ndarray | None = None   # viewer idx -> col idx
-        self.P: np.ndarray | None = None      # [V, C] presence
+        self.P: np.ndarray | None = None      # [V, C] presence (view)
         self.claim_ok: np.ndarray | None = None
         self.bulk_ts: np.ndarray | None = None
         self.stale_ts: list[dict[int, float]] = []
         self.st_rows: set[int] = set()  # viewer rows with stale exceptions
         self.nn = -1                   # population count claim_ok was keyed on
-        self.tril: np.ndarray | None = None
         self.counts: np.ndarray | None = None
         self.rows_v = -1               # net.rows_version the row arrays match
         self.mlen: list[int] = []      # len(view.members) at last table sync
@@ -102,6 +153,52 @@ class ClaimsEngine:
         self.groups: dict[bytes, _GState] = {}
         self.dirty: set[bytes] = set()
         self._started = False
+        self._pool: _Pool | None = None
+        self._by_gi: list[_GState] = []
+
+    # -------------------------------------------------------------- slabs
+    def _rebind(self, g: _GState) -> None:
+        """Re-derive ``g``'s array views from its pool slab prefix."""
+        pool = self._pool
+        gi = g.gi
+        V, Cn = int(pool.vlen[gi]), int(pool.clen[gi])
+        g.P = pool.P3[gi, :V, :Cn]
+        g.claim_ok = pool.claim3[gi, :V]
+        g.bulk_ts = pool.bulk3[gi, :V]
+        g.vrows = pool.vrows3[gi, :V]
+        g.colrows = pool.colrows3[gi, :Cn]
+
+    def _ensure_capacity(self, V: int, Cn: int) -> None:
+        """Grow the pool slabs (copy + rebind every group) when a group
+        outgrows them. Headroom in :func:`_cap` keeps this rare; the copy
+        is a few MB of bools at protocol scale."""
+        pool = self._pool
+        if V <= pool.vcap and Cn <= pool.ccap:
+            return
+        vcap = pool.vcap if V <= pool.vcap else _cap(V)
+        ccap = pool.ccap if Cn <= pool.ccap else _cap(Cn)
+        new = _Pool(pool.n, vcap, ccap)
+        new.P3[:, :pool.vcap, :pool.ccap] = pool.P3
+        new.claim3[:, :pool.vcap] = pool.claim3
+        new.bulk3[:, :pool.vcap] = pool.bulk3
+        new.vrows3[:, :pool.vcap] = pool.vrows3
+        new.colrows3[:, :pool.ccap] = pool.colrows3
+        new.vlen[:] = pool.vlen
+        new.clen[:] = pool.clen
+        new.tracked3[:, :pool.vcap, :pool.ccap] = pool.tracked3
+        self._pool = new
+        for g in self.groups.values():
+            self._rebind(g)
+
+    def _clear_slab(self, gi: int) -> None:
+        """Reset one group's slab to the pad invariants."""
+        pool = self._pool
+        pool.P3[gi] = False
+        pool.claim3[gi] = False
+        pool.bulk3[gi] = _NEG_INF
+        pool.vrows3[gi] = -1
+        pool.colrows3[gi] = -1
+        pool.tracked3[gi] = False
 
     # -------------------------------------------------------------- ingest
     def touch(self, chash: bytes) -> None:
@@ -117,10 +214,13 @@ class ClaimsEngine:
         for node in nodes:
             for chash in node.groups:
                 seeds.setdefault(chash, []).append(node.nid)
-        for chash, nids in seeds.items():
-            g = _GState(chash)
+        self._pool = _Pool(len(seeds), 8, 8)
+        for chash in seeds:
+            g = _GState(chash, len(self._by_gi))
             self.groups[chash] = g
-            self._ingest(g, seed=nids)
+            self._by_gi.append(g)
+        for chash, nids in seeds.items():
+            self._ingest(self.groups[chash], seed=nids)
 
     def _ingest(self, g: _GState, seed: list[int] | None = None) -> None:
         """(Re)build a group's tables from the live view dicts.
@@ -165,8 +265,6 @@ class ClaimsEngine:
         g.vnids = vn
         g.vpos = {nid: j for j, nid in enumerate(vn)}
         g.views = [net.nodes[nid].groups[g.chash] for nid in vn]
-        g.vrows = np.fromiter((net.row_of[nid] for nid in vn), np.int64,
-                              len(vn))
         g.rows_v = net.rows_version
         g.r_target = g.views[0].meta.r_target if g.views else 0
         # member universe: every viewer plus every member nid
@@ -180,19 +278,24 @@ class ClaimsEngine:
         g.colnids = cols
         g.colpos = colpos
         row_of = net.row_of
-        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in cols),
-                                np.int64, len(cols))
-        g.vcol = np.arange(len(vn), dtype=np.int64)  # viewers lead the cols
         V, Cn = len(vn), len(cols)
-        g.P = np.zeros((V, Cn), bool)
+        self._ensure_capacity(V, Cn)
+        pool = self._pool
+        self._clear_slab(g.gi)
+        pool.vlen[g.gi] = V
+        pool.clen[g.gi] = Cn
+        self._rebind(g)
+        g.vrows[...] = np.fromiter((row_of[nid] for nid in vn), np.int64, V)
+        g.colrows[...] = np.fromiter((row_of.get(nid, -1) for nid in cols),
+                                     np.int64, Cn)
         for j, view in enumerate(g.views):
+            row = g.P[j]
             for nid in view.members:
-                g.P[j, colpos[nid]] = True
-        g.bulk_ts = np.fromiter((old_bulk.get(nid, _NEG_INF) for nid in vn),
-                                np.float64, V)
+                row[colpos[nid]] = True
+        g.bulk_ts[...] = np.fromiter(
+            (old_bulk.get(nid, _NEG_INF) for nid in vn), np.float64, V)
         g.stale_ts = [old_stale.get(nid) or {} for nid in vn]
         g.st_rows = {j for j, st in enumerate(g.stale_ts) if st}
-        g.tril = _tril(V)
         g.counts = None
         g.mlen = [len(v.members) for v in g.views]
         self._verify_claims(g)
@@ -283,21 +386,24 @@ class ClaimsEngine:
         if not promote:
             # light path: new bits (and maybe new member-only columns) only
             if new_cols:
+                C0 = len(g.colnids)
+                self._ensure_capacity(V, C0 + len(new_cols))
+                pool = self._pool
+                row_of = net.row_of
+                pool.colrows3[g.gi, C0:C0 + len(new_cols)] = np.fromiter(
+                    (row_of.get(nid, -1) for nid in new_cols), np.int64,
+                    len(new_cols))
+                pool.clen[g.gi] = C0 + len(new_cols)
                 for nid in new_cols:
                     colpos[nid] = len(g.colnids)
                     g.colnids.append(nid)
-                row_of = net.row_of
-                g.colrows = np.concatenate([
-                    g.colrows,
-                    np.fromiter((row_of.get(nid, -1) for nid in new_cols),
-                                np.int64, len(new_cols))])
-                g.P = np.concatenate(
-                    [g.P, np.zeros((V, len(new_cols)), bool)], axis=1)
+                self._rebind(g)  # widen the P/colrows views
             for j in grown:
                 view = g.views[j]
+                row = g.P[j]
                 # old members' bits are already set — tail only
                 for nid in islice(reversed(view.members), n_new[j]):
-                    g.P[j, colpos[nid]] = True
+                    row[colpos[nid]] = True
                 g.mlen[j] = len(view.members)
             g.counts = None
             return True
@@ -345,24 +451,28 @@ class ClaimsEngine:
         g.vnids = vn_new
         g.vpos = vpos2
         g.views = views2
-        g.vrows = np.fromiter((row_of.get(nid, -1) for nid in vn_new),
-                              np.int64, V2)
         g.rows_v = net.rows_version
         g.colnids = cols2
         g.colpos = colpos2
-        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in cols2),
-                                np.int64, len(cols2))
-        g.vcol = np.arange(V2, dtype=np.int64)
-        g.P = P2
-        g.claim_ok = claim2
-        g.bulk_ts = bulk2
+        self._ensure_capacity(V2, len(cols2))
+        pool = self._pool
+        self._clear_slab(g.gi)
+        pool.vlen[g.gi] = V2
+        pool.clen[g.gi] = len(cols2)
+        self._rebind(g)
+        g.P[...] = P2
+        g.claim_ok[...] = claim2
+        g.bulk_ts[...] = bulk2
+        g.vrows[...] = np.fromiter((row_of.get(nid, -1) for nid in vn_new),
+                                   np.int64, V2)
+        g.colrows[...] = np.fromiter((row_of.get(nid, -1) for nid in cols2),
+                                     np.int64, len(cols2))
         g.stale_ts = stale2
         g.st_rows = {j for j, st in enumerate(stale2) if st}
-        g.tril = _tril(V2)
         n_new_nid = {grown_nids[i]: n_new[j] for i, j in enumerate(grown)}
         for nid in set(grown_nids) | set(promote):
             j2 = vpos2[nid]
-            row = P2[j2]
+            row = g.P[j2]
             mem = views2[j2].members
             # promoted rows start all-zero and need the full view; grown
             # rows carried their old bits through the permutation — tail
@@ -385,10 +495,11 @@ class ClaimsEngine:
         gave for dead nodes.
         """
         row_of = self.net.row_of
-        g.vrows = np.fromiter((row_of.get(nid, -1) for nid in g.vnids),
-                              np.int64, len(g.vnids))
-        g.colrows = np.fromiter((row_of.get(nid, -1) for nid in g.colnids),
-                                np.int64, len(g.colnids))
+        g.vrows[...] = np.fromiter((row_of.get(nid, -1) for nid in g.vnids),
+                                   np.int64, len(g.vnids))
+        g.colrows[...] = np.fromiter(
+            (row_of.get(nid, -1) for nid in g.colnids), np.int64,
+            len(g.colnids))
         g.rows_v = self.net.rows_version
 
     def _verify_claims(self, g: _GState) -> None:
@@ -407,7 +518,7 @@ class ClaimsEngine:
                     g.chash, {}).values():
                 proofs.append(proof)
                 owners.append(j)
-        g.claim_ok = np.zeros(len(g.vnids), bool)
+        g.claim_ok[...] = False
         if proofs:
             ok = sel.verify_selection_batch(
                 net.registry, proofs, [g.anchor] * len(proofs), g.r_target,
@@ -428,9 +539,16 @@ class ClaimsEngine:
         receiver R earlier than sender S, S's view may already contain R's
         own refresh, so ``A(S→R) = ok(S→R) ∧ (R ∈ M0(S) ∨ A0(R→S))``;
         for a later receiver ``A(S→R) = ok(S→R) ∧ R ∈ M0(S)`` — one
-        boolean matrix identity per group. Membership edits and prune
+        boolean matrix identity per group, evaluated for ALL groups in a
+        single dispatch over the pool slabs. Membership edits and prune
         decisions are applied to the real dicts in exact turn order;
         timestamps refresh virtually (``bulk_ts`` + exceptions).
+
+        Batching across groups is exact because round turns only ever
+        touch the turning group's own state: views are keyed by chash, so
+        one group's event application can neither observe nor perturb
+        another group's algebra — phase order (all gathers, all events,
+        all non-refresh tracking, one bulk write) equals group order.
         """
         net = self.net
         now = net.now
@@ -442,49 +560,80 @@ class ClaimsEngine:
             if g is not None and not self._patch(g):
                 self._ingest(g)
         self.dirty.clear()
+        pool = self._pool
+        if pool is None or pool.n == 0:
+            return
+        groups = self._by_gi
+        nn = net.n_nodes
+        rv = net.rows_version
+        for g in groups:
+            if not g.vnids:
+                continue
+            if g.nn != nn:
+                self._verify_claims(g)  # population shift re-keys Alg. 2
+            if g.rows_v != rv:
+                self._refresh_rows(g)
         alive_rows = net.alive_rows
-        eclipse_on = net.eclipse is not None
-        for g in self.groups.values():
+        # --- one batched liveness gather + dead-viewer compaction screen
+        vr = pool.vrows3
+        valid = vr >= 0
+        va3 = valid & alive_rows[np.where(valid, vr, 0)]
+        dead = pool.vlen - va3.sum(axis=1)
+        need = np.nonzero(dead > np.maximum(8, pool.vlen // 8))[0]
+        if need.size:
+            # enough viewers died since the last ingest: compact those
+            # groups' tables (amortized O(1) per death; keeps V ~ alive)
+            for gi in need.tolist():
+                self._ingest(groups[gi])
+            pool = self._pool  # _ingest may have grown the slabs
+            vr = pool.vrows3
+            valid = vr >= 0
+            va3 = valid & alive_rows[np.where(valid, vr, 0)]
+        if net.eclipse is not None:
+            recv3 = va3 & ~(valid & net.eclipsed_rows[
+                np.where(valid, vr, 0)])
+        else:
+            recv3 = va3
+        # --- the claim-delivery identity, all groups at once
+        vcap = pool.vcap
+        send3 = pool.claim3 & recv3
+        m03 = pool.P3[:, :, :vcap]  # viewer-viewer block (viewers lead)
+        okm3 = send3[:, :, None] & recv3[:, None, :]
+        d = np.arange(vcap)
+        okm3[:, d, d] = False
+        a03 = okm3 & m03
+        a3 = okm3 & (m03 | (_tril(vcap)[None] & a03.transpose(0, 2, 1)))
+        # --- rare membership events -----------------------------------
+        # a view needs a prune pass when it tracks a timestamp
+        # exception OR its bulk refresh is itself near the timeout
+        # (first round; a viewer returning from an eclipse window) —
+        # then every member must be checked, like the reference does.
+        # Insertion = the SENDER is new to the RECEIVER's view:
+        # m0[j, s] is "s ∈ view(j)", so the test for edge (s, r) is
+        # ~m0[r, s] — the transpose, not ~m0[s, r].
+        ig, isx, irx = np.nonzero(a3 & ~m03.transpose(0, 2, 1))
+        ins_by_g: dict[int, tuple[list[int], list[int]]] = {}
+        for gi, s, r in zip(ig.tolist(), isx.tolist(), irx.tolist()):
+            pair = ins_by_g.get(gi)
+            if pair is None:
+                pair = ins_by_g[gi] = ([], [])
+            pair[0].append(s)
+            pair[1].append(r)
+        suspect3 = recv3 & (now - pool.bulk3 > timeout_s)
+        sus_set = set(np.nonzero(suspect3.any(axis=1))[0].tolist())
+        for g in groups:
             V = len(g.vnids)
             if V == 0:
                 continue
-            if g.nn != net.n_nodes:
-                self._verify_claims(g)  # population shift re-keys Alg. 2
-            if g.rows_v != net.rows_version:
-                self._refresh_rows(g)
-            vr = g.vrows
-            va = (vr >= 0) & alive_rows[np.where(vr >= 0, vr, 0)]
-            if V - int(va.sum()) > max(8, V // 8):
-                # enough viewers died since the last ingest: compact the
-                # tables (amortized O(1) per death; keeps V ~ alive set)
-                self._ingest(g)
-                V = len(g.vnids)
-                if V == 0:
-                    continue
-                va = alive_rows[g.vrows]
-            if eclipse_on:
-                ecl = np.fromiter((net.is_eclipsed(nid) for nid in g.vnids),
-                                  bool, V)
-                recv = va & ~ecl
-            else:
-                recv = va
-            send = g.claim_ok & recv
-            m0 = g.P[:, :V]  # viewer-viewer presence (viewers lead cols)
-            okm = send[:, None] & recv[None, :]
-            np.fill_diagonal(okm, False)
-            a0 = okm & m0
-            a = okm & (m0 | (g.tril & a0.T))
-            # --- rare membership events -------------------------------
-            # a view needs a prune pass when it tracks a timestamp
-            # exception OR its bulk refresh is itself near the timeout
-            # (first round; a viewer returning from an eclipse window) —
-            # then every member must be checked, like the reference does.
-            # Insertion = the SENDER is new to the RECEIVER's view:
-            # m0[j, s] is "s ∈ view(j)", so the test for edge (s, r) is
-            # ~m0[r, s] — the transpose, not ~m0[s, r].
-            ins_s, ins_r = np.nonzero(a & ~m0.T)
-            suspect = recv & (now - g.bulk_ts > timeout_s)
-            ins_set = {int(r) for r in ins_r}
+            gi = g.gi
+            pair = ins_by_g.get(gi)
+            if pair is None and gi not in sus_set and not g.st_rows:
+                continue
+            a = a3[gi, :V, :V]
+            recv = recv3[gi, :V]
+            suspect = suspect3[gi, :V]
+            ins_s, ins_r = pair if pair is not None else ((), ())
+            ins_set = set(ins_r)
             # A stale-exception turn with no insertions and a fresh bulk
             # stamp is a complete no-op unless some tracked entry would
             # actually fire: either its tracked timestamp already exceeds
@@ -513,27 +662,41 @@ class ClaimsEngine:
                 self._apply_events(g, a, ins_s, ins_r, events, suspect,
                                    now, timeout_s)
                 g.mlen = [len(v.members) for v in g.views]
-            # --- virtual timestamp maintenance ------------------------
-            nonrefr = g.P & recv[:, None]
-            nonrefr[:, :V] &= ~a.T
-            d = np.arange(V)
-            nonrefr[d, d] = False  # self-entry: never
-            nr_r, nr_c = np.nonzero(nonrefr)
-            if nr_r.size:
-                for j, c in zip(nr_r, nr_c):
-                    st = g.stale_ts[j]
-                    nid = g.colnids[c]
-                    if nid not in st:
-                        last = g.views[j].members[nid]
-                        bulk = g.bulk_ts[j]
-                        st[nid] = last if last > bulk else bulk
-                g.st_rows.update(nr_r.tolist())
-            g.bulk_ts[recv] = now
+        # --- virtual timestamp maintenance (all groups at once) -------
+        # P3 reflects the event edits (the per-group tables are views into
+        # it), while a3 is the pre-event delivery matrix — exactly the
+        # pairing the per-group evaluation used.
+        nonrefr3 = pool.P3 & recv3[:, :, None]
+        nonrefr3[:, :, :vcap] &= ~a3.transpose(0, 2, 1)
+        nonrefr3[:, d, d] = False  # self-entry: never
+        # already-tracked triples are no-ops here (the entry exists, the
+        # write is skipped, the row is in st_rows), so the Python walk
+        # covers only the NEW exceptions of this round
+        nonrefr3 &= ~pool.tracked3
+        ng, nr, nc = np.nonzero(nonrefr3)
+        if ng.size:
+            pool.tracked3[ng, nr, nc] = True
+            g = None
+            last_gi = -1
+            for gi, j, c in zip(ng.tolist(), nr.tolist(), nc.tolist()):
+                if gi != last_gi:  # nonzero is group-major: cheap run cut
+                    g = groups[gi]
+                    last_gi = gi
+                st = g.stale_ts[j]
+                nid = g.colnids[c]
+                if nid not in st:
+                    last = g.views[j].members[nid]
+                    bulk = g.bulk_ts[j]
+                    st[nid] = last if last > bulk else bulk
+                g.st_rows.add(j)
+        pool.bulk3[recv3] = now
+        for g in groups:
             g.counts = None
 
     def _apply_events(self, g: _GState, a, ins_s, ins_r, events, suspect,
                       now: float, timeout_s: float) -> None:
         """Apply insertions and prunes to the real dicts in turn order."""
+        tracked3 = self._pool.tracked3
         ins_by_r: dict[int, list[int]] = {}
         for s, r in zip(ins_s, ins_r):
             ins_by_r.setdefault(int(r), []).append(int(s))
@@ -556,11 +719,20 @@ class ClaimsEngine:
                     g.P[j, s] = True
                 g.st_rows.discard(j)
                 continue
+            # general (prune-capable) turn: each popped stale_ts entry
+            # drops exactly its own tracked bit (entries that survive keep
+            # theirs — clearing whole rows would make every insertion turn
+            # re-walk its exceptions next round). Pure-insert turns pop
+            # nothing (st empty by the branch condition => no tracked
+            # bits, invariant) and skip all of this.
+            trow = tracked3[g.gi, j]
+            colpos = g.colpos
             k = bisect.bisect_left(senders, j)
             for s in senders[:k]:       # inserted before j's own turn
                 mem[g.vnids[s]] = now
                 g.P[j, s] = True
-                st.pop(g.vnids[s], None)
+                if st.pop(g.vnids[s], None) is not None:
+                    trow[s] = False
             # ---- j's own turn: the prune pass -------------------------
             scan = (mem if suspect[j] else list(st))
             readds: list[int] = []  # pruned members re-added after the turn
@@ -570,10 +742,17 @@ class ClaimsEngine:
                 sidx = g.vpos.get(nid)
                 edge = sidx is not None and sidx != j and a[sidx, j]
                 if edge and sidx < j:
-                    st.pop(nid, None)   # refreshed before the turn: fresh
+                    # refreshed before the turn: fresh
+                    if st.pop(nid, None) is not None:
+                        trow[colpos[nid]] = False
                     continue
                 if nid not in mem:
-                    st.pop(nid, None)   # vanished externally (re-ingest)
+                    # vanished externally (re-ingest); may predate the
+                    # current column universe, hence the colpos guard
+                    if st.pop(nid, None) is not None:
+                        cp = colpos.get(nid)
+                        if cp is not None:
+                            trow[cp] = False
                     continue
                 last = mem[nid]
                 tracked = st.get(nid)
@@ -585,17 +764,22 @@ class ClaimsEngine:
                 if now - eff > timeout_s:   # the reference prune test
                     del mem[nid]
                     st.pop(nid, None)
-                    g.P[j, g.colpos[nid]] = False
+                    cp = colpos[nid]
+                    g.P[j, cp] = False
+                    trow[cp] = False
                     if edge:            # re-added at the sender's turn
                         readds.append(sidx)
                 elif edge:
-                    st.pop(nid, None)   # refreshed after the turn
+                    # refreshed after the turn
+                    if st.pop(nid, None) is not None:
+                        trow[colpos[nid]] = False
             # post-turn events land in sender-turn order: fresh inserts
             # and prune-then-readd claims interleave on that one axis
             for s in sorted(senders[k:] + readds):
                 mem[g.vnids[s]] = now
                 g.P[j, s] = True
-                st.pop(g.vnids[s], None)
+                if st.pop(g.vnids[s], None) is not None:
+                    trow[s] = False
             if not st:
                 g.st_rows.discard(j)
 
@@ -620,6 +804,42 @@ class ClaimsEngine:
             alive_cols[valid] = self.net.alive_rows[g.colrows[valid]]
             g.counts = (g.P & alive_cols[None, :]).sum(axis=1)
         return int(g.counts[j])
+
+    def under_r_visits(self, registry: dict,
+                       r_inner: int) -> dict[int, dict[bytes, int]]:
+        """Alive-member counts of every under-``R`` (viewer, group) pair.
+
+        ONE liveness gather over the pool slabs counts every view of
+        every group (liveness is fixed for the whole repair tick, so the
+        counts are exact until a view mutates) and returns ``{viewer nid:
+        {chash: count}}`` for the pairs strictly below ``r_inner``. The
+        computed count rows are also cached on the groups for
+        :meth:`precheck_count`."""
+        net = self.net
+        pool = self._pool
+        if pool is None or pool.n == 0:
+            return {}
+        rv = net.rows_version
+        groups = self._by_gi
+        for g in groups:
+            if g.rows_v != rv:
+                self._refresh_rows(g)
+        alive_rows = net.alive_rows
+        cr = pool.colrows3
+        validc = cr >= 0
+        ac3 = validc & alive_rows[np.where(validc, cr, 0)]
+        counts3 = (pool.P3 & ac3[:, None, :]).sum(axis=2)
+        vmask = np.arange(pool.vcap)[None, :] < pool.vlen[:, None]
+        ug, uj = np.nonzero(vmask & (counts3 < r_inner))
+        visit: dict[int, dict[bytes, int]] = {}
+        for gi, j in zip(ug.tolist(), uj.tolist()):
+            g = groups[gi]
+            if g.chash not in registry:
+                continue
+            visit.setdefault(g.vnids[j], {})[g.chash] = int(counts3[gi, j])
+        for g in groups:
+            g.counts = counts3[g.gi, :len(g.vnids)]
+        return visit
 
     def begin_repair_tick(self) -> None:
         """Invalidate cached counts (liveness changed since last tick)."""

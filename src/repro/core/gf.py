@@ -58,16 +58,32 @@ def gf_div_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return gf_mul_np(a, gf_inv_np(b))
 
 
+# Sentinel log/exp pair for the fused matmul below: log 0 is pushed to
+# 1020, past every reachable true-log sum (max 254 + 254 = 508), and the
+# exp table maps the whole sentinel range to 0 — so one gather computes
+# exp[log a + log b] with GF(256) zero-propagation built in, no masks.
+_LOG_S = GF_LOG.astype(np.int32).copy()
+_LOG_S[0] = 1020
+_EXP_S = np.zeros(2048, np.uint8)  # max index 1020 + 1020 = 2040
+_EXP_S[:510] = GF_EXP[:510]
+
+
 def gf_matmul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """GF(256) matmul: (m,k) x (k,n) -> (m,n) via table lookups (host)."""
+    """GF(256) matmul: (m,k) x (k,n) -> (m,n) via one fused table gather
+    (host). The (m, k-block, n) product tensor is XOR-reduced over the
+    inner axis; k is blocked only to bound the intermediate."""
     a = np.asarray(a, dtype=np.uint8)
     b = np.asarray(b, dtype=np.uint8)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    la = _LOG_S[a]
+    lb = _LOG_S[b]
+    step = max(1, (1 << 22) // max(1, m * n))
     out = np.zeros((m, n), dtype=np.uint8)
-    for j in range(k):  # k is small (<=256) on every VAULT path
-        out ^= gf_mul_np(a[:, j : j + 1], b[j : j + 1, :])
+    for j in range(0, k, step):
+        prod = _EXP_S[la[:, j:j + step, None] + lb[None, j:j + step, :]]
+        out ^= np.bitwise_xor.reduce(prod, axis=1)
     return out
 
 

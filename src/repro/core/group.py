@@ -125,33 +125,29 @@ def prune_dead_members(net: SimNetwork, node: Node, timeout_s: float) -> None:
 
 
 def membership_timer(net: SimNetwork, node: Node, chash: bytes,
-                     batch: bool = False, cache: dict | None = None,
-                     prev: dict | None = None) -> None:
+                     batch: bool = False, cache: dict | None = None) -> None:
     """MembershipTimer() of §4.3.3: merge Locate() results into the view.
 
-    ``batch=True`` verifies every candidate's stored claim proofs through
-    ``selection.verify_selection_batch`` (memoized, one VRF pass) instead
-    of scalar per-proof calls; a candidate is (re)admitted iff *any* of
-    its proofs verifies, so the admitted set — and the resulting view
-    state — is identical either way. Eclipsed nodes cannot run Locate().
+    ``batch=True`` routes the walk through the resident Locate() state:
+    ``net.locate_round`` returns the tick's ``selection.LocateRound`` for
+    this anchor (the same instance repair slots use), whose
+    ``timer_admit`` lanes hold one boolean verdict per candidate, carried
+    across ticks by the round's donor machinery and invalidated per nid
+    when a repair stores fresh proofs (``SimNetwork.
+    evict_timer_verdicts``). A steady-state timer pass therefore verifies
+    nothing and runs no per-candidate Python; newcomers get their stored
+    claim proofs verified in one ``verify_selection_batch`` call. A
+    candidate is (re)admitted iff *any* of its proofs verifies, so the
+    admitted set — and the resulting view state — is identical to the
+    scalar walk. Eclipsed nodes cannot run Locate().
 
     The admitted set is caller-independent — a pure function of the ring,
     the candidates' stored proofs, and the population count, none of which
-    change between repairs inside one tick — so repair ticks pass
-    ``cache`` (a per-tick ``{chash: admitted nids}`` dict) and every view
-    of the same short group merges the one computed set. The repair loop
-    evicts a group's entry whenever a repair adds a member (new proofs /
-    new view), keeping the cached set exact.
-
-    ``prev`` extends the same argument ACROSS ticks: stored proofs (and
-    view presence) change only through ``store_fragment``, i.e. through a
-    repair — and repairs evict the group's ``prev`` entry too. Between
-    evictions the only moving part is the candidate window itself (churn
-    shifts the ring; eclipse windows mask segments), so a donor entry
-    ``(candidate nids, admit-verdict set, n_nodes)`` stays exact for every
-    candidate it has already judged: only window *newcomers* need a proof
-    verification, and the admitted list is rebuilt in the fresh
-    candidate-walk order (dict-insertion order is observable downstream).
+    change between repairs inside one tick — so repair ticks additionally
+    pass ``cache`` (a per-tick ``{chash: admitted nids}`` dict) and every
+    view of the same short group merges the one computed set. The repair
+    loop evicts a group's entry whenever a repair adds a member (new
+    proofs / new view), keeping the cached set exact.
     """
     if net.is_eclipsed(node.nid):
         return
@@ -166,75 +162,18 @@ def membership_timer(net: SimNetwork, node: Node, chash: bytes,
                 view.members[nid] = now
             return
     anchor = C.hash_point(chash)
-    cands = net.candidates(anchor, min(4 * view.meta.r_target, net.n_nodes))
     if batch:
-        ent = prev.get(chash) if prev is not None else None
-        if ent is not None and ent[2] == net.n_nodes:
-            old_cands, adm = ent[0], ent[1]
-            # one pass: collect admit (candidate order), window newcomers,
-            # and the fresh candidate-nid set together — newcomers are
-            # rare, so the rebuild below almost never runs
-            cset = set()
-            admit = []
-            newcomers = []
-            for c in cands:
-                nid = c.nid
-                cset.add(nid)
-                if nid in adm:
-                    admit.append(nid)
-                elif nid not in old_cands:
-                    newcomers.append(c)
-            if newcomers:
-                proofs, owners = [], []
-                for cand in newcomers:
-                    if cand.groups.get(chash) is None:
-                        continue
-                    for proof in (cand.claim_proofs_by_chash
-                                  .get(chash, {}).values()):
-                        proofs.append(proof)
-                        owners.append(cand)
-                fresh = False
-                if proofs:
-                    ok = sel.verify_selection_batch(
-                        net.registry, proofs, [anchor] * len(proofs),
-                        view.meta.r_target, net.n_nodes)
-                    for cand, good in zip(owners, ok):
-                        if good and cand.nid not in adm:
-                            adm.add(cand.nid)
-                            fresh = True
-                if fresh:   # re-walk to slot new verdicts in cand order
-                    admit = [c.nid for c in cands if c.nid in adm]
-            now = net.now
-            for nid in admit:
-                view.members[nid] = now
-            if cache is not None:
-                cache[chash] = admit
-            prev[chash] = (cset, adm, net.n_nodes)
-            return
-        proofs, owners = [], []
-        for cand in cands:
-            if cand.groups.get(chash) is None:
-                continue
-            for proof in cand.claim_proofs_by_chash.get(chash, {}).values():
-                proofs.append(proof)
-                owners.append(cand)
-        admit = []
-        if proofs:
-            ok = sel.verify_selection_batch(
-                net.registry, proofs, [anchor] * len(proofs),
-                view.meta.r_target, net.n_nodes)
-            seen = set()
-            for cand, good in zip(owners, ok):
-                if good and cand.nid not in seen:
-                    seen.add(cand.nid)
-                    admit.append(cand.nid)
-            for nid in admit:
-                view.members[nid] = net.now
+        lr = net.locate_round(
+            anchor, min(4 * view.meta.r_target, net.n_nodes),
+            view.meta.r_target)
+        admit = lr.timer_admit(chash)
+        now = net.now
+        for nid in admit:
+            view.members[nid] = now
         if cache is not None:
             cache[chash] = admit
-        if prev is not None:
-            prev[chash] = ({c.nid for c in cands}, set(admit), net.n_nodes)
         return
+    cands = net.candidates(anchor, min(4 * view.meta.r_target, net.n_nodes))
     for cand in cands:
         peer_view = cand.groups.get(chash)
         if peer_view is None:
@@ -252,7 +191,7 @@ def alive_members(net: SimNetwork, node: Node, chash: bytes) -> list[int]:
     view = node.groups.get(chash)
     if view is None:
         return []
-    return [
-        nid for nid in view.members
-        if nid in net.nodes and net.nodes[nid].alive
-    ]
+    # alive_set mirrors `nid in net.nodes and net.nodes[nid].alive`
+    # exactly (maintained by add_node/fail_node); one set probe per member
+    alive = net.alive_set
+    return [nid for nid in view.members if nid in alive]

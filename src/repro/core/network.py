@@ -15,6 +15,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import rateless
 from repro.core import selection as sel
 from repro.core.vrf import RING, KeyPair, make_registry, node_id
 
@@ -79,6 +80,12 @@ class Node:
         self.alive = True
         self.row = -1  # dense index into the network's alive table
         self.fragments: dict[tuple[bytes, int], bytes] = {}
+        # per-chunk mirror of ``fragments`` (same payloads, same relative
+        # insertion order) so serve_fragments is one lookup instead of a
+        # scan over every fragment the node holds; maintained by
+        # store_fragment (fragments are never individually deleted — a
+        # node's whole state dies with it in the reaper)
+        self.fragments_by_chash: dict[bytes, dict[int, bytes]] = {}
         self.groups: dict[bytes, GroupView] = {}
         # selection proofs stored alongside fragments (§4.3.3: avoids
         # regenerating VRF proofs every heartbeat interval), plus a
@@ -109,30 +116,35 @@ class Node:
                 proof
         if not self.byzantine:
             self.fragments[(meta.chash, index)] = payload
+            self.fragments_by_chash.setdefault(meta.chash, {})[index] = \
+                payload
         return True
 
     def serve_fragments(self, chash: bytes) -> dict[int, bytes]:
-        if self.byzantine or not self.alive or self.net.is_eclipsed(self.nid):
+        net = self.net
+        if (self.byzantine or not self.alive
+                or (net._eclipse is not None and net.is_eclipsed(self.nid))):
             return {}
-        return {
-            idx: data
-            for (ch, idx), data in self.fragments.items()
-            if ch == chash
-        }
+        frags = self.fragments_by_chash.get(chash)
+        return dict(frags) if frags else {}
 
     def cache_chunk(self, chash: bytes, chunk: bytes, ttl: float) -> None:
         view = self.groups.get(chash)
         if view is not None and not self.byzantine:
             view.chunk_cache = chunk
             view.cache_expiry = self.net.now + ttl
+            self.net.chunk_caches += 1
 
     def cached_chunk(self, chash: bytes) -> bytes | None:
         view = self.groups.get(chash)
-        if view is None or self.byzantine or self.net.is_eclipsed(self.nid):
+        if view is None or view.chunk_cache is None or self.byzantine:
             return None
-        if view.chunk_cache is not None and self.net.now < view.cache_expiry:
-            return view.chunk_cache
-        return None
+        net = self.net
+        if net.now >= view.cache_expiry:
+            return None
+        if net._eclipse is not None and net.is_eclipsed(self.nid):
+            return None
+        return view.chunk_cache
 
 
 class SimNetwork:
@@ -160,11 +172,19 @@ class SimNetwork:
         self.now = 0.0  # seconds
         self.repair_traffic_bytes = 0
         self.repair_count = 0
-        self.eclipse: tuple[int, int] | None = None  # cut ring segment
+        # count of cache_chunk writes ever made: while zero (cache_ttl=0
+        # runs — the default), repair's warm-holder scan is provably a
+        # no-op and is skipped wholesale
+        self.chunk_caches = 0
+        self._eclipse: tuple[int, int] | None = None  # cut ring segment
         # dense per-node tables for the vectorized tick path: row i of
-        # alive_rows is nodes' liveness in creation order (Node.row)
+        # alive_rows is nodes' liveness in creation order (Node.row);
+        # eclipsed_rows mirrors is_eclipsed() per row so the batched
+        # claims round can mask unreachable receivers with one gather
+        # instead of a python scan (recomputed only when the cut moves)
         self._rows: list[Node] = []
         self.alive_rows = np.zeros(0, dtype=bool)
+        self.eclipsed_rows = np.zeros(0, dtype=bool)
         # DHT-lookup memo: candidates() is a pure function of the ring and
         # the eclipse cut, both of which change only at churn/window edges,
         # while a repair tick re-runs the same ~R-wide lookups for every
@@ -199,6 +219,25 @@ class SimNetwork:
     def n_nodes(self) -> int:
         return len(self._ring)
 
+    @property
+    def eclipse(self) -> tuple[int, int] | None:
+        return self._eclipse
+
+    @eclipse.setter
+    def eclipse(self, segment: tuple[int, int] | None) -> None:
+        if segment == self._eclipse:
+            return
+        self._eclipse = segment
+        self._recompute_eclipsed_rows()
+
+    def _recompute_eclipsed_rows(self) -> None:
+        ecl = np.zeros(self.alive_rows.shape[0], dtype=bool)
+        if self._eclipse is not None:
+            for i, node in enumerate(self._rows):
+                if node is not None and self.is_eclipsed(node.nid):
+                    ecl[i] = True
+        self.eclipsed_rows = ecl
+
     def add_node(self, byzantine: bool = False, seed: bytes | None = None) -> Node:
         kp = KeyPair.generate(seed)
         region = int(self.rng.integers(len(REGIONS)))
@@ -212,7 +251,12 @@ class SimNetwork:
             grown = np.zeros(max(64, 2 * self.alive_rows.shape[0]), bool)
             grown[:self.alive_rows.shape[0]] = self.alive_rows
             self.alive_rows = grown
+            grown_e = np.zeros(self.alive_rows.shape[0], bool)
+            grown_e[:self.eclipsed_rows.shape[0]] = self.eclipsed_rows
+            self.eclipsed_rows = grown_e
         self.alive_rows[node.row] = True
+        if self._eclipse is not None:
+            self.eclipsed_rows[node.row] = self.is_eclipsed(node.nid)
         self.row_of[node.nid] = node.row
         self.alive_set.add(node.nid)
         self._ring_version += 1
@@ -240,6 +284,12 @@ class SimNetwork:
         self._rows[node.row] = None
         self._dead_rows += 1
         self.registry.evict(node.kp)
+        # the coefficient rows of the fragments this node held are dead
+        # with it — same hook as the VRF registry eviction above (the memo
+        # is a pure cache, so a row shared with a surviving duplicate
+        # index is simply recomputed on next use)
+        for chash, idx in node.fragments:
+            rateless.evict_coeff_row(chash, idx)
         if self._dead_rows > max(64, len(self._ring)):
             self._compact_rows()
 
@@ -262,6 +312,15 @@ class SimNetwork:
         self.alive_rows[:len(rows)] = True
         self._dead_rows = 0
         self.rows_version += 1
+        self._recompute_eclipsed_rows()
+        # sweep the cumulative Locate() donor state: per-candidate rows of
+        # reaped nids can never donate again (donor reuse is nid-matched),
+        # but they pin the dead Node objects — fragments included — so
+        # the donor map would otherwise grow with every node ever seen.
+        # Amortized with the row compaction itself.
+        for cache in (self._locate_cache, self._locate_prev):
+            for lr in cache.values():
+                lr.compact(self.alive_set)
 
     def alive_nodes(self) -> list[Node]:
         return [self.nodes[n] for n in self._ring]
@@ -269,7 +328,7 @@ class SimNetwork:
     # -- partition / eclipse -------------------------------------------------
     def is_eclipsed(self, nid: int) -> bool:
         """True iff ``nid`` sits inside the cut ring segment (unreachable)."""
-        e = self.eclipse
+        e = self._eclipse
         if e is None:
             return False
         lo, hi = e
@@ -365,6 +424,20 @@ class SimNetwork:
                                  prev=self._locate_prev.get(key))
             self._locate_cache[key] = lr
         return lr
+
+    def evict_timer_verdicts(self, anchor: int, r_target: int,
+                             nids: list[int]) -> None:
+        """Invalidate cached MembershipTimer admit verdicts for ``nids``.
+
+        Called after a repair round changes a group's membership: the new
+        members' proofs must be (re)judged on the next timer pass. Both
+        the live generation and the cumulative donor map are patched —
+        either could seed the next tick's ``LocateRound``."""
+        key = (anchor, min(4 * r_target, self.n_nodes), r_target)
+        for cache in (self._locate_cache, self._locate_prev):
+            lr = cache.get(key)
+            if lr is not None:
+                lr.evict_timer(nids)
 
     # -- latency accounting ----------------------------------------------------
     def rtt(self, a: Node, b: Node) -> float:

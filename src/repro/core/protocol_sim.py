@@ -64,6 +64,7 @@ configurations — the correctness anchor ROADMAP.md called for.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import NamedTuple
 
 import numpy as np
@@ -343,7 +344,7 @@ def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
 def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                  frag_len: dict, pick, batch: bool = False,
                  claims: "CE.ClaimsEngine | None" = None,
-                 timer_prev: dict | None = None,
+                 pool: "R.SolvePool | None" = None,
                  ) -> tuple[float, int, int, int]:
     """One decentralized repair tick: every alive node checks each of its
     group views and repairs the ones short of ``R`` (repair.py §4.3.4).
@@ -379,25 +380,40 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
     # synced, nothing dirty); nodes that GAIN views mid-tick (fresh
     # repair members, reported via ``RepairStats.new_nids``) fall back to
     # the full walk of their group lists.
-    visit: dict[int, set[bytes]] | None = None
+    visit: dict[int, dict[bytes, int]] | None = None
     if claims is not None and claims._started and not claims.dirty:
-        visit = {}
-        alive_rows = net.alive_rows
-        for chash, g in claims.groups.items():
-            if not g.vnids or chash not in registry:
-                continue
-            if g.rows_v != net.rows_version:
-                claims._refresh_rows(g)
-            cr = g.colrows
-            valid = cr >= 0
-            alive_cols = alive_rows[np.where(valid, cr, 0)] & valid
-            g.counts = np.count_nonzero(g.P & alive_cols, axis=1)
-            for j in np.nonzero(g.counts < p.r_inner)[0]:
-                visit.setdefault(g.vnids[int(j)], {})[chash] = \
-                    int(g.counts[j])
+        visit = claims.under_r_visits(registry, p.r_inner)
     tick_new: set[int] = set()
-    for node in list(net.alive_nodes()):
-        if node.byzantine:
+    # Iteration order is the ring's sorted-nid order over the tick-start
+    # alive snapshot (repairs only add views, never nodes, so the ring is
+    # static for the whole tick). With a live visit table only its listed
+    # viewers — plus mid-tick recruits — can do any work, so the walk
+    # visits just those nids, heap-merged in sorted order: a recruit with
+    # a nid beyond the current position is pushed and reached exactly
+    # where the full ring walk would have reached it; one at or before
+    # the current position would not be revisited by the full walk either.
+    nodes_d = net.nodes
+    if visit is None:
+        queue = [n.nid for n in net.alive_nodes()]
+        queue.reverse()  # pop() from the tail yields ascending nids
+        pop_next = queue.pop
+        enqueue = None
+    else:
+        heap = sorted(visit)  # ascending => already a valid heap
+        queued = set(heap)
+        pop_next = lambda: heapq.heappop(heap)  # noqa: E731
+        queue = heap
+
+        def enqueue(nids: list[int], cur: int) -> None:
+            for nn in nids:
+                if nn > cur and nn not in queued:
+                    queued.add(nn)
+                    heapq.heappush(heap, nn)
+
+    while queue:
+        nid = pop_next()
+        node = nodes_d.get(nid)
+        if node is None or node.byzantine:
             continue  # Fig. 6 adversary stores nothing and repairs nothing
         # The precomputed table count stays EXACT for every (viewer, group)
         # pair on the visit list until that viewer's own view mutates —
@@ -407,10 +423,10 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
         # So visit-listed pairs skip both the table lookup and the dict
         # walk: their tick-start count IS the current count.
         fast_counts: dict | None = None
-        if visit is None or node.nid in tick_new:
+        if visit is None or nid in tick_new:
             group_iter = list(node.groups)
         else:
-            want = visit.get(node.nid)
+            want = visit.get(nid)
             if not want:
                 continue
             group_iter = [ch for ch in node.groups if ch in want]
@@ -438,8 +454,8 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                 admit = timer_cache.get(chash)
                 if admit is not None:
                     mem = node.groups[chash].members
-                    for nid in admit:
-                        mem[nid] = net.now
+                    for anid in admit:
+                        mem[anid] = net.now
                     if claims is not None:
                         claims.touch(chash)  # merge outdated the tables
                     # every admitted candidate is ring-resident => alive
@@ -448,12 +464,12 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
                     if len(admit) >= p.r_inner:
                         continue
                     alive_set = net.alive_set
-                    if sum(1 for nid in mem if nid in alive_set) \
+                    if sum(1 for mnid in mem if mnid in alive_set) \
                             >= p.r_inner:
                         continue
             s = R.repair_group(net, node, chash, cache_ttl=ttl, pick=pick,
                                batch=batch, timer_cache=timer_cache,
-                               timer_prev=timer_prev)
+                               pool=pool)
             if claims is not None:
                 # MembershipTimer inside repair_group may have changed the
                 # view even when nothing was repaired — stop trusting the
@@ -462,9 +478,16 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
             if s.repaired:
                 attempts += 1
                 tick_new.update(s.new_nids)
+                if enqueue is not None:
+                    enqueue(s.new_nids, nid)
             repairs += s.repaired
             hits += s.cache_hits
             traffic_units += s.traffic_bytes / frag_len[chash] * frag_units
+    if pool is not None:
+        # drain the tick's deferred decode systems: one padded batched
+        # GF(256) dispatch (plus masked retry rounds for the rare
+        # rank-deficient lanes) re-proves every inline rank decision
+        pool.flush()
     return traffic_units, repairs, hits, attempts
 
 
@@ -524,11 +547,10 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
             if adv_id == P.ADV_ADAPTIVE else None)
     # bootstrap: top groups up to R (client stores may undershoot when the
     # candidate set thins out); uncounted, like the engine's exact-R init
-    # timer_prev: cross-tick MembershipTimer verdict donor (vectorized
-    # engine only — see group.membership_timer), evicted on every repair
-    timer_prev: dict | None = {} if vec else None
-    _repair_tick(net, p, registry, frag_len, pick, batch=vec,
-                 timer_prev=timer_prev)
+    # pool: cross-tick decode-chunk memo + per-tick deferred solve batch
+    # (vectorized engine only — see repair.SolvePool)
+    pool = R.SolvePool() if vec else None
+    _repair_tick(net, p, registry, frag_len, pick, batch=vec, pool=pool)
 
     p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
     p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
@@ -566,7 +588,7 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
                     G.prune_dead_members(net, node, claim_timeout)
         tu, rp, ch, at = _repair_tick(
             net, p, registry, frag_len, pick, batch=vec, claims=claims,
-            timer_prev=timer_prev)
+            pool=pool)
         traffic_units += tu
         repairs += rp
         cache_hits += ch

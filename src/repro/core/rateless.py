@@ -52,20 +52,69 @@ def prf_u64(key: bytes, index: int) -> int:
     return int.from_bytes(prf_bytes(key, index, 8), "little")
 
 
-@functools.lru_cache(maxsize=1 << 16)
-def _coeff_row(seed: bytes, k: int, index: int) -> np.ndarray:
-    """Memoized read-only coefficient row — pure in ``(seed, k, index)``.
+class _CoeffMemo:
+    """Memoized read-only coefficient rows — pure in ``(seed, k, index)``.
 
     Repair decodes re-derive the same rows every tick (same chunk seeds,
     overlapping fragment indices); one blake2b stream per distinct row is
-    enough for the whole run. Returned array is marked non-writable —
+    enough for the whole run. Returned arrays are marked non-writable —
     ``coeff_matrix``'s ``np.stack`` copies, ``coeff_row`` copies
-    explicitly."""
-    row = np.frombuffer(prf_bytes(seed, index, k), np.uint8).copy()
-    if not row.any():  # all-zero row is useless; bump deterministically
-        row[index % k] = 1
-    row.setflags(write=False)
-    return row
+    explicitly.
+
+    Unlike a plain ``lru_cache`` this memo is *explicitly evictable*: the
+    dead-node reaper (``SimNetwork.fail_node``) drops the rows of every
+    fragment a reaped node held, so the memo tracks the live fragment
+    population (plus client-held outer rows) instead of every stream index
+    a churn-heavy month ever touched. Eviction is always safe — the memo
+    is a pure cache and a dropped row is simply recomputed on next use.
+    ``_MAX`` is a crash-barrier only (FIFO), never hit when eviction is
+    wired.
+    """
+
+    _MAX = 1 << 18
+
+    def __init__(self) -> None:
+        # keyed (seed, index) -> (k, row): one k per stream in practice,
+        # and collapsing k into the value keeps eviction O(1) per fragment
+        self._rows: dict[tuple[bytes, int], tuple[int, np.ndarray]] = {}
+        self._hits = 0
+        self._misses = 0
+
+    def __call__(self, seed: bytes, k: int, index: int) -> np.ndarray:
+        key = (seed, index)
+        hit = self._rows.get(key)
+        if hit is not None and hit[0] == k:
+            self._hits += 1
+            return hit[1]
+        self._misses += 1
+        row = np.frombuffer(prf_bytes(seed, index, k), np.uint8).copy()
+        if not row.any():  # all-zero row is useless; bump deterministically
+            row[index % k] = 1
+        row.setflags(write=False)
+        if len(self._rows) >= self._MAX:
+            self._rows.pop(next(iter(self._rows)))
+        self._rows[key] = (k, row)
+        return row
+
+    def evict(self, seed: bytes, index: int) -> None:
+        """Drop the cached row for ``(seed, index)``, if any."""
+        self._rows.pop((seed, index), None)
+
+    def cache_clear(self) -> None:
+        self._rows.clear()
+        self._hits = self._misses = 0
+
+    def cache_info(self):
+        return functools._CacheInfo(self._hits, self._misses, self._MAX,
+                                    len(self._rows))
+
+
+_coeff_row = _CoeffMemo()
+
+
+def evict_coeff_row(seed: bytes, index: int) -> None:
+    """Reaper hook: forget the memoized coefficient row of one fragment."""
+    _coeff_row.evict(seed, index)
 
 
 # -------------------------------------------------------------------- RLNC

@@ -105,9 +105,102 @@ def _locate_new_member(
     return best[1], best[2]
 
 
+class SolvePool:
+    """Cross-group repair-decode collector: one padded solve dispatch/tick.
+
+    Inline, each repair only decides what the rest of the tick can observe
+    — how many fragments it pulls (which fixes its traffic charge and the
+    count of RTT draws, i.e. the RNG stream) and the chunk bytes it
+    re-encodes from. Chunks are content-addressed, so the bytes behind a
+    ``chash`` are immutable for the whole run: the *first* decode of each
+    chunk runs inline (hash-verified in ``chunks.inner_decode``) and is
+    memoized here, and every later repair of the same chunk reuses the
+    memo, decides its pull count with a rank-only elimination
+    (``kernels.gf256_solve.gf256_rank_prefix`` — provably the exact count
+    the PR 4 one-more-row retry loop reaches) and defers its payload
+    system to :meth:`flush`.
+
+    ``flush`` (end of the repair tick) stacks the deferred systems into
+    padded ``kernels.gf256_solve.gf256_solve_batch`` dispatches: every
+    system enters at the minimum ``k`` rows, and PR 4's one-fragment
+    extension runs as a *masked second round* over just the
+    rank-deficient lanes instead of a per-group Python loop. Each decoded
+    chunk is verified against its content address — so the memo shortcut
+    is continuously re-proven by the real batched math, and any
+    divergence between the inline rank decision and the batch solve
+    raises instead of corrupting state.
+
+    ``chunks`` persists across ticks (bounded by the deployment's chunk
+    population, ~1 KiB each); ``systems`` drains every flush.
+    """
+
+    def __init__(self) -> None:
+        self.chunks: dict[bytes, bytes] = {}
+        # (chash, k, coeffs (n_pull, k), symbols (n_pull, L), n_pull)
+        self.systems: list[tuple] = []
+        self.flushed = 0
+
+    def enqueue(self, chash: bytes, k: int, coeffs: np.ndarray,
+                symbols: np.ndarray, n_pull: int) -> None:
+        self.systems.append((chash, k, coeffs, symbols, n_pull))
+
+    def flush(self) -> int:
+        """Solve + verify every deferred system; returns how many."""
+        if not self.systems:
+            return 0
+        from repro.kernels.gf256_solve import gf256_solve_batch
+
+        systems, self.systems = self.systems, []
+        k = systems[0][1]
+        ls = [s[3].shape[1] for s in systems]
+        lmax = max(ls)
+        pending = list(range(len(systems)))
+        tries = [0] * len(systems)
+        while pending:
+            mmax = k + max(tries[i] for i in pending)
+            a = np.zeros((len(pending), mmax, k), np.uint8)
+            y = np.zeros((len(pending), mmax, lmax), np.uint8)
+            for j, i in enumerate(pending):
+                rows = k + tries[i]
+                a[j, :rows] = systems[i][2][:rows]
+                y[j, :rows, :ls[i]] = systems[i][3][:rows]
+            # zero pad rows are never eligible pivots and eliminate to
+            # nothing, so the padded batch is per-system bit-identical to
+            # solving each at its own prefix length. Backend is pinned to
+            # the numpy mirror: the batch geometry (B ~ repairs/tick, m ~
+            # k+1) changes every tick, and per-shape XLA compiles of the
+            # pallas path cost more than the whole elimination at this
+            # size — accelerator sweeps call gf256_solve_batch directly
+            # with stable shapes and get the kernel via auto-dispatch.
+            x, ok, _ = gf256_solve_batch(a, y, backend="numpy")
+            nxt = []
+            for j, i in enumerate(pending):
+                chash, k_i, coeffs, _, n_pull = systems[i]
+                if ok[j]:
+                    if k + tries[i] != n_pull:
+                        raise RuntimeError(
+                            "batched solve prefix disagrees with inline "
+                            f"rank decision ({k + tries[i]} != {n_pull})")
+                    chunk = C.join_blocks(x[j][:, :ls[i]])
+                    if C.chunk_hash(chunk) != chash:
+                        raise RuntimeError(
+                            "batched repair decode failed content-address "
+                            "verification")
+                    self.flushed += 1
+                elif k + tries[i] >= coeffs.shape[0]:
+                    raise RuntimeError(
+                        "batched solve exhausted rows the inline rank "
+                        "decision declared sufficient")
+                else:
+                    tries[i] += 1  # masked retry round: one more fragment
+                    nxt.append(i)
+            pending = nxt
+        return self.flushed
+
+
 def _pull_and_decode(
     net: SimNetwork, requester: Node, chash: bytes, meta: GroupMeta,
-    members: list[Node],
+    members: list[Node], pool: SolvePool | None = None,
 ) -> tuple[bytes, int, float]:
     """New member pulls >= K_inner fragments, decodes, verifies the chunk.
 
@@ -124,6 +217,12 @@ def _pull_and_decode(
     scale that exposed it). On rank deficiency the requester pulls
     additional fragments one at a time and retries — exactly what a real
     repairer does when a decode fails — with the extra traffic charged.
+
+    With ``pool`` (the vectorized tick), repeat decodes of a memoized
+    chunk compute only the pull count inline (``gf256_rank_prefix``
+    reaches the same count as the retry loop — see its docstring for the
+    nesting argument) and defer the payload solve to the tick-end batched
+    dispatch; traffic, holders and RTT draws are unchanged either way.
     """
     available: list[tuple[int, bytes, Node]] = []
     seen: set[int] = set()
@@ -136,16 +235,35 @@ def _pull_and_decode(
         raise InsufficientFragments(
             f"repair: {len(available)}/{meta.k_inner} fragments reachable"
         )
-    n_pull = meta.k_inner
-    while True:
-        frags = {idx: payload for idx, payload, _ in available[:n_pull]}
-        try:
-            chunk = C.inner_decode(chash, meta.k_inner, frags)
-            break
-        except InsufficientFragments:
-            if n_pull >= len(available):
-                raise
-            n_pull += 1  # rank-deficient combination: pull one more
+    chunk = pool.chunks.get(chash) if pool is not None else None
+    if chunk is None:
+        n_pull = meta.k_inner
+        while True:
+            frags = {idx: payload for idx, payload, _ in available[:n_pull]}
+            try:
+                chunk = C.inner_decode(chash, meta.k_inner, frags)
+                break
+            except InsufficientFragments:
+                if n_pull >= len(available):
+                    raise
+                n_pull += 1  # rank-deficient combination: pull one more
+        if pool is not None:
+            pool.chunks[chash] = chunk
+    else:
+        from repro.kernels.gf256_solve import gf256_rank_prefix
+
+        code = C.inner_code(chash, meta.k_inner)
+        coeffs = code.coeff_matrix([idx for idx, _, _ in available])
+        ok, n_pull = gf256_rank_prefix(coeffs)
+        if not ok:
+            # same condition under which the retry loop exhausts
+            # ``available`` and re-raises the decode failure
+            raise InsufficientFragments(
+                f"rank-deficient pull: rank < {meta.k_inner} over "
+                f"{len(available)} fragments")
+        symbols = np.stack([np.frombuffer(p, np.uint8)
+                            for _, p, _ in available[:n_pull]])
+        pool.enqueue(chash, meta.k_inner, coeffs[:n_pull], symbols, n_pull)
     holders = list(dict.fromkeys(m for _, _, m in available[:n_pull]))
     traffic = sum(len(payload) for _, payload, _ in available[:n_pull])
     rtts = net.rtts(requester, holders) if holders else np.zeros(1)
@@ -155,7 +273,7 @@ def _pull_and_decode(
 def repair_group(
     net: SimNetwork, node: Node, chash: bytes, cache_ttl: float = 0.0,
     max_new: int | None = None, pick=None, batch: bool = False,
-    timer_cache: dict | None = None, timer_prev: dict | None = None,
+    timer_cache: dict | None = None, pool: SolvePool | None = None,
 ) -> RepairStats:
     """One repair pass from ``node``'s local view (§4.3.4).
 
@@ -164,7 +282,9 @@ def repair_group(
     ``pick`` forwards to :func:`_locate_new_member` (response-order bias of
     the adaptive adversary; ``None`` = nearest-selected, the default);
     ``batch`` selects the batched VRF path there and in MembershipTimer
-    (identical results, one vectorized verification round per call).
+    (identical results, one vectorized verification round per call);
+    ``pool`` defers repeat chunk decodes to the tick-end batched solve
+    (see :class:`SolvePool` — the caller must ``flush()``).
 
     An eclipsed repairer is cut off from Locate() and every peer — the
     repair no-ops until the partition heals.
@@ -179,15 +299,14 @@ def repair_group(
     # refresh the view first (MembershipTimer — §4.3.3); the per-tick
     # timer cache shares the verified-candidate set across the group's
     # viewers (see membership_timer) and is evicted below on any repair
-    G.membership_timer(net, node, chash, batch=batch, cache=timer_cache,
-                       prev=timer_prev)
+    G.membership_timer(net, node, chash, batch=batch, cache=timer_cache)
     alive = G.alive_members(net, node, chash)
     deficit = meta.r_target - len(alive)
     if max_new is not None:
         deficit = min(deficit, max_new)
     if deficit <= 0:
         return stats
-    member_nodes = [net.nodes[nid] for nid in alive if net.nodes[nid].alive]
+    member_nodes = [net.nodes[nid] for nid in alive]  # alive by construction
     exclude = set(alive)
     lat_worst = 0.0
     for _ in range(deficit):
@@ -202,14 +321,22 @@ def repair_group(
         # Peers behind a partition cut are omitted — the repairer cannot
         # vouch for their liveness, and forwarding them fresh would let an
         # unreachable node's apparent liveness cross the cut.
-        membership = {nid: net.now for nid in alive
-                      if not net.is_eclipsed(nid)}
+        if net._eclipse is None:
+            membership = dict.fromkeys(alive, net.now)
+        else:
+            membership = {nid: net.now for nid in alive
+                          if not net.is_eclipsed(nid)}
         lat = net.rtt(node, new_member)  # the RepairRequest round
         # (a) warm chunk cache anywhere in the view → one-fragment traffic
-        warm = next(
-            (m for m in member_nodes if m.cached_chunk(chash) is not None),
-            None,
-        )
+        # (the scan is skipped while no cache_chunk write has ever landed
+        # — cache_ttl=0 runs — where it could only ever yield None)
+        warm = None
+        if net.chunk_caches:
+            warm = next(
+                (m for m in member_nodes
+                 if m.cached_chunk(chash) is not None),
+                None,
+            )
         if warm is not None:
             chunk = warm.cached_chunk(chash)
             frag = C.inner_encode_fragment(chunk, chash, meta.k_inner, index)
@@ -220,7 +347,7 @@ def repair_group(
             # (b) pull K_inner fragments, decode, cache, re-encode
             try:
                 chunk, traffic, pull_lat = _pull_and_decode(
-                    net, new_member, chash, meta, member_nodes
+                    net, new_member, chash, meta, member_nodes, pool=pool
                 )
             except InsufficientFragments:
                 continue  # incomplete view — MembershipTimer() will retry
@@ -245,16 +372,13 @@ def repair_group(
         # admitted set for this group is stale from here on
         if timer_cache is not None:
             timer_cache.pop(chash, None)
-        if timer_prev is not None:
-            # the cross-tick verdict donor stays valid for everyone else:
+        if batch:
+            # the cross-tick timer lanes stay valid for everyone else:
             # ``store_fragment`` touched ONLY the recruited members'
             # proofs, so drop just those verdicts — they re-verify as
-            # window newcomers on the next MembershipTimer pass
-            ent = timer_prev.get(chash)
-            if ent is not None:
-                for nid in stats.new_nids:
-                    ent[0].discard(nid)
-                    ent[1].discard(nid)
+            # unjudged rows on the next MembershipTimer pass
+            net.evict_timer_verdicts(C.hash_point(chash), meta.r_target,
+                                     stats.new_nids)
     net.repair_traffic_bytes += stats.traffic_bytes
     net.repair_count += stats.repaired
     return stats

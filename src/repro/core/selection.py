@@ -218,6 +218,13 @@ class LocateRound:
         # and compute only the handful of newcomers. Exact reuse — the
         # values are deterministic in the matched key.
         self._nid_idx: dict | None = None
+        # MembershipTimer lanes (see ``timer_admit``): None until a timer
+        # pass runs; carried across generations through the same nid-match
+        # below, so judged candidates keep their admit verdicts for as
+        # long as the donor chain lives.
+        self._timer_known: np.ndarray | None = None
+        self._timer_admit: np.ndarray | None = None
+        self._timer_chash: bytes | None = None
         if (prev is not None and prev.anchor == anchor
                 and prev.r_target == r_target and prev.n_nodes == n_nodes
                 and prev.registry is registry):
@@ -262,6 +269,7 @@ class LocateRound:
                 self._sks = None
                 self._words = words
                 self._thr_hi = thr_hi
+                self._carry_timer(prev, src, hit)
                 return
             dists: list = [0] * n
             thresholds: list = [0] * n
@@ -287,6 +295,7 @@ class LocateRound:
             self.dists = dists
             self.thresholds = thresholds
             self._sks = [c.kp.sk for c in cands]
+            self._carry_timer(prev, src, src >= 0)
             if arx and prev._words is not None:
                 hit = src >= 0
                 words = np.empty((n, 2), np.uint32)
@@ -316,6 +325,106 @@ class LocateRound:
                  for t in self.thresholds), np.uint64, len(self.thresholds))
         else:
             self._words = None
+
+    def _carry_timer(self, prev: "LocateRound", src: np.ndarray,
+                     hit: np.ndarray) -> None:
+        """Copy the donor's MembershipTimer verdicts for nid-matched rows.
+
+        Verdicts are pure in (stored proofs, anchor, r_target, n_nodes) —
+        all matched by the donor condition, and proofs only change through
+        repairs, which evict via :meth:`evict_timer` — so the copy is
+        exact. Unmatched rows stay unjudged and get verified on the next
+        ``timer_admit`` pass (deterministic, so re-judging a candidate
+        that dropped out of the window and returned is also exact)."""
+        if prev._timer_known is None:
+            return
+        n = len(self.candidates)
+        tk = np.zeros(n, bool)
+        ta = np.zeros(n, bool)
+        tk[hit] = prev._timer_known[src[hit]]
+        ta[hit] = prev._timer_admit[src[hit]]
+        self._timer_known = tk
+        self._timer_admit = ta
+        self._timer_chash = prev._timer_chash
+
+    def timer_admit(self, chash: bytes) -> list[int]:
+        """MembershipTimer admit set for ``chash``, in candidate order.
+
+        Array-resident replacement for the per-candidate timer walk:
+        judged candidates are a boolean lane pair (``known``/``admit``)
+        carried across ticks by the donor machinery, so a steady-state
+        pass verifies nothing and costs one ``nonzero``. Unjudged
+        candidates (window newcomers, or rows invalidated by
+        :meth:`evict_timer` after a repair) get their stored claim proofs
+        verified in one ``verify_selection_batch`` call; a candidate with
+        no view for ``chash`` is judged not-admitted, exactly like the
+        per-candidate walk it replaces."""
+        n = len(self.candidates)
+        if self._timer_known is None or self._timer_chash != chash:
+            self._timer_known = np.zeros(n, bool)
+            self._timer_admit = np.zeros(n, bool)
+            self._timer_chash = chash
+        known = self._timer_known
+        admit = self._timer_admit
+        fresh = np.nonzero(~known)[0]
+        if fresh.size:
+            proofs: list = []
+            owners: list[int] = []
+            for i in fresh:
+                c = self.candidates[int(i)]
+                if c.groups.get(chash) is None:
+                    continue
+                for proof in c.claim_proofs_by_chash.get(chash, {}).values():
+                    proofs.append(proof)
+                    owners.append(int(i))
+            if proofs:
+                ok = verify_selection_batch(
+                    self.registry, proofs, [self.anchor] * len(proofs),
+                    self.r_target, self.n_nodes)
+                np.logical_or.at(admit, owners, ok)
+            known[fresh] = True
+        return [self.candidates[int(i)].nid for i in np.nonzero(admit)[0]]
+
+    def evict_timer(self, nids) -> None:
+        """Invalidate the timer verdicts of ``nids`` (membership changed:
+        a repair stored fresh proofs, so they must be re-judged)."""
+        if self._timer_known is None:
+            return
+        idx = self._nid_idx
+        if idx is None:
+            idx = self._nid_idx = {c.nid: i
+                                   for i, c in enumerate(self.candidates)}
+        for nid in nids:
+            i = idx.get(nid)
+            if i is not None:
+                self._timer_known[i] = False
+                self._timer_admit[i] = False
+
+    def compact(self, alive_set: set) -> None:
+        """Reaper sweep: drop candidate rows of reaped nids.
+
+        Donor reuse is nid-matched, so removing rows never changes what a
+        successor round copies — it only unpins the dead ``Node`` objects
+        (fragments included) this round would otherwise keep alive
+        forever in the cumulative donor map."""
+        cands = self.candidates
+        keep = [i for i, c in enumerate(cands) if c.nid in alive_set]
+        if len(keep) == len(cands):
+            return
+        self.candidates = [cands[i] for i in keep]
+        self.dists = [self.dists[i] for i in keep]
+        if self.thresholds is not None:
+            self.thresholds = [self.thresholds[i] for i in keep]
+        if self._sks is not None:
+            self._sks = [self._sks[i] for i in keep]
+        sel_rows = np.asarray(keep, np.int64)
+        if self._words is not None:
+            self._words = self._words[sel_rows]
+            self._thr_hi = self._thr_hi[sel_rows]
+        if self._timer_known is not None:
+            self._timer_known = self._timer_known[sel_rows]
+            self._timer_admit = self._timer_admit[sel_rows]
+        self._nid_idx = None
 
     def responders(self, fragment_hash: int, exclude=()) -> list:
         """One Locate() slot: ``[(ring_distance, node, proof), ...]`` over

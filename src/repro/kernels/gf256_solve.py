@@ -99,6 +99,85 @@ def _solve1(
             np.ones(1, bool), np.full(1, -1, np.int32))
 
 
+def gf256_rank_prefix(coeffs: np.ndarray) -> tuple[bool, int]:
+    """Minimum row prefix of ``coeffs`` (m, k) with full column rank.
+
+    Returns ``(ok, n_pull)``. ``ok`` is False iff the *whole* row set is
+    rank-deficient (``n_pull`` is then ``m``). Otherwise ``n_pull`` is the
+    smallest prefix length whose rows solve — exactly the fragment count
+    the incremental one-more-row retry loop in ``repair._pull_and_decode``
+    reaches, at rank-only cost (no payload columns):
+
+    The greedy at-or-below-diagonal pivot rule means appending rows below
+    a prefix never changes the pivots chosen *within* that prefix (pivot
+    search scans top-down, and eliminating a lower row never feeds back
+    into upper rows), so the per-prefix retry runs nest and one
+    row-echelon pass over the full matrix decides them all: the minimal
+    solving prefix is ``1 + max(original row index of any pivot)``, and
+    no prefix solves iff the full matrix is rank-deficient. Pivot choice
+    matches ``_solve1``/``gf256_gaussian_solve_ref`` exactly (first
+    nonzero at/below the diagonal).
+    """
+    a_full = np.asarray(coeffs, np.uint8)
+    m, k = a_full.shape
+    if m < k:
+        return False, m
+    exp2, log2 = _EXP2, _LOG2
+    # Fast path: eliminate the k x k prefix alone. Pivot search scans
+    # top-down, so as long as every column finds a pivot inside the first
+    # k rows the full-matrix pass would choose the identical pivots (rows
+    # below k are reachable only once the prefix runs out of nonzeros in
+    # a column) — and then every pivot's original row index is < k, so
+    # ``deep`` is decided by the prefix too. Rows k..m-1 receive the same
+    # eliminations in the full pass but never feed back into the prefix,
+    # so skipping them changes nothing. ~1/255 of random draws miss a
+    # prefix pivot and fall through to the full pass below.
+    a = a_full[:k].copy()
+    orig = np.arange(k)
+    deep = 0
+    prefix_ok = True
+    for col in range(k):
+        nz = a[col:, col] != 0
+        if not nz.any():
+            prefix_ok = False
+            break
+        piv = col + int(np.argmax(nz))
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            orig[[col, piv]] = orig[[piv, col]]
+        if orig[col] >= deep:
+            deep = int(orig[col]) + 1
+        if col + 1 < k:
+            below = a[col + 1:]
+            row = a[col]
+            below ^= exp2[log2[below[:, col]][:, None]
+                          + (log2[row] + (255 - int(log2[row[col]])))]
+    if prefix_ok:
+        return True, deep
+    a = a_full.copy()
+    orig = np.arange(m)
+    deep = 0
+    for col in range(k):
+        nz = a[col:, col] != 0
+        if not nz.any():
+            return False, m
+        piv = col + int(np.argmax(nz))
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            orig[[col, piv]] = orig[[piv, col]]
+        if orig[col] >= deep:
+            deep = int(orig[col]) + 1
+        if col + 1 < m:
+            below = a[col + 1:]
+            # row-echelon only: rank and pivot order never depend on the
+            # rows above the diagonal, so skip the Jordan half. Fused
+            # sentinel-log gather as in _solve1 (zero factors propagate).
+            row = a[col]
+            below ^= exp2[log2[below[:, col]][:, None]
+                          + (log2[row] + (255 - int(log2[row[col]])))]
+    return True, deep
+
+
 def gf256_solve_one(
     coeffs: np.ndarray, symbols: np.ndarray
 ) -> tuple[np.ndarray, bool, int]:

@@ -19,6 +19,12 @@ def run_py(code: str, devices: int = 1, timeout: int = 300) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = str(SRC)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    # never share a persistent compilation cache across device counts:
+    # the cache key does not cover the host topology flag, and replaying
+    # a foreign-topology entry yields corrupted outputs
+    cache = env.get("JAX_COMPILATION_CACHE_DIR")
+    if cache:
+        env["JAX_COMPILATION_CACHE_DIR"] = f"{cache}-sub-d{devices}"
     out = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env=env, timeout=timeout,

@@ -12,7 +12,8 @@ import pytest
 from repro.core.rateless import (RLNC, InsufficientFragments,
                                  gf256_gaussian_solve,
                                  gf256_gaussian_solve_ref)
-from repro.kernels.gf256_solve import gf256_solve_batch, gf256_solve_np
+from repro.kernels.gf256_solve import (gf256_rank_prefix, gf256_solve_batch,
+                                       gf256_solve_np)
 
 
 def _ref_outcome(a, y, k):
@@ -143,6 +144,100 @@ def test_scalar_delegate_message_is_exact():
     with pytest.raises(InsufficientFragments,
                        match=r"rank-deficient at column 4$"):
         gf256_gaussian_solve_ref(a, y, 5)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel"])
+def test_mixed_systems_one_padded_dispatch(backend):
+    """Full-rank, rank-deficient, and permuted-pivot systems of different
+    row counts, stacked into ONE padded ``gf256_solve_batch`` dispatch —
+    each lane must reproduce the *unpadded* scalar-reference outcome
+    exactly (the SolvePool flush rides on this padding contract)."""
+    rng = np.random.default_rng(11)
+    k, L = 8, 53
+    systems = []
+    # full-rank rectangular (random uint8 k x k is ~97% full rank; build
+    # until one verifiably solves)
+    while True:
+        a = rng.integers(0, 256, (k + 2, k), dtype=np.uint8)
+        if _ref_outcome(a, np.zeros((k + 2, L), np.uint8), k)[0] is not None:
+            break
+    systems.append(a)
+    # rank-deficient: an all-zero column can never pivot
+    a = rng.integers(0, 256, (k + 1, k), dtype=np.uint8)
+    a[:, 5] = 0
+    systems.append(a)
+    # rank-deficient square: duplicated row
+    a = rng.integers(0, 256, (k, k), dtype=np.uint8)
+    a[k - 1] = a[2]
+    systems.append(a)
+    # permuted pivot: zero diagonal forces below-diagonal row swaps
+    a = rng.integers(0, 256, (k + 3, k), dtype=np.uint8)
+    a[np.arange(k), np.arange(k)] = 0
+    systems.append(a[np.random.default_rng(7).permutation(k + 3)])
+    ys = [rng.integers(0, 256, (a.shape[0], L), dtype=np.uint8)
+          for a in systems]
+    mmax = max(a.shape[0] for a in systems)
+    batch_a = np.zeros((len(systems), mmax, k), np.uint8)
+    batch_y = np.zeros((len(systems), mmax, L), np.uint8)
+    for i, (a, y) in enumerate(zip(systems, ys)):
+        batch_a[i, :a.shape[0]] = a
+        batch_y[i, :a.shape[0]] = y
+    x, ok, fail = gf256_solve_batch(batch_a, batch_y, backend=backend)
+    for i, (a, y) in enumerate(zip(systems, ys)):
+        want, want_fail = _ref_outcome(a, y, k)  # UNPADDED reference
+        if want is None:
+            assert not ok[i], i
+            assert fail[i] == want_fail, (i, fail[i], want_fail)
+        else:
+            assert ok[i] and fail[i] == -1, i
+            np.testing.assert_array_equal(x[i], want, err_msg=str(i))
+    assert ok.tolist() == [True, False, False, True]
+
+
+def _retry_prefix_ref(a, k):
+    """PR 4's incremental one-more-fragment retry, run literally: the
+    smallest row prefix >= k the scalar reference solves, or failure once
+    rows run out."""
+    y = np.zeros((a.shape[0], 1), np.uint8)
+    for m in range(k, a.shape[0] + 1):
+        try:
+            gf256_gaussian_solve_ref(a[:m], y[:m], k)
+            return True, m
+        except InsufficientFragments:
+            continue
+    return False, a.shape[0]
+
+
+def test_rank_prefix_matches_incremental_retry_loop():
+    """``gf256_rank_prefix`` must decide, in one elimination pass, exactly
+    the prefix the incremental retry loop reaches — the inline repair
+    rank decision (and hence the RNG stream) rides on this equality."""
+    rng = np.random.default_rng(12)
+    k = 8
+    cases = []
+    for _ in range(40):  # random rectangular, mostly clean prefixes
+        cases.append(rng.integers(0, 256, (k + 4, k), dtype=np.uint8))
+    for _ in range(10):  # singular k-prefix, cured by a later row
+        a = rng.integers(0, 256, (k + 4, k), dtype=np.uint8)
+        a[k - 1] = a[0] ^ a[1]  # prefix a[:k] has rank k-1
+        cases.append(a)
+    for _ in range(10):  # permuted pivots inside the prefix
+        a = rng.integers(0, 256, (k + 4, k), dtype=np.uint8)
+        a[np.arange(k), np.arange(k)] = 0
+        cases.append(a)
+    a = rng.integers(0, 256, (k + 4, k), dtype=np.uint8)
+    a[:, 3] = 0  # never solvable: dead column
+    cases.append(a)
+    a = rng.integers(0, 256, (k - 2, k), dtype=np.uint8)
+    cases.append(a)  # fewer rows than k: immediate failure
+    n_deep, n_fail = 0, 0
+    for i, a in enumerate(cases):
+        ok, n = gf256_rank_prefix(a)
+        want_ok, want_n = _retry_prefix_ref(a, k)
+        assert (ok, n) == (want_ok, want_n), (i, ok, n, want_ok, want_n)
+        n_deep += ok and n > k
+        n_fail += not ok
+    assert n_deep >= 10 and n_fail >= 2  # both hard paths were exercised
 
 
 def test_kernel_and_numpy_backends_agree_on_large_batch():

@@ -13,6 +13,7 @@ import dataclasses
 
 import pytest
 
+from repro.core import rateless as rl
 from repro.core.protocol_sim import ProtocolParams, run_protocol
 from repro.core.vrf import ArxVRFRegistry
 
@@ -41,12 +42,29 @@ def _assert_bounded(t: int, net) -> None:
     if isinstance(reg, ArxVRFRegistry):
         assert len(reg._words) <= n + 1
         assert len(reg._sk_words) <= n + 1
+    # coeff-row memo: one row per (chunk, fragment index) with an alive
+    # holder (fail_node evicts the dead holder's rows — same hook as the
+    # VRF registry eviction) plus one outer-code row per (object, chunk),
+    # which are population-independent. Never grows with cumulative
+    # deaths.
+    live_frags = sum(len(node.fragments) for node in net.nodes.values())
+    outer_rows = _CHURN.n_objects * _CHURN.n_chunks
+    assert rl._coeff_row.cache_info().currsize <= live_frags + outer_rows
+    # cumulative Locate() donor state: dead candidate rows survive only
+    # until the next row-table compaction, so per round they are bounded
+    # by the compaction trigger (deaths since the last sweep), never by
+    # the cumulative death count
+    dead_cap = max(64, n) + 1
+    for cache in (net._locate_cache, net._locate_prev):
+        for lr in cache.values():
+            assert sum(1 for c in lr.candidates if not c.alive) <= dead_cap
 
 
 @pytest.mark.parametrize("engine", ["reference", "vectorized"])
 @pytest.mark.parametrize("vrf", ["hash", "arx"])
 def test_state_bounded_under_churn(engine, vrf):
     p = dataclasses.replace(_CHURN, vrf=vrf)
+    rl._coeff_row.cache_clear()  # module-global memo: isolate this run
     ever: set[int] = set()
 
     def probe(t, net):
