@@ -17,6 +17,7 @@ def main() -> int:
         durability_model,
         engine_speed,
         fault_tolerance,
+        fig_serving,
         fragment_trace,
         latency,
         protocol_speed,
@@ -31,6 +32,7 @@ def main() -> int:
         ("fig6_fault_tolerance", fault_tolerance.run),
         ("fig789_latency", latency.run),
         ("fig10_coding_micro", coding_micro.run),
+        ("fig_serving", fig_serving.run),
         ("selection_micro", selection_micro.run),
         ("durability_model", durability_model.run),
         ("engine_speed", engine_speed.run),

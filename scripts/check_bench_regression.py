@@ -30,6 +30,7 @@ GATED = {
     "steps_per_s": True,
     "samples_per_s": True,
     "node_ticks_per_s": True,
+    "reads_per_s": True,
     "speedup_vs_loop": True,
     "speedup_best": True,
     "engine_s": False,

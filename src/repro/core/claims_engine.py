@@ -177,6 +177,12 @@ class ClaimsEngine:
             return
         vcap = pool.vcap if V <= pool.vcap else _cap(V)
         ccap = pool.ccap if Cn <= pool.ccap else _cap(Cn)
+        # viewers lead the column order, so round()'s viewer-viewer block
+        # slice ``P3[:, :, :vcap]`` needs ccap >= vcap. Column-only growth
+        # (_patch light path) can push ccap ahead of vcap; a later
+        # viewer-side grow that crosses vcap but not ccap must not leave
+        # the column slab narrower than the viewer slab.
+        ccap = max(ccap, vcap)
         new = _Pool(pool.n, vcap, ccap)
         new.P3[:, :pool.vcap, :pool.ccap] = pool.P3
         new.claim3[:, :pool.vcap] = pool.claim3

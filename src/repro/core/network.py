@@ -172,6 +172,13 @@ class SimNetwork:
         self.now = 0.0  # seconds
         self.repair_traffic_bytes = 0
         self.repair_count = 0
+        # per-tick byte load on each geo region's links: repair pulls,
+        # warm-cache fragment ships and serving reads all charge the
+        # holder's region here, so the two traffic classes compete for the
+        # same links. Reset by the simulation loop at the start of every
+        # tick; read by the serving layer's congestion model
+        # (``protocol_sim._serve_tick``). Pure accounting — no RNG.
+        self.region_load = np.zeros(len(REGIONS), np.float64)
         # count of cache_chunk writes ever made: while zero (cache_ttl=0
         # runs — the default), repair's warm-holder scan is provably a
         # no-op and is skipped wholesale

@@ -213,3 +213,68 @@ def kill_cost(honest, k_inner, frags_per_node, xp=jnp):
     nodes (the attack budget is ``attack_frac · n_nodes``)."""
     cost = xp.maximum(honest - k_inner + 1.0, 0.0)
     return cost / xp.maximum(frags_per_node, 1.0)
+
+
+# ---------------------------------------------------------- serving arithmetic
+# The request-serving workload layer (ROADMAP item 3). Both tiers serve
+# Zipf-popular whole-object Get() requests each step and classify every
+# request into exactly one of four disjoint buckets (priority order):
+#
+#   failed    — fewer than K_outer chunks readable: the read cannot
+#               complete (includes groups behind an eclipse cut);
+#   degraded  — completes, but at least one chunk group is dead or
+#               eclipsed, so the client fans wider and pays an extra hop;
+#   hit       — completes entirely from warm cached chunk copies;
+#   miss      — completes via fragment pulls + GF(256) decode.
+#
+# Latency is measured in *hops* (request→holder round trips), not sampled
+# RTTs, so both tiers produce the same deterministic quantity:
+# cache hit = anchor walk + cached-chunk pull (2), miss adds the
+# fragment-gather round (3), degraded adds one more fan-out round (4).
+# Per-region bandwidth caps stretch hops multiplicatively (congestion),
+# which is how repair and serving compete for the same links.
+
+#: Hop cost of a cache-hit read: candidate walk + whole-chunk pull.
+SERVE_HOPS_HIT = 2.0
+#: Hop cost of a decode-path read: walk + parallel fragment gather + decode.
+SERVE_HOPS_MISS = 3.0
+#: Extra hop a degraded read pays to fan out past dead/eclipsed groups.
+SERVE_HOPS_DEGRADED_EXTRA = 1.0
+#: Bins of the retrieval-hop histogram; effective hops clip to the last bin.
+SERVE_HIST_BINS = 16
+#: Bandwidth fault domains — one per ``network.REGIONS`` entry.
+N_BW_REGIONS = 5
+
+
+def zipf_weights(obj_idx, zipf_alpha, n_objects, xp=jnp):
+    """Zipf(α) popularity weights over objects, normalized to sum 1.
+
+    ``obj_idx`` ranks objects by popularity (0 = hottest, weight
+    ``(i+1)^-α``); indices ≥ ``n_objects`` (grid padding) get weight 0 and
+    the rest renormalize over the active objects only.  ``zipf_alpha = 0``
+    degenerates to uniform popularity.
+    """
+    rank = xp.asarray(obj_idx, dtype=xp.float32) + 1.0
+    w = rank ** -xp.asarray(zipf_alpha, dtype=xp.float32)
+    w = xp.where(obj_idx < n_objects, w, 0.0)
+    return w / xp.maximum(w.sum(), 1e-30)
+
+
+def congestion_factor(load_units, region_cap, xp=jnp):
+    """Latency stretch of a bandwidth region carrying ``load_units``.
+
+    ``region_cap`` is the per-region per-step capacity in object units
+    (0 or negative disables the model).  Under the cap the factor is 1;
+    above it, hops stretch linearly with the overload ratio — the M/D/1
+    heavy-traffic asymptote both tiers share.
+    """
+    cap = xp.asarray(region_cap, dtype=xp.float32)
+    ratio = load_units / xp.maximum(cap, 1e-30)
+    return xp.where(cap > 0.0, xp.maximum(ratio, 1.0), 1.0)
+
+
+def effective_hops(hops, factor, xp=jnp):
+    """Histogram bin of a read with base ``hops`` under congestion
+    ``factor``: ``round(hops · factor)`` clipped to the last bin."""
+    e = xp.round(hops * factor)
+    return xp.clip(e, 0.0, SERVE_HIST_BINS - 1.0)

@@ -49,6 +49,14 @@ Correspondence to the engine's abstraction, and the known deltas
   docstring); ``repair_traffic_units`` converts bytes to object-size units
   with the group's true fragment length, so it is directly comparable to
   the engine's ``deficit · K_inner / (K_outer · K_inner)`` bookkeeping.
+* **Serving** — with ``read_rate > 0`` every tick additionally serves a
+  sampled batch of Zipf-popular client Get() requests end to end (cache
+  probe → Locate() walk → fragment pulls → GF(256) decode through the
+  same ``repair.decode_from_available`` core), classified
+  hit/miss/degraded/failed exactly like the engine's closed-form serving
+  model and charged against per-region link budgets that repair traffic
+  shares (see :func:`_serve_tick`). Serving draws only from a dedicated
+  RNG stream, so every pre-serving trace is bit-identical.
 * **Group death is emergent, not flagged**: a group is alive iff its
   honest alive members hold ``≥ K_inner`` distinct fragment indices
   (decode possible). With caches disabled death is absorbing exactly like
@@ -74,9 +82,16 @@ from repro.core import claims_engine as CE
 from repro.core import group as G
 from repro.core import policies as P
 from repro.core import repair as R
-from repro.core.network import Node, SimNetwork
-from repro.core.vault import VaultClient
+from repro.core.network import REGIONS, Node, SimNetwork
+from repro.core.rateless import InsufficientFragments
+from repro.core.vault import VaultClient, gather_available
 from repro.core.vrf import RING
+
+# dedicated RNG stream tag for the serving layer (seeded as
+# ``(p.seed, _SERVE_STREAM)``): serving never draws from ``rng`` or
+# ``net.rng``, so a ``read_rate=0`` run is bit-identical to one predating
+# the serving layer (pinned by tests/test_protocol_golden.py)
+_SERVE_STREAM = 0x5E17
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +125,9 @@ class ProtocolParams:
     attack_frac: float = 0.0
     attack_step: int = 0
     eclipse_steps: int = 0  # partition window length (eclipse policy)
+    read_rate: float = 0.0  # client Get() requests per step (serving layer)
+    zipf_alpha: float = 1.1  # object-popularity skew (policies.zipf_weights)
+    region_cap: float = 0.0  # per-region link budget, object units/step; 0=∞
     claim_every: int = 1  # persistence-claim broadcast period (steps)
     vrf: str = "hash"  # selection-proof registry backend (vrf.make_registry)
     seed: int = 0
@@ -133,6 +151,8 @@ class ProtocolParams:
             burst_prob=self.burst_prob, burst_mult=self.burst_mult,
             adapt_boost=self.adapt_boost, attack_frac=self.attack_frac,
             attack_step=self.attack_step, eclipse_steps=self.eclipse_steps,
+            read_rate=self.read_rate, zipf_alpha=self.zipf_alpha,
+            region_cap=self.region_cap,
         )
         kw.update(overrides)
         return kw
@@ -161,6 +181,17 @@ class ProtocolResult(NamedTuple):
     loss_events: tuple           # ((step, object_index), ...) first losses
     n_groups: int
     repair_attempts: int         # repair calls that regenerated ≥1 fragment
+    # ---- serving layer (mirrors the engine's serving fields) -------------
+    reads_issued: int            # Get() requests sampled over the run
+    reads_hit: int               # served entirely from warm chunk caches
+    reads_miss: int              # served via fragment pulls + decode
+    reads_degraded: int          # served with < n_chunks readable chunks
+    reads_failed: int            # < k_outer readable chunks: unreadable
+    served_traffic_units: float  # object-size units shipped to clients
+    serve_hop_hist: np.ndarray   # [policies.SERVE_HIST_BINS] reads per
+    #                              congestion-stretched hop count
+    serve_trace: np.ndarray      # [steps, 5] per-tick (issued, hit, miss,
+    #                              degraded, failed) — golden-pinned
 
 
 def rush_picker(net: SimNetwork, boost: float):
@@ -491,6 +522,122 @@ def _repair_tick(net: SimNetwork, p: ProtocolParams, registry: dict,
     return traffic_units, repairs, hits, attempts
 
 
+def _serve_tick(net: SimNetwork, p: ProtocolParams, serve_rng, oids,
+                zipf_w: np.ndarray, frag_len0: int,
+                pool: "R.SolvePool | None" = None):
+    """One serving tick: sample ``round(read_rate)`` Zipf-popular Get()
+    requests and serve each end to end — cache probe → DHT candidate walk
+    (Locate()) → fragment pulls → GF(256) decode via the shared
+    ``repair.decode_from_available`` core — classifying every request
+    hit / miss / degraded / failed exactly like the engine's closed-form
+    serving model (``scenarios._vault_serve``).
+
+    The read path within one tick is deterministic: candidate walks,
+    cache probes and decode pull counts are pure functions of network
+    state, with no RNG anywhere (``net.rng`` is never touched). Requests
+    for the same object are therefore evaluated **once** and weighted by
+    their sampled multiplicity — millions of issued reads cost at most
+    ``n_objects`` end-to-end evaluations per tick. The only randomness is
+    the dedicated ``serve_rng`` (object popularity sampling), so serving
+    never perturbs the churn/claims/repair stream.
+
+    Accounting mirrors the engine: a failed read ships nothing; a served
+    read ships its ``k_outer`` chosen chunks (cached chunks whole, missed
+    chunks as the decode's ``n_pull`` fragments — ~1 object unit either
+    way). Base hop counts come from ``policies`` (hit 2, miss 3, degraded
+    +1); the congestion pass then stretches each read by the worst
+    oversubscription among the regions it touched, where per-region load
+    is this tick's repair bytes (``net.region_load``, charged by
+    repair.py) plus the serving bytes charged here — repair and serving
+    compete for the same links. ``region_cap <= 0`` disables the stretch.
+
+    Returns ``(counts, served_units, hist)`` with ``counts`` the int64
+    5-vector ``(issued, hit, miss, degraded, failed)`` and ``hist`` the
+    ``SERVE_HIST_BINS`` effective-hop histogram of completed reads.
+    """
+    m = int(round(p.read_rate))
+    counts = np.zeros(5, np.int64)
+    hist = np.zeros(P.SERVE_HIST_BINS, np.int64)
+    served_units = 0.0
+    if m <= 0:
+        return counts, served_units, hist
+    frag_units = 1.0 / (p.k_outer * p.k_inner)
+    counts[0] = m
+    mult = np.bincount(serve_rng.choice(len(oids), size=m, p=zipf_w),
+                       minlength=len(oids))
+    serve_bytes = np.zeros(len(REGIONS))
+    pending = []  # (count, base hops, touched regions) for the stretch pass
+    for o in np.nonzero(mult)[0]:
+        cnt = int(mult[o])
+        ok_chunks = []  # (hops, units, cached, {region: bytes})
+        for chash in oids[int(o)].chunk_hashes:
+            # cache probe first: any reachable candidate with a warm chunk
+            # copy serves the whole chunk (the scan is skipped while no
+            # cache_chunk write has ever landed, as in repair_group)
+            warm = None
+            if net.chunk_caches:
+                cands = net.candidates(C.hash_point(chash),
+                                       min(4 * p.r_inner, net.n_nodes))
+                warm = next((c for c in cands
+                             if c.cached_chunk(chash) is not None), None)
+            if warm is not None:
+                nbytes = len(warm.cached_chunk(chash))
+                ok_chunks.append((P.SERVE_HOPS_HIT,
+                                  nbytes / frag_len0 * frag_units, True,
+                                  {warm.region: nbytes}))
+                continue
+            rows, _holders = gather_available(net, chash, p.r_inner)
+            if len(rows) < p.k_inner:
+                continue  # chunk unreadable this tick
+            try:
+                _chunk, n_pull = R.decode_from_available(
+                    chash, p.k_inner, rows, pool=pool)
+            except InsufficientFragments:
+                continue  # reachable rows never reach rank k_inner
+            rbytes: dict[int, int] = {}
+            nbytes = 0
+            for _, payload, holder in rows[:n_pull]:
+                nbytes += len(payload)
+                rbytes[holder.region] = (rbytes.get(holder.region, 0)
+                                         + len(payload))
+            ok_chunks.append((P.SERVE_HOPS_MISS,
+                              nbytes / frag_len0 * frag_units, False,
+                              rbytes))
+        if len(ok_chunks) < p.k_outer:
+            counts[4] += cnt  # failed: object unreadable, nothing shipped
+            continue
+        degraded = len(ok_chunks) < p.n_chunks
+        # the client takes the cheapest k_outer chunks — cached ones first
+        # (stable sort: chunk order breaks ties deterministically)
+        ok_chunks.sort(key=lambda c: c[0])
+        chosen = ok_chunks[:p.k_outer]
+        if degraded:
+            counts[3] += cnt
+        elif all(c[2] for c in chosen):
+            counts[1] += cnt
+        else:
+            counts[2] += cnt
+        hops = max(c[0] for c in chosen) + (
+            P.SERVE_HOPS_DEGRADED_EXTRA if degraded else 0.0)
+        served_units += cnt * sum(c[1] for c in chosen)
+        touched: set[int] = set()
+        for c in chosen:
+            for reg, b in c[3].items():
+                serve_bytes[reg] += cnt * b
+                touched.add(reg)
+        pending.append((cnt, hops, touched))
+    # congestion pass: this tick's repair bytes (net.region_load) and the
+    # serving bytes above share the links; each completed read is
+    # stretched by the worst factor among the regions it touched
+    region_units = (net.region_load + serve_bytes) * frag_units / frag_len0
+    factor = np.asarray(P.congestion_factor(region_units, p.region_cap,
+                                            xp=np), np.float64)
+    for cnt, hops, touched in pending:
+        f = max((float(factor[reg]) for reg in touched), default=1.0)
+        hist[int(P.effective_hops(hops, f, xp=np))] += cnt
+    return counts, float(served_units), hist
+
+
 def run_protocol(p: ProtocolParams, engine: str = "vectorized",
                  probe=None) -> ProtocolResult:
     """Run one seeded protocol-level simulation end to end.
@@ -555,6 +702,18 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
     p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
     p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
 
+    serve_on = p.read_rate > 0 and p.n_objects > 0
+    serve_rng = zipf_w = None
+    frag_len0 = next(iter(frag_len.values())) if frag_len else 1
+    if serve_on:
+        serve_rng = np.random.default_rng((p.seed, _SERVE_STREAM))
+        zw = np.asarray(P.zipf_weights(np.arange(p.n_objects), p.zipf_alpha,
+                                       p.n_objects, xp=np), np.float64)
+        zipf_w = zw / zw.sum()
+    serve_trace = np.zeros((p.steps, 5), np.int64)
+    serve_hist = np.zeros(P.SERVE_HIST_BINS, np.int64)
+    served_units = 0.0
+
     n_groups = len(registry)  # object-major: group g belongs to object
     honest_tr = np.zeros((p.steps, n_groups), np.int64)  # g // n_chunks
     byz_tr = np.zeros((p.steps, n_groups), np.int64)
@@ -569,6 +728,7 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
     claims = CE.ClaimsEngine(net) if vec else None
     for t in range(p.steps):
         net.now += p.step_hours
+        net.region_load[:] = 0.0  # per-tick link budgets (repair + serving)
         if adv_id == P.ADV_ECLIPSE:
             in_window = p.attack_step <= t < p.attack_step + p.eclipse_steps
             net.eclipse = segment if in_window else None
@@ -593,6 +753,14 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
         repairs += rp
         cache_hits += ch
         attempts += at
+        if serve_on:
+            cnts, su, hadd = _serve_tick(net, p, serve_rng, oids, zipf_w,
+                                         frag_len0, pool=pool)
+            serve_trace[t] = cnts
+            serve_hist += hadd
+            served_units += su
+            if pool is not None:
+                pool.flush()  # serving's own deferred decode systems
         honest, byz, alive = _census(net, registry, p.k_inner)
         honest_tr[t] = honest
         byz_tr[t] = byz
@@ -630,6 +798,14 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
         loss_events=tuple(loss_events),
         n_groups=n_groups,
         repair_attempts=int(attempts),
+        reads_issued=int(serve_trace[:, 0].sum()),
+        reads_hit=int(serve_trace[:, 1].sum()),
+        reads_miss=int(serve_trace[:, 2].sum()),
+        reads_degraded=int(serve_trace[:, 3].sum()),
+        reads_failed=int(serve_trace[:, 4].sum()),
+        served_traffic_units=float(served_units),
+        serve_hop_hist=serve_hist,
+        serve_trace=serve_trace,
     )
 
 
@@ -651,7 +827,9 @@ def summarize(results: list) -> dict:
     out = {}
     for field in ("repair_traffic_units", "repairs", "cache_hits",
                   "lost_objects", "lost_fraction", "final_honest_mean",
-                  "honest_min", "members_max"):
+                  "honest_min", "members_max", "reads_issued", "reads_hit",
+                  "reads_miss", "reads_degraded", "reads_failed",
+                  "served_traffic_units"):
         m, ci = mean_ci(np.array([getattr(r, field) for r in results],
                                  np.float64))
         out[field] = (float(m), float(ci))

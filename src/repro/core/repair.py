@@ -198,6 +198,65 @@ class SolvePool:
         return self.flushed
 
 
+def decode_from_available(
+    chash: bytes, k_inner: int,
+    available: list[tuple[int, bytes, "Node"]],
+    pool: SolvePool | None = None,
+) -> tuple[bytes, int]:
+    """Decode one chunk from an ordered ``(index, payload, holder)`` list.
+
+    The shared decode core of repair pulls and serving reads
+    (``protocol_sim._serve_tick``). The pull starts at exactly ``k_inner``
+    fragments in list order. About 1 in 255 index combinations is
+    rank-deficient over GF(256); since the order is stable, a group that
+    hits one would otherwise retry the *same* singular set every tick
+    forever — a deterministic repair livelock that, at 1K+ nodes,
+    snowballed into a network-wide repair storm (the PR 3 scalar path has
+    the same latent bug; it simply never ran at a scale that exposed it).
+    On rank deficiency one more fragment is pulled and the decode retried
+    — exactly what a real reader does when a decode fails.
+
+    With ``pool`` (the vectorized tick), repeat decodes of a memoized
+    chunk compute only the pull count inline (``gf256_rank_prefix``
+    reaches the same count as the retry loop — see its docstring for the
+    nesting argument) and defer the payload solve to the tick-end batched
+    dispatch; the returned ``n_pull`` is identical either way.
+
+    Returns ``(chunk, n_pull)``; raises InsufficientFragments when the
+    available rows never reach rank ``k_inner``. No RNG anywhere.
+    """
+    chunk = pool.chunks.get(chash) if pool is not None else None
+    if chunk is None:
+        n_pull = k_inner
+        while True:
+            frags = {idx: payload for idx, payload, _ in available[:n_pull]}
+            try:
+                chunk = C.inner_decode(chash, k_inner, frags)
+                break
+            except InsufficientFragments:
+                if n_pull >= len(available):
+                    raise
+                n_pull += 1  # rank-deficient combination: pull one more
+        if pool is not None:
+            pool.chunks[chash] = chunk
+    else:
+        from repro.kernels.gf256_solve import gf256_rank_prefix
+
+        code = C.inner_code(chash, k_inner)
+        coeffs = code.coeff_matrix([idx for idx, _, _ in available])
+        ok, n_pull = gf256_rank_prefix(coeffs)
+        if not ok:
+            # same condition under which the retry loop exhausts
+            # ``available`` and re-raises the decode failure
+            raise InsufficientFragments(
+                f"rank-deficient pull: rank < {k_inner} over "
+                f"{len(available)} fragments")
+        symbols = np.stack([np.frombuffer(p, np.uint8)
+                            for _, p, _ in available[:n_pull]])
+        pool.enqueue(chash, k_inner, coeffs[:n_pull], symbols, n_pull)
+    return chunk, n_pull
+
+
 def _pull_and_decode(
     net: SimNetwork, requester: Node, chash: bytes, meta: GroupMeta,
     members: list[Node], pool: SolvePool | None = None,
@@ -205,24 +264,11 @@ def _pull_and_decode(
     """New member pulls >= K_inner fragments, decodes, verifies the chunk.
 
     Returns (chunk, traffic_bytes, latency_s). Raises InsufficientFragments
-    if the view cannot supply enough fragments.
-
-    The pull starts at exactly ``K_inner`` fragments (the paper's minimum
-    repair amplification) in view order. About 1 in 255 index
-    combinations is rank-deficient over GF(256); since the view order is
-    stable, a group that hits one would otherwise retry the *same*
-    singular set every tick forever — a deterministic repair livelock
-    that, at 1K+ nodes, snowballed into a network-wide repair storm (the
-    PR 3 scalar path has the same latent bug; it simply never ran at a
-    scale that exposed it). On rank deficiency the requester pulls
-    additional fragments one at a time and retries — exactly what a real
-    repairer does when a decode fails — with the extra traffic charged.
-
-    With ``pool`` (the vectorized tick), repeat decodes of a memoized
-    chunk compute only the pull count inline (``gf256_rank_prefix``
-    reaches the same count as the retry loop — see its docstring for the
-    nesting argument) and defer the payload solve to the tick-end batched
-    dispatch; traffic, holders and RTT draws are unchanged either way.
+    if the view cannot supply enough fragments. The decode itself (minimum
+    ``K_inner``-fragment pull, one-more-row rank-deficiency retries, the
+    SolvePool memo shortcut) lives in :func:`decode_from_available`;
+    traffic, per-region link charges, holders and RTT draws are accounted
+    here and are unchanged by the pool path.
     """
     available: list[tuple[int, bytes, Node]] = []
     seen: set[int] = set()
@@ -235,37 +281,13 @@ def _pull_and_decode(
         raise InsufficientFragments(
             f"repair: {len(available)}/{meta.k_inner} fragments reachable"
         )
-    chunk = pool.chunks.get(chash) if pool is not None else None
-    if chunk is None:
-        n_pull = meta.k_inner
-        while True:
-            frags = {idx: payload for idx, payload, _ in available[:n_pull]}
-            try:
-                chunk = C.inner_decode(chash, meta.k_inner, frags)
-                break
-            except InsufficientFragments:
-                if n_pull >= len(available):
-                    raise
-                n_pull += 1  # rank-deficient combination: pull one more
-        if pool is not None:
-            pool.chunks[chash] = chunk
-    else:
-        from repro.kernels.gf256_solve import gf256_rank_prefix
-
-        code = C.inner_code(chash, meta.k_inner)
-        coeffs = code.coeff_matrix([idx for idx, _, _ in available])
-        ok, n_pull = gf256_rank_prefix(coeffs)
-        if not ok:
-            # same condition under which the retry loop exhausts
-            # ``available`` and re-raises the decode failure
-            raise InsufficientFragments(
-                f"rank-deficient pull: rank < {meta.k_inner} over "
-                f"{len(available)} fragments")
-        symbols = np.stack([np.frombuffer(p, np.uint8)
-                            for _, p, _ in available[:n_pull]])
-        pool.enqueue(chash, meta.k_inner, coeffs[:n_pull], symbols, n_pull)
+    chunk, n_pull = decode_from_available(chash, meta.k_inner, available,
+                                          pool=pool)
     holders = list(dict.fromkeys(m for _, _, m in available[:n_pull]))
-    traffic = sum(len(payload) for _, payload, _ in available[:n_pull])
+    traffic = 0
+    for _, payload, m in available[:n_pull]:
+        traffic += len(payload)
+        net.region_load[m.region] += len(payload)
     rtts = net.rtts(requester, holders) if holders else np.zeros(1)
     return chunk, traffic, float(np.max(rtts))
 
@@ -341,6 +363,7 @@ def repair_group(
             chunk = warm.cached_chunk(chash)
             frag = C.inner_encode_fragment(chunk, chash, meta.k_inner, index)
             stats.traffic_bytes += len(frag)
+            net.region_load[warm.region] += len(frag)
             stats.cache_hits += 1
             lat += net.rtt(new_member, warm)
         else:

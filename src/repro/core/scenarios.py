@@ -22,7 +22,12 @@ this engine); see that module's docstring for the full catalogue:
 * adversary: ``"static"`` (Fig. 6), ``"adaptive"`` re-join (BFT-DSN
   style), ``"targeted"`` greedy kill (A.3 cost model, time-resolved);
 * cache: the ``cache_ttl_hours`` knob (0 disables), identical to the
-  reference semantics (repair.py docstring / Fig. 4).
+  reference semantics (repair.py docstring / Fig. 4), with churn-aware
+  holder retirement (a copy goes cold when all its holders die);
+* serving: ``read_rate`` Zipf-popular Get() requests per step, classified
+  hit/miss/degraded/failed closed-form per object with a retrieval-hop
+  histogram and per-region bandwidth contention against repair
+  (``region_cap`` — policies.py "serving arithmetic").
 
 Public API:
 
@@ -132,6 +137,10 @@ class Scenario(NamedTuple):
     eclipse_steps: np.int32
     frags_per_node: np.float32
     replication: np.float32
+    read_rate: np.float32
+    zipf_alpha: np.float32
+    region_cap: np.float32
+    cache_churn: np.int32
     seed: np.int32
 
 
@@ -150,6 +159,14 @@ class ScenarioResult(NamedTuple):
     members_max: jnp.ndarray       # max honest+byz seen in any group
     alive_frac_trace: jnp.ndarray  # [..., max_steps] live-group fraction
     # (per step; the grid runners prepend the [n_cells, n_seeds] axes)
+    # --- serving workload (all zero when read_rate == 0) ---
+    reads_issued: jnp.ndarray      # Get() requests issued over the run
+    reads_hit: jnp.ndarray         # completed entirely from warm caches
+    reads_miss: jnp.ndarray        # completed via fragment pulls + decode
+    reads_degraded: jnp.ndarray    # completed past dead/eclipsed groups
+    reads_failed: jnp.ndarray      # < K_outer chunks readable
+    served_traffic_units: jnp.ndarray  # object units served to clients
+    serve_hop_hist: jnp.ndarray    # [..., SERVE_HIST_BINS] hop histogram
 
 
 def make_scenario(
@@ -162,6 +179,8 @@ def make_scenario(
     burst_prob: float = 0.05, burst_mult: float = 20.0,
     adapt_boost: float = 2.0, attack_frac: float = 0.0, attack_step: int = 0,
     eclipse_steps: int = 0, frags_per_node: int = 1, replication: int = 3,
+    read_rate: float = 0.0, zipf_alpha: float = 1.1,
+    region_cap: float = 0.0, cache_churn: bool = True,
     seed: int = 0,
 ) -> Scenario:
     """Build one sweep cell (all leaves traced — heterogeneous cells share
@@ -189,6 +208,16 @@ def make_scenario(
     Ceph-like baseline of
     :func:`run_replicated_grid`. ``seed`` is normally overridden by the
     grid runners' ``seeds`` axis.
+
+    Serving workload (ROADMAP item 3; 0 = off): ``read_rate`` Get()
+    requests per step over Zipf(``zipf_alpha``) object popularity, served
+    closed-form inside the scan body; ``region_cap`` per-bandwidth-region
+    per-step capacity in object units (serving and repair compete for it,
+    stretching retrieval hops — :func:`policies.congestion_factor`).
+    ``cache_churn=False`` restores the pre-serving optimistic cache model
+    (cached copies survive their full TTL even when every holder has
+    churned out) — kept only so the regression suite can demonstrate the
+    over-credit; real sweeps should never disable it.
 
     Domain guard: ``r_inner, replication < 256`` (fast-sampler
     ``pow_int`` domain).
@@ -218,7 +247,10 @@ def make_scenario(
         attack_step=np.int32(attack_step),
         eclipse_steps=np.int32(eclipse_steps),
         frags_per_node=np.float32(frags_per_node),
-        replication=np.float32(replication), seed=np.int32(seed),
+        replication=np.float32(replication),
+        read_rate=np.float32(read_rate), zipf_alpha=np.float32(zipf_alpha),
+        region_cap=np.float32(region_cap),
+        cache_churn=np.int32(bool(cache_churn)), seed=np.int32(seed),
     )
 
 
@@ -304,7 +336,17 @@ def _vault_init(st: _Static, smp: Sampler, sc: Scenario):
     honest0 = jnp.where(active, sc.r_inner - byz0, 0.0)
     alive0 = active & (honest0 >= sc.k_inner)
     cache0 = jnp.zeros(G)  # client seeds caches at store time (t=0)
-    state = (honest0, byz0, alive0, cache0, 0.0, 0.0, 0.0, jnp.inf, 0.0)
+    # cached-copy holder count: the storing client seeds every group member
+    # (vault._store_chunk caches at all r_inner holders when the TTL is on)
+    cache_h0 = jnp.where(active & (sc.cache_ttl_hours > 0.0),
+                         sc.r_inner, 0.0)
+    zero = jnp.zeros(())
+    state = (honest0, byz0, alive0, cache0, cache_h0,
+             0.0, 0.0, 0.0, jnp.inf, 0.0,
+             # serving accumulators: issued/hit/miss/degraded/failed reads,
+             # served object units, retrieval-hop histogram
+             zero, zero, zero, zero, zero, zero,
+             jnp.zeros(P.SERVE_HIST_BINS))
     return inv, state
 
 
@@ -347,12 +389,18 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
                   inv: _Inv, state, h, b, kr, t):
     """Per-element repair + traffic half-step.
 
-    Compiled twice — ``with_cache`` True (PR 1 semantics, per-element TTL
-    blend) and False (all TTLs zero: no warm/miss bookkeeping at all) —
-    and selected by a batch-level ``lax.cond``, so cache-free sweeps skip
-    the extra [G]-wide selects and reductions entirely.
+    Compiled twice — ``with_cache`` True (per-element TTL blend, holder
+    churn on the cached copies) and False (all TTLs zero: no warm/miss
+    bookkeeping at all) — and selected by a batch-level ``lax.cond``, so
+    cache-free sweeps skip the extra [G]-wide selects and reductions
+    entirely.
+
+    Returns the repair part of the state plus the post-repair warm-cache
+    mask and this step's repair traffic, both consumed by the serving
+    stage (:func:`_vault_serve`).
     """
-    _, _, alive, cache_t, traffic, repairs, hits, hmin, mmax = state
+    (_, _, alive, cache_t, cache_h,
+     traffic, repairs, hits, hmin, mmax) = state[:10]
     now = (t + 1.0) * sc.step_hours
 
     a = alive & (h >= sc.k_inner)  # decode impossible => absorbing
@@ -373,21 +421,39 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
     t_plain = deficit.sum() * sc.k_inner * inv.frag_units
     if with_cache:
         has_cache = sc.cache_ttl_hours > 0.0
-        warm = (now - cache_t) <= sc.cache_ttl_hours
+        # churn-aware cache: holders of cached copies die like any other
+        # member, so a copy is warm only while ≥1 holder survives AND its
+        # TTL holds. cache_churn=0 freezes the holder count (the old
+        # optimistic model, kept for the leak-regression test only).
+        # Key material: a second fold at a disjoint counter (t+1+2^20), so
+        # the seven original per-step streams stay bit-identical; the arx
+        # fold is collision-free here for any horizon below 2^20 steps.
+        (kcd,) = smp.streams(smp.fold(inv.base, t + 1 + (1 << 20)), 1)
+        dead_h = smp.binom(kcd, cache_h, inv.p_fail)
+        cache_h = jnp.where(sc.cache_churn > 0,
+                            jnp.maximum(cache_h - dead_h, 0.0), cache_h)
+        warm = (((now - cache_t) <= sc.cache_ttl_hours)
+                & (cache_h >= 1.0))
         hit_frags = jnp.where(warm, deficit, jnp.maximum(deficit - 1.0, 0.0))
         miss_pulls = jnp.where(~warm & (deficit > 0), 1.0, 0.0)
         t_cached = (hit_frags.sum() * inv.frag_units
                     + miss_pulls.sum() * inv.chunk_units)
-        new_cache = jnp.where(has_cache & (miss_pulls > 0), now, cache_t)
+        refresh = has_cache & (miss_pulls > 0)
+        new_cache = jnp.where(refresh, now, cache_t)
+        # a miss-path repairer re-caches the decoded chunk: one new holder
+        new_cache_h = jnp.where(refresh, 1.0, cache_h)
         traffic_add = jnp.where(has_cache, t_cached, t_plain)
         hits_add = jnp.where(has_cache, hit_frags.sum(), 0.0)
+        warm_out = has_cache & (warm | refresh)
     else:
         new_cache = cache_t
+        new_cache_h = cache_h
         traffic_add = t_plain
         hits_add = 0.0
+        warm_out = jnp.zeros_like(a)
 
     new_state = (
-        h, b, a, new_cache,
+        h, b, a, new_cache, new_cache_h,
         traffic + traffic_add,
         repairs + deficit.sum(),
         hits + hits_add,
@@ -395,12 +461,74 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
         jnp.maximum(mmax, jnp.where(inv.active, h + b, 0.0).max()),
     )
     alive_frac = a.sum() / inv.n_groups
-    return new_state, alive_frac
+    return new_state, warm_out, traffic_add, alive_frac
+
+
+def _vault_serve(st: _Static, sc: Scenario, inv: _Inv, rep_state, warm,
+                 traffic_add, srv, t):
+    """Per-element closed-form serving half-step (traced inside a cond:
+    only executed when some batch element has ``read_rate > 0``).
+
+    ``read_rate`` Get() requests are spread over objects by Zipf(α)
+    popularity and classified per object from this step's group state
+    (disjoint buckets, priority failed > degraded > hit > miss — the same
+    rule the protocol-level ``_serve_tick`` applies per sampled request).
+    Completed reads retrieve ``K_outer`` chunks = 1 object unit. Retrieval
+    hops land in a histogram after congestion stretch: this step's repair
+    + serving units spread over ``N_BW_REGIONS`` bandwidth domains against
+    ``region_cap`` (:func:`policies.congestion_factor`).
+    """
+    issued, r_hit, r_miss, r_degr, r_fail, served, hist = srv
+    a = rep_state[2]
+    gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
+    ecl = (P.eclipse_active(sc.adv_policy, t, sc.attack_step,
+                            sc.eclipse_steps)
+           & P.eclipse_groups(gidx, sc.attack_frac, inv.n_groups))
+    readable = a & ~ecl        # eclipsed groups hold data but can't serve
+    warm_r = readable & warm
+
+    obj_id = jnp.minimum(gidx // jnp.maximum(sc.n_chunks, 1),
+                         st.max_objects - 1)
+    n_read = jax.ops.segment_sum(readable.astype(jnp.float32), obj_id,
+                                 num_segments=st.max_objects)
+    n_warm = jax.ops.segment_sum(warm_r.astype(jnp.float32), obj_id,
+                                 num_segments=st.max_objects)
+    oidx = jnp.arange(st.max_objects, dtype=jnp.int32)
+    obj_active = oidx < sc.n_objects
+    load = sc.read_rate * P.zipf_weights(oidx, sc.zipf_alpha, sc.n_objects)
+
+    failed_o = obj_active & (n_read < sc.k_outer)
+    degr_o = obj_active & ~failed_o & (n_read < sc.n_chunks)
+    hit_o = (obj_active & ~failed_o & ~degr_o
+             & (n_warm >= sc.k_outer))  # all K_outer pulls can be cache pulls
+    miss_o = obj_active & ~failed_o & ~degr_o & ~hit_o
+
+    n_fail = (load * failed_o).sum()
+    n_degr = (load * degr_o).sum()
+    n_hit = (load * hit_o).sum()
+    n_miss = (load * miss_o).sum()
+    served_add = n_hit + n_miss + n_degr  # completed reads × 1 object unit
+
+    # serving and repair compete for the same per-region links
+    per_region = (traffic_add + served_add) / P.N_BW_REGIONS
+    factor = P.congestion_factor(per_region, sc.region_cap)
+    for count, hops in ((n_hit, P.SERVE_HOPS_HIT),
+                        (n_miss, P.SERVE_HOPS_MISS),
+                        (n_degr, P.SERVE_HOPS_MISS
+                         + P.SERVE_HOPS_DEGRADED_EXTRA)):
+        hbin = P.effective_hops(hops, factor).astype(jnp.int32)
+        hist = hist.at[hbin].add(count)
+
+    # weights sum to 1 over active objects, so the four buckets conserve
+    # sc.read_rate exactly (tests/test_serving_properties.py pins this)
+    return (issued + sc.read_rate, r_hit + n_hit, r_miss + n_miss,
+            r_degr + n_degr, r_fail + n_fail, served + served_add, hist)
 
 
 def _vault_finalize(st: _Static, sc: Scenario, state) -> ScenarioResult:
     gidx = jnp.arange(st.max_groups, dtype=jnp.int32)
-    honest, _, alive, _, traffic, repairs, hits, hmin, mmax = state
+    (honest, _, alive, _, _, traffic, repairs, hits, hmin, mmax,
+     issued, r_hit, r_miss, r_degr, r_fail, served, hist) = state
     obj_id = jnp.minimum(gidx // jnp.maximum(sc.n_chunks, 1),
                          st.max_objects - 1)
     chunks_alive = jax.ops.segment_sum(
@@ -417,6 +545,9 @@ def _vault_finalize(st: _Static, sc: Scenario, state) -> ScenarioResult:
         final_honest_mean=fhm,
         honest_min=jnp.where(jnp.isfinite(hmin), hmin, 0.0),
         members_max=mmax, alive_frac_trace=jnp.zeros(()),  # filled by caller
+        reads_issued=issued, reads_hit=r_hit, reads_miss=r_miss,
+        reads_degraded=r_degr, reads_failed=r_fail,
+        served_traffic_units=served, serve_hop_hist=hist,
     )
 
 
@@ -449,10 +580,13 @@ def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
                             in_axes=(0, 0, 0, 0, 0, 0, None))
     repair_plain = jax.vmap(functools.partial(_vault_repair, st, smp, False),
                             in_axes=(0, 0, 0, 0, 0, 0, None))
+    serve = jax.vmap(functools.partial(_vault_serve, st),
+                     in_axes=(0, 0, 0, 0, 0, 0, None))
 
     def run(scb: Scenario):
         inv, init = jax.vmap(functools.partial(_vault_init, st, smp))(scb)
         cache_any = (scb.cache_ttl_hours > 0.0).any()
+        serve_any = (scb.read_rate > 0.0).any()
 
         def body(state, t):
             h, b, burst, region, kx, kr, ka = churn(scb, inv, state, t)
@@ -467,14 +601,19 @@ def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
                 lambda args: jnp.where(hit_now[:, None],
                                        attack(scb, *args), args[0]),
                 lambda args: args[0], (h, state[2], ka))
-            new_state, alive_frac = jax.lax.cond(
+            rep_state, warm, traffic_add, alive_frac = jax.lax.cond(
                 cache_any,
                 lambda args: repair_cache(*args),
                 lambda args: repair_plain(*args),
                 (scb, inv, state, h, b, kr, t))
+            srv = jax.lax.cond(
+                serve_any,
+                lambda args: serve(*args),
+                lambda args: args[5],
+                (scb, inv, rep_state, warm, traffic_add, state[10:], t))
             on = t < scb.steps
             state = tuple(_where_on(on, n, o)
-                          for n, o in zip(new_state, state))
+                          for n, o in zip(rep_state + srv, state))
             return state, jnp.where(on, alive_frac,
                                     state[2].sum(-1) / inv.n_groups)
 
@@ -657,13 +796,18 @@ def _repl_finalize(st: _Static, sc: Scenario, inv, carry) -> ScenarioResult:
     fhm = jnp.where(n_alive > 0,
                     (good * alive).sum() / jnp.maximum(n_alive, 1.0), 0.0)
     alive_min = jnp.where(alive, good, jnp.inf).min()
+    zero = jnp.zeros(())
     return ScenarioResult(
         repair_traffic_units=traffic, repairs=repairs,
-        cache_hits=jnp.zeros(()), lost_objects=lost.astype(jnp.int32),
+        cache_hits=zero, lost_objects=lost.astype(jnp.int32),
         lost_fraction=lost / jnp.maximum(sc.n_objects, 1),
         final_honest_mean=fhm,
         honest_min=jnp.where(jnp.isfinite(alive_min), alive_min, 0.0),
-        members_max=(good + bad).max(), alive_frac_trace=jnp.zeros(()),
+        members_max=(good + bad).max(), alive_frac_trace=zero,
+        # the replicated baseline has no serving layer
+        reads_issued=zero, reads_hit=zero, reads_miss=zero,
+        reads_degraded=zero, reads_failed=zero, served_traffic_units=zero,
+        serve_hop_hist=jnp.zeros(P.SERVE_HIST_BINS),
     )
 
 

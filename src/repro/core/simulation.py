@@ -15,7 +15,9 @@ abstraction the paper's own discrete-event simulator uses:
   absorbing, per the CTMC model);
 * repair traffic: ``K_inner`` fragments per repaired fragment on cache miss
   (the repairer then caches the chunk), one fragment on cache hit — see
-  repair.py docstring for why this is the Fig.4-consistent reading.
+  repair.py docstring for why this is the Fig.4-consistent reading. A
+  cached copy is warm only while its TTL holds AND at least one of its
+  holder nodes is still alive (holders churn like everyone else).
 
 Traffic is reported in *object-size units* (the paper's unit). The Ceph-like
 replicated baseline (§6.1) is simulated under identical churn.
@@ -84,6 +86,10 @@ def simulate_vault(p: SimParams) -> SimResult:
     alive = honest >= p.k_inner
     cache_t = np.zeros(n_groups)  # client seeds caches at store time (t=0)
     has_cache = p.cache_ttl_hours > 0.0
+    # cached-copy holder counts: the storing client seeds all R members;
+    # holders churn like any node, and a copy is warm only while ≥1 holder
+    # survives (matches the batched engine's churn-aware cache model)
+    cache_h = np.full(n_groups, p.r_inner if has_cache else 0)
     p_fail = P.p_fail_step(p.churn_per_year, p.step_hours, xp=np)
     steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
     traffic = 0.0
@@ -97,6 +103,10 @@ def simulate_vault(p: SimParams) -> SimResult:
         lost_b = rng.binomial(byz, p_fail)
         honest = honest - lost_h
         byz = byz - lost_b
+        if has_cache:
+            # cache holders churn too; guarded so the rng stream of
+            # cache-free runs is untouched
+            cache_h = cache_h - rng.binomial(cache_h, p_fail)
         # --- absorbing check: decode impossible below K_inner honest
         alive &= honest >= p.k_inner
         # --- repair: refill to R where membership dropped (alive groups)
@@ -110,7 +120,7 @@ def simulate_vault(p: SimParams) -> SimResult:
         if n_rep:
             repairs += n_rep
             if has_cache:
-                warm = (now - cache_t) <= p.cache_ttl_hours
+                warm = ((now - cache_t) <= p.cache_ttl_hours) & (cache_h >= 1)
                 hit_frags = np.where(warm, repaired, np.maximum(repaired - 1, 0))
                 miss_pulls = np.where(~warm & (repaired > 0), 1, 0)
                 traffic += float(hit_frags.sum()) * p.frag_units
@@ -118,6 +128,7 @@ def simulate_vault(p: SimParams) -> SimResult:
                 cache_hits += int(hit_frags.sum())
                 # a cache miss makes the repairer cache the chunk afresh
                 cache_t = np.where(miss_pulls > 0, now, cache_t)
+                cache_h = np.where(miss_pulls > 0, 1, cache_h)
             else:
                 traffic += float(repaired.sum()) * p.k_inner * p.frag_units
     chunks_alive = alive.reshape(p.n_objects, p.n_chunks).sum(axis=1)

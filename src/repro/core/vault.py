@@ -22,6 +22,36 @@ from repro.core.rateless import InsufficientFragments
 MAX_ROUNDS_FACTOR = 6  # fragment-index rounds per required member
 
 
+def gather_available(
+    net: SimNetwork, chash: bytes, r_inner: int,
+) -> tuple[list[tuple[int, bytes, Node]], list[Node]]:
+    """DHT walk + parallel fragment gather for one chunk. RNG-free.
+
+    Walks the same candidate window as Alg. 1 QUERY and returns
+    ``(rows, holders)``: ``rows`` is the distinct fragment payloads in
+    discovery order as ``(index, payload, holder)`` — the first (nearest)
+    holder of each index wins — shaped for
+    ``repair.decode_from_available``; ``holders`` is every candidate that
+    served anything, in walk order (the QUERY path's RTT fan-out set).
+    Shared by the client QUERY path and the serving layer
+    (``protocol_sim._serve_tick``).
+    """
+    cands = net.candidates(C.hash_point(chash), min(4 * r_inner, net.n_nodes))
+    rows: list[tuple[int, bytes, Node]] = []
+    holders: list[Node] = []
+    seen: set[int] = set()
+    for cand in cands:
+        served = cand.serve_fragments(chash)
+        if not served:
+            continue
+        holders.append(cand)
+        for idx, payload in served.items():
+            if idx not in seen:
+                seen.add(idx)
+                rows.append((idx, payload, cand))
+    return rows, holders
+
+
 @dataclasses.dataclass
 class OpStats:
     latency_s: float
@@ -192,14 +222,8 @@ class VaultClient:
         anchor = C.hash_point(chash)
         cands = self.net.candidates(anchor, min(4 * params.r_inner, self.net.n_nodes))
         lookup_rtt = float(np.max(self.net.rtts(self.node, cands[:8]))) if cands else 0.0
-        frags: dict[int, bytes] = {}
-        holders: list[Node] = []
-        for cand in cands:
-            served = cand.serve_fragments(chash)
-            if served:
-                holders.append(cand)
-                for idx, payload in served.items():
-                    frags.setdefault(idx, payload)
+        rows, holders = gather_available(self.net, chash, params.r_inner)
+        frags = {idx: payload for idx, payload, _ in rows}
         if len(frags) < params.k_inner:
             raise InsufficientFragments(
                 f"{len(frags)}/{params.k_inner} fragments reachable"

@@ -1,14 +1,20 @@
-"""Minimal seeded stand-in for ``hypothesis`` when it isn't installed.
+"""``hypothesis`` facade: the real library when installed, a seeded
+stand-in otherwise.
 
-The property tests import it as:
+Property tests import it unconditionally:
 
-    try:
-        from hypothesis import given, settings, strategies as st
-    except ModuleNotFoundError:
-        from _hypothesis_compat import given, settings, strategies as st
+    from _hypothesis_compat import given, settings, strategies as st
 
-Covers exactly the API surface those tests use — ``given`` (positional and
-keyword strategies), ``settings(max_examples=..., deadline=...)``, and
+When ``hypothesis`` is importable (the CI property shard installs it via
+requirements-ci.txt) this module re-exports the real ``given`` /
+``settings`` / ``strategies`` — full shrinking, example database, the
+works — so the stub can never shadow it. ``HAVE_HYPOTHESIS`` tells tests
+which implementation they got. (The older per-site ``try: from hypothesis
+import ...`` pattern still works and short-circuits this module entirely.)
+
+Without it, the stand-in below covers exactly the API surface the tests
+use — ``given`` (positional and keyword strategies),
+``settings(max_examples=..., deadline=..., derandomize=...)``, and
 ``strategies.integers / lists / sampled_from / booleans / floats`` with
 ``.map``. Examples are drawn from a ``numpy.random`` generator seeded from
 the test's qualified name, so runs are deterministic; example 0 is each
@@ -21,6 +27,17 @@ import inspect
 import zlib
 
 import numpy as np
+
+try:
+    import hypothesis as _hypothesis
+except ModuleNotFoundError:
+    _hypothesis = None
+
+HAVE_HYPOTHESIS = _hypothesis is not None
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    st = strategies
 
 DEFAULT_MAX_EXAMPLES = 20
 
@@ -41,7 +58,7 @@ class Strategy:
                         lambda: f(self._minimal()))
 
 
-class strategies:
+class _strategies:
     """Namespace mirroring ``hypothesis.strategies``."""
 
     @staticmethod
@@ -77,10 +94,7 @@ class strategies:
                         lambda: seq[0])
 
 
-st = strategies
-
-
-def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+def _settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
     """Decorator recording the example budget (deadline etc. ignored)."""
 
     def deco(fn):
@@ -90,7 +104,7 @@ def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
     return deco
 
 
-def given(*pos_strategies, **kw_strategies):
+def _given(*pos_strategies, **kw_strategies):
     """Run the test once per generated example (seeded, deterministic)."""
 
     def deco(fn):
@@ -128,3 +142,10 @@ def given(*pos_strategies, **kw_strategies):
         return wrapper
 
     return deco
+
+
+if not HAVE_HYPOTHESIS:
+    strategies = _strategies
+    st = _strategies
+    settings = _settings
+    given = _given

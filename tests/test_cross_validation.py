@@ -11,9 +11,21 @@ criteria:
   criterion ``|Δ| ≤ √(ci_eng² + ci_proto²)`` — the engine CI alone ignores
   protocol sampling noise (few seeds, emergent fragment co-location), so
   demanding the protocol mean inside it would reject agreeing layers;
-* the cached config's known deltas keep their documented *direction*: the
-  engine's per-group cache timestamp ignores cache-holder churn, so the
-  protocol must show ≥ engine traffic and ≤ engine hit counts;
+* serving metrics (``served_traffic_units``, ``reads_failed``,
+  ``hit_rate``): combined-CI gated like the repair metrics, with two
+  documented exceptions — the cached config's served traffic carries the
+  padding-quantization delta (the protocol ships actual cached-chunk
+  bytes, ≈1% under the engine's idealized 1 unit/read), and the eclipse
+  config is one-sided (the engine's whole-group eclipse predicts failed
+  reads the protocol's k-of-n decoding survives, so the engine is the
+  conservative bound);
+* the cached config's repair-path metrics: ``cache_hits`` is now inside
+  the combined CI (the holder-churn leak — #1 of the original table — is
+  closed by the churn-aware cache model), and
+  ``test_cache_holder_leak_closed`` proves the closure is real: the old
+  optimistic model (``cache_churn=False``) under-counts repair traffic
+  beyond the combined CI on a leak-amplifying config while the fixed
+  model agrees;
 * the eclipse config is CI-gated on every metric except ``lost_objects``,
   where the engine's clean-bisection approximation is a documented
   one-sided bound: protocol losses must not exceed the engine's upper
@@ -32,7 +44,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.cross_validate import (  # noqa: E402
-    QUICK_KW, QUICK_PROTO_SEEDS, compare, matched_configs)
+    ENGINE_SEEDS, QUICK_KW, QUICK_PROTO_SEEDS, compare, matched_configs)
 
 
 @pytest.fixture(scope="module")
@@ -108,16 +120,127 @@ def test_alive_fraction_matches(rows):
         assert r["abs_diff"] <= combined + 0.05, r
 
 
-def test_cache_config_documented_deltas(rows):
+def test_cache_config_repair_metrics(rows):
     name = next(n for n in _configs(rows) if "cache" in n)
     traffic = _get(rows, name, "repair_traffic_units")
     hits = _get(rows, name, "cache_hits")
     plain = _get(rows, "iid_static", "repair_traffic_units")
-    # engine's per-group cache ignores holder churn => engine is optimistic
-    assert traffic["protocol_mean"] >= traffic["engine_mean"]
-    # ...but caching still has to cut protocol traffic well below cold pulls
+    # warm hits agree within the combined CI now that the engine retires
+    # cached copies when their holders die (leak #1 closed — the hard
+    # regression proving the closure is test_cache_holder_leak_closed)
+    assert hits["within_combined_ci"], hits
+    # residual traffic delta: the engine re-caches a decoded chunk at ONE
+    # holder where protocol coordinators accumulate copies over repeated
+    # misses, so the engine stays mildly optimistic — bounded, directional
+    assert traffic["protocol_mean"] >= traffic["engine_mean"], traffic
+    assert traffic["protocol_mean"] <= 1.25 * traffic["engine_mean"], traffic
+    # ...and caching still has to cut protocol traffic well below cold pulls
     assert traffic["protocol_mean"] < 0.75 * plain["protocol_mean"]
-    # holder churn can only lose warm hits, never add them
-    assert hits["protocol_mean"] <= hits["engine_mean"] + hits["engine_ci95"]
-    combined = float(np.hypot(hits["engine_ci95"], hits["protocol_ci95"]))
-    assert hits["abs_diff"] <= 2.0 * combined, hits
+
+
+def test_served_traffic_matches(rows):
+    """Served traffic: combined CI, except the two documented deltas.
+
+    * cache config — the protocol charges actual cached-chunk bytes
+      (``len(chunk)``, not ``k_inner · frag_len``), so padding
+      quantization puts each warm read ≈1% under the engine's idealized
+      1.0 object unit: gate at 2% of the issued load instead;
+    * eclipse config — one-sided (see test_eclipse_serving_one_sided)."""
+    for name in _configs(rows):
+        if "eclipse" in name:
+            continue
+        r = _get(rows, name, "served_traffic_units")
+        if "cache" in name:
+            assert r["abs_diff"] <= 0.02 * r["engine_mean"], r
+        else:
+            assert r["within_combined_ci"], r
+
+
+def test_failed_reads_match(rows):
+    for name in _configs(rows):
+        if "eclipse" in name:
+            continue  # one-sided, tested below
+        r = _get(rows, name, "reads_failed")
+        assert r["within_combined_ci"], r
+
+
+def test_hit_rate_matches(rows):
+    """Cache-hit rate of the served load: combined CI plus a small
+    documented slack — the protocol's cache probe also loses warm reads
+    to candidate-walk order and probe-time holder state (second-order
+    effects the closed-form model folds into its expectation)."""
+    for name in _configs(rows):
+        r = _get(rows, name, "hit_rate")
+        combined = float(np.hypot(r["engine_ci95"], r["protocol_ci95"]))
+        assert r["abs_diff"] <= combined + 0.01, r
+
+
+def test_eclipse_serving_one_sided(rows):
+    """The engine eclipses whole groups, so every read of an eclipsed
+    object fails; the protocol cuts 30% of holders and k-of-n decoding
+    rides it out. Like the loss metric, the engine is the conservative
+    bound: the protocol may fail fewer reads (serve more), never more."""
+    name = next(n for n in _configs(rows) if "eclipse" in n)
+    failed = _get(rows, name, "reads_failed")
+    served = _get(rows, name, "served_traffic_units")
+    f_comb = float(np.hypot(failed["engine_ci95"], failed["protocol_ci95"]))
+    s_comb = float(np.hypot(served["engine_ci95"], served["protocol_ci95"]))
+    assert (failed["protocol_mean"]
+            <= failed["engine_mean"] + f_comb), failed
+    assert (served["protocol_mean"]
+            >= served["engine_mean"] - s_comb), served
+
+
+def test_cache_holder_leak_closed():
+    """Leak #1 of the original abstraction-leak table, retired.
+
+    The pre-serving engine cache model kept a cached copy warm for the
+    whole TTL regardless of what happened to the node holding it. On a
+    leak-amplifying config — TTL longer than the run horizon (warmth can
+    only be lost to holder death) and churn high enough to kill holders
+    often — that model credits warm hits the protocol's dying holders
+    can't serve, under-counting repair traffic beyond any CI. The fix
+    (``cache_churn=True``, the default) retires cached copies at the
+    holder death rate and lands within CI of the protocol.
+
+    Asserts three things, all deterministic (seeded both layers):
+    * the optimistic model's traffic gap exceeds the combined 95% CI —
+      the leak is real and measurable;
+    * the fixed model agrees within 1.25× the combined CI (slack for the
+      holder-accumulation residual documented in
+      test_cache_config_repair_metrics);
+    * the fix closes more than half of the optimistic gap.
+    """
+    from repro.core import protocol_sim as PS
+    from repro.core import scenarios as SC
+
+    p = PS.ProtocolParams(
+        n_nodes=200, n_objects=3, k_outer=2, n_chunks=5, k_inner=6,
+        r_inner=14, byz_fraction=0.1, churn_per_year=150.0,
+        step_hours=12.0, steps=30, claim_every=2, cache_ttl_hours=400.0,
+        read_rate=40.0, zipf_alpha=1.1)
+    cell = p.to_scenario_kwargs()
+    eng = SC.run_grid([cell, dict(cell, cache_churn=False)],
+                      seeds=ENGINE_SEEDS)
+    proto = PS.run_protocol_seeds(p, seeds=QUICK_PROTO_SEEDS)
+
+    fixed_m, fixed_c = map(float, SC.mean_ci(
+        np.asarray(eng.repair_traffic_units[0], np.float64)))
+    optim_m, optim_c = map(float, SC.mean_ci(
+        np.asarray(eng.repair_traffic_units[1], np.float64)))
+    proto_m, proto_c = map(float, SC.mean_ci(
+        np.array([r.repair_traffic_units for r in proto], np.float64)))
+
+    gap_optim = proto_m - optim_m
+    gap_fixed = abs(proto_m - fixed_m)
+    # the old model over-credits warm hits => under-counts repair traffic
+    assert gap_optim > float(np.hypot(optim_c, proto_c)), (
+        optim_m, optim_c, proto_m, proto_c)
+    # the churn-aware model agrees with the protocol
+    assert gap_fixed <= 1.25 * float(np.hypot(fixed_c, proto_c)), (
+        fixed_m, fixed_c, proto_m, proto_c)
+    assert gap_fixed < 0.5 * gap_optim, (gap_fixed, gap_optim)
+    # holder death can only lose warm hits, never add them
+    fixed_h = float(np.mean(np.asarray(eng.cache_hits[0], np.float64)))
+    optim_h = float(np.mean(np.asarray(eng.cache_hits[1], np.float64)))
+    assert fixed_h <= optim_h, (fixed_h, optim_h)
