@@ -1,8 +1,16 @@
-"""Shared benchmark plumbing: CSV/console emit + scale flags."""
+"""Shared benchmark plumbing: CSV/console emit + scale flags + env setup."""
 from __future__ import annotations
 
 import os
 import pathlib
+
+from repro import config as CFG
+
+# One environment-setup path shared with scripts/test.sh and
+# tests/conftest.py: XLA_DEVICES / REPRO_PLATFORM / REPRO_X64 /
+# REPRO_DEBUG_NANS are applied here, before any benchmark touches a JAX
+# backend (benchmarks import this module first).
+CFG.apply_env()
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
 

@@ -19,21 +19,43 @@ comparable across PRs. The per-cell numpy reference loop from
 Emits ``results/bench/engine_speed.csv`` (full table) and
 ``results/bench/BENCH_engine_speed.json`` — the machine-readable
 trajectory point future PRs diff against.
+
+Device-scaling study (``python -m benchmarks.engine_speed --scaling``):
+times the grid-cells workload at 1/2/4/8 *virtual host devices*
+(``xla_force_host_platform_device_count``), each count in its own
+subprocess because the flag is XLA-pre-init only. The sharded leg runs
+the engine's ``devices=N`` dispatch — one jitted executable whose batch
+axis splits over a ``shard_map`` mesh (``scenarios._compile_runner``).
+Emits ``results/bench/engine_scaling.csv`` and
+``results/bench/BENCH_scaling.json`` (the ``scaling_8dev`` trajectory
+point CI gates via ``scripts/check_bench_regression.py``).
+
+Scaling provenance: virtual host devices only parallelize across
+*physical cores* — the XLA CPU backend runs one shard per device thread,
+so an M-core host tops out near M× regardless of the device count, and a
+1-core host measures ≈1× by construction (the committed point records
+``host_cores`` so trajectory diffs stay like-for-like; near-linear
+scaling is expected when cores ≥ devices, e.g. on real accelerator pods).
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 
 from benchmarks.common import RESULTS, SCALE, emit
+from repro import config as CFG
 from repro.core import scenarios as SC
 from repro.core import simulation as S
 from repro.core.samplers import SAMPLERS
 
 SEEDS = tuple(range(8))
 REPS = 3  # steady-state timing: best of REPS warm dispatches
+SCALING_DEVICES = (1, 2, 4, 8)  # virtual-host-device counts, one per run
 
 
 def _workloads():
@@ -143,5 +165,103 @@ def run():
     return rows
 
 
+# --- device-scaling study -------------------------------------------------
+
+_CHILD = """\
+import json, sys, time
+ndev, reps, seeds = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+import jax   # topology comes from XLA_FLAGS (repro.config.subprocess_env)
+assert jax.local_device_count() >= ndev, (jax.local_device_count(), ndev)
+from repro.core import scenarios as SC
+cells = json.loads(sys.stdin.read())
+kw = dict(seeds=range(seeds), sampler="arx",
+          devices=ndev if ndev > 1 else None)
+t0 = time.time()
+res = SC.run_grid(cells, **kw)
+t_first = time.time() - t0
+ts = []
+for _ in range(reps):
+    t0 = time.time()
+    res = SC.run_grid(cells, **kw)
+    ts.append(time.time() - t0)
+print("RESULT " + json.dumps({
+    "t": min(ts), "t_first": t_first,
+    "mean_lost": float(res.lost_fraction.mean())}))
+"""
+
+
+def _time_scaling_leg(cells, ndev: int) -> dict:
+    """Time the grid workload at ``ndev`` virtual host devices.
+
+    One subprocess per count: ``xla_force_host_platform_device_count``
+    only takes effect before XLA initializes, so the parent process
+    (whatever its own topology) cannot measure other counts in-process.
+    """
+    env = CFG.subprocess_env(ndev)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(ndev), str(REPS),
+         str(len(SEEDS))],
+        input=json.dumps(cells), env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"scaling leg devices={ndev} failed:\n{proc.stderr}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT "))
+    out = json.loads(line[len("RESULT "):])
+    steps, samples = _work_units(cells)
+    t = out["t"]
+    return {
+        "regime": "grid-18cells", "devices": ndev,
+        "engine_s": round(t, 3),
+        "compile_s": round(max(out["t_first"] - t, 0.0), 2),
+        "steps_per_s": int(steps / t),
+        "samples_per_s": int(samples / t),
+        "mean_lost": round(out["mean_lost"], 4),
+    }
+
+
+def run_scaling():
+    name, cells = _workloads()[0]  # grid-cells: 18 cells x 8 seeds = 144
+    rows = []
+    for ndev in SCALING_DEVICES:
+        row = _time_scaling_leg(cells, ndev)
+        rows.append(row)
+        print(f"  devices={ndev}: {row['engine_s']}s steady "
+              f"({row['steps_per_s']:,} steps/s)")
+    base = rows[0]["engine_s"]
+    for row in rows:
+        row["speedup_vs_1dev"] = round(base / row["engine_s"], 2)
+    emit("engine_scaling", rows)
+
+    at8 = next(r for r in rows if r["devices"] == 8)
+    point = {
+        "bench": "scaling", "scale": SCALE,
+        "host_cores": os.cpu_count(),
+        "note": ("virtual host devices scale with physical cores; "
+                 "speedup_vs_1dev ~= min(devices, host_cores) and is "
+                 "deliberately NOT a gated metric"),
+        "headline": {"scaling_8dev": {
+            k: at8[k] for k in ("devices", "engine_s", "compile_s",
+                                "steps_per_s", "samples_per_s",
+                                "speedup_vs_1dev")}},
+        "rows": rows,
+    }
+    path = RESULTS / "BENCH_scaling.json"
+    with open(path, "w") as f:
+        json.dump(point, f, indent=1)
+    print(f"  -> 8-device leg: {at8['engine_s']}s "
+          f"({at8['steps_per_s']:,} steps/s, "
+          f"{at8['speedup_vs_1dev']}x vs 1 device on "
+          f"{os.cpu_count()}-core host) -> {path}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    if "--scaling" in sys.argv[1:]:
+        run_scaling()
+    else:
+        run()

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""CI shard drift guard: every tier-1 test file runs in exactly one shard.
+
+The tier-1 suite is split across two CI jobs (see .github/workflows/ci.yml):
+the *engine* shard runs the files listed in the ``ENGINE_SHARD`` env var and
+the *core* shard runs everything else by passing ``--ignore=`` for each
+engine file. That partition drifts in two ways:
+
+* a file lands in the core shard's ignore set without being in
+  ``ENGINE_SHARD`` (e.g. someone adds a literal ``--ignore=tests/...`` to
+  "temporarily" skip a slow file) — it is then collected by **neither**
+  shard and silently stops running in CI;
+* a file is in ``ENGINE_SHARD`` but missing from the core ignore set — it
+  is collected by **both** shards and double-bills CI minutes.
+
+Plus the cheap staleness cases: ``ENGINE_SHARD`` naming a file that no
+longer exists (the engine shard would hard-fail on collection) or naming
+one twice.
+
+This script re-derives both sides from the workflow file and the
+``tests/test_*.py`` files on disk and exits non-zero on any drift. It
+deliberately has **no dependencies beyond the stdlib** (no PyYAML — the
+docs CI job that runs it installs nothing), so the workflow is parsed
+with a purpose-built reader: the ``ENGINE_SHARD: >-`` folded block and
+``--ignore=`` occurrences, with ``--ignore=$var`` loop forms expanding to
+the ``ENGINE_SHARD`` set exactly as the shell step does.
+
+Usage: ``python scripts/check_shards.py [--workflow PATH] [--tests DIR]``
+(defaults: .github/workflows/ci.yml and tests/).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def parse_engine_shard(text: str) -> list[str]:
+    """Extract the ENGINE_SHARD file list (inline or folded-block scalar)."""
+    m = re.search(r"^(\s*)ENGINE_SHARD:[ \t]*(.*)$", text, re.MULTILINE)
+    if not m:
+        raise SystemExit("check_shards: no ENGINE_SHARD key in workflow")
+    indent, inline = m.groups()
+    if inline and not inline.startswith((">", "|")):
+        return inline.split()
+    # folded/literal block: consume lines indented deeper than the key
+    files: list[str] = []
+    for line in text[m.end():].splitlines():
+        if line.strip() and not line.startswith(indent + " "):
+            break
+        files.extend(line.split())
+    return files
+
+
+def parse_core_ignores(text: str, engine: list[str]) -> set[str]:
+    """The core shard's effective ignore set.
+
+    Literal ``--ignore=tests/...`` flags are taken as-is; the
+    ``--ignore=$t``-inside-``for t in $ENGINE_SHARD`` loop form expands to
+    the full ENGINE_SHARD list, mirroring what the shell does.
+    """
+    ignores: set[str] = set()
+    for val in re.findall(r"--ignore=(\S+)", text):
+        val = val.strip("\"'")
+        if "$" not in val:
+            ignores.add(val)
+        elif re.search(r"for\s+\w+\s+in\s+\$\{?ENGINE_SHARD", text):
+            ignores.update(engine)
+        else:
+            raise SystemExit(
+                f"check_shards: --ignore={val} uses a variable but no "
+                "'for ... in $ENGINE_SHARD' loop was found — cannot "
+                "derive the core shard's ignore set")
+    if not ignores:
+        raise SystemExit(
+            "check_shards: no --ignore= flags found — the core shard no "
+            "longer excludes the engine files?")
+    return ignores
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workflow",
+                    default=str(ROOT / ".github" / "workflows" / "ci.yml"))
+    ap.add_argument("--tests", default=str(ROOT / "tests"))
+    args = ap.parse_args(argv)
+
+    text = pathlib.Path(args.workflow).read_text()
+    engine = parse_engine_shard(text)
+    ignores = parse_core_ignores(text, engine)
+    on_disk = {f"tests/{p.name}"
+               for p in pathlib.Path(args.tests).glob("test_*.py")}
+
+    errors: list[str] = []
+    for f in {x for x in engine if engine.count(x) > 1}:
+        errors.append(f"{f}: listed more than once in ENGINE_SHARD")
+    for f in sorted(set(engine) - on_disk):
+        errors.append(f"{f}: in ENGINE_SHARD but not on disk "
+                      "(stale entry — engine shard fails at collection)")
+    for f in sorted((ignores & on_disk) - set(engine)):
+        errors.append(f"{f}: ignored by the core shard but absent from "
+                      "ENGINE_SHARD — collected by NEITHER shard")
+    for f in sorted(set(engine) - ignores):
+        errors.append(f"{f}: in ENGINE_SHARD but not ignored by the core "
+                      "shard — collected by BOTH shards")
+
+    if errors:
+        print("check_shards: shard partition drift:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    core = sorted(on_disk - ignores)
+    print(f"check_shards: OK — {len(engine)} engine + {len(core)} core "
+          f"= {len(on_disk)} test files, each collected exactly once")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

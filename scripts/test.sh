@@ -1,21 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 test runner: sets PYTHONPATH and a deterministic single-device JAX
-# host platform (multi-device tests fork their own subprocesses with their
-# own XLA_FLAGS — see tests/conftest.py). Override the device count with
-# XLA_DEVICES=n for local experiments.
+# Tier-1 test runner. Environment setup (device count, XLA flags, the
+# topology-keyed persistent compilation cache) comes from ONE place —
+# `python -m repro.config` (see src/repro/config.py) — shared with
+# tests/conftest.py, scripts/smoke_devices.py and benchmarks/common.py.
+# Override the virtual device count with XLA_DEVICES=n (default 1; the
+# main pytest process stays single-device — multi-device tests fork
+# their own subprocesses with their own flags, see tests/conftest.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-export XLA_FLAGS="--xla_force_host_platform_device_count=${XLA_DEVICES:-1}${XLA_FLAGS:+ $XLA_FLAGS}"
 
 # Persistent XLA compilation cache: repeat runs skip the ~9 s engine jit
-# compiles (only compiles above jax's 1 s min-compile-time threshold are
-# stored). Point JAX_COMPILATION_CACHE_DIR elsewhere to relocate it.
-# The directory is keyed by the virtual device count: the cache key does
-# NOT cover xla_force_host_platform_device_count, and replaying an entry
-# compiled under a different host topology returns corrupted outputs
-# (uninitialized buffers — bitten by the 8-device CI leg).
-export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$HOME/.cache/repro-jax-cache-d${XLA_DEVICES:-1}}"
+# compiles. repro.config keys the directory by device count — the cache
+# key does NOT cover xla_force_host_platform_device_count, and replaying
+# an entry compiled under a different host topology returns corrupted
+# outputs (uninitialized buffers — bitten by the 8-device CI leg).
+eval "$(python -m repro.config)"
 
 exec python -m pytest -x -q "$@"

@@ -55,17 +55,22 @@ repo is tuned on):
   are reference-faithful.
 * ``chunk_size=`` — split the flat ``cells × seeds`` batch into fixed-size
   chunks dispatched sequentially through ONE compiled executable (the jit
-  cache is keyed on the padded maxima + chunk shape, and chunk inputs are
-  donated). Keeps device memory flat on paper-scale sweeps and stops
+  cache is keyed on the padded maxima + chunk shape). Keeps device memory
+  bounded on paper-scale sweeps and stops
   recompiles from dominating when many same-shaped sweeps run in one
   process. ``None`` = single dispatch (PR 1 behavior). Chunking is
   bit-for-bit neutral: every element's randomness derives only from its
   own ``(scenario, seed)``.
-* ``devices=`` — shard each chunk over this many local JAX devices with
-  ``pmap`` (e.g. multiple CPU host devices via
-  ``--xla_force_host_platform_device_count``, or real accelerators).
-  ``None``/``1`` = no device axis. ``chunk_size`` is rounded up to a
-  multiple of ``devices``.
+* ``devices=`` — shard each chunk's batch axis over this many local JAX
+  devices (e.g. multiple CPU host devices via
+  ``--xla_force_host_platform_device_count`` / ``repro.config``, or real
+  accelerators). The SAME traced function compiles either way: plain
+  ``jit`` at 1 device, ``jit`` of a ``shard_map`` over a 1-D ``"batch"``
+  mesh above it — one sharded executable from laptop to pod, no
+  per-shape ``pmap`` re-tracing. ``None``/``1`` = no device axis.
+  ``chunk_size`` is rounded up to a multiple of ``devices`` and uneven
+  batches are padded inside the chunker (replicas of the last element,
+  sliced off afterwards) — bit-for-bit identical results either way.
 
 The scan body itself is tuned for CPU: per-cell constants (failure
 probabilities, refill rates, key material, active masks, unit costs) are
@@ -77,16 +82,19 @@ overhead.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any, NamedTuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core import policies as P
 from repro.core.samplers import SAMPLERS, Sampler
+# version-compat shard_map (jax<0.6 experimental location, check_rep vs
+# check_vma kwarg) — one shim, shared with the distributed substrate
+from repro.distributed.compression import shard_map
 
 # Policy ids re-exported from the shared definitions (repro.core.policies)
 # so existing `scenarios.CHURN_*` / `scenarios.ADV_*` callers keep working.
@@ -557,19 +565,83 @@ def _where_on(on, new, old):
     return jnp.where(mask, new, old)
 
 
+_BATCH_AXIS = "batch"  # the 1-D mesh axis the grid batch shards over
+
+
+def _ndev(devices: int | None) -> int:
+    """Validate and normalize the ``devices=`` knob (before any mesh or
+    compiled runner is built, so the error is actionable)."""
+    ndev = int(devices or 1)
+    if ndev > 1:
+        avail = jax.local_device_count()
+        if ndev > avail:
+            raise ValueError(
+                f"devices={ndev} but only {avail} local JAX device(s); "
+                "set --xla_force_host_platform_device_count or lower it")
+    return ndev
+
+
+def _compile_runner(run, devices: int = 1):
+    """Compile a batched ``run`` into one executable for any topology.
+
+    This is the single sharded-runner helper behind all four grid
+    factories (``_vault_batch`` / ``_repl_batch`` / ``_trace_batch`` /
+    ``_targeted_batch``). ``devices <= 1`` is a plain ``jit``. Otherwise
+    the SAME traced ``run`` is wrapped in ``shard_map`` over a 1-D
+    ``Mesh`` of the first ``devices`` local devices: every input leaf's
+    leading batch axis splits across the mesh (``PartitionSpec``
+    prefixes broadcast over the pytree), outputs concatenate back along
+    it. No per-shape ``pmap`` re-trace, no host-side
+    ``[devices, B/devices]`` reshape.
+
+    Bit-exactness: the per-element math never crosses batch lanes (no
+    collectives anywhere in the scan body), so shards compute exactly
+    what the single-device executable computes. The only semantic
+    difference is that batch-global ``.any()`` cond predicates become
+    per-shard — and every such cond selects between branches that are
+    arithmetically identical by construction (the conds exist purely to
+    skip work; see ``_vault_repair``'s docstring). Locked down by
+    ``scripts/smoke_devices.py`` and the subprocess tests in
+    ``tests/test_scenarios.py`` / ``tests/test_samplers.py``.
+
+    Inputs are deliberately NOT donated (``donate_argnums``). Donation +
+    the persistent compilation cache mis-executes on replay: a freshly
+    compiled CPU executable refuses the aliasing ("Some donated buffers
+    were not usable" — int32 scenario leaves can't alias float outputs)
+    and runs correctly, but the *deserialized* cache entry honors the
+    requested input→output aliases, so the donated input buffer is freed
+    while live outputs still point into it and the next executable to
+    allocate scribbles over the results. Reproduced deterministically:
+    warm-cache process running two runners corrupts the first runner's
+    outputs (random fields each run); identical process without donation
+    is bit-exact. Donation only ever bought flat memory on chunked
+    sweeps — never correctness or measured speed on CPU — so it loses to
+    the cache. ``tests/test_scenarios.py::
+    test_warm_cache_two_runners_bitexact`` locks the regression down.
+    """
+    if devices <= 1:
+        return jax.jit(run)
+    mesh = Mesh(np.asarray(jax.devices()[:devices]), (_BATCH_AXIS,))
+    sharded = shard_map(run, mesh=mesh,
+                        in_specs=(PartitionSpec(_BATCH_AXIS),),
+                        out_specs=PartitionSpec(_BATCH_AXIS),
+                        check_vma=False)
+    return jax.jit(sharded)
+
+
 @functools.lru_cache(maxsize=None)
 def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
-                 pmapped: bool = False):
+                 devices: int = 1):
     """Compile the batched engine: one lax.scan over time whose body is
     vmapped over the batch. (scan-of-vmap, not vmap-of-scan, so the
     targeted-attack sort can sit behind a real lax.cond and only execute
     on actual attack steps instead of being select-ed every step.)
 
-    The cache key is ``(padded maxima, sampler, unroll, pmapped)``; jit's
+    The cache key is ``(padded maxima, sampler, unroll, devices)``; jit's
     own executable cache then keys on the batch shape, so fixed-size
-    chunked dispatch reuses one compiled executable for every chunk. Chunk
-    inputs are donated (``donate_argnums``) so buffers are recycled
-    between chunks and device memory stays flat.
+    chunked dispatch reuses one compiled executable for every chunk.
+    ``devices > 1`` shards the batch axis over a 1-D mesh — see
+    :func:`_compile_runner`.
     """
     smp = SAMPLERS[sampler]
     churn = jax.vmap(functools.partial(_vault_churn, st, smp),
@@ -622,9 +694,7 @@ def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
         res = jax.vmap(functools.partial(_vault_finalize, st))(scb, state)
         return res._replace(alive_frac_trace=alive_tr.T)
 
-    if pmapped:
-        return jax.pmap(run)
-    return jax.jit(run, donate_argnums=(0,))
+    return _compile_runner(run, devices)
 
 
 def _stack(cells: list[Scenario]) -> Scenario:
@@ -647,57 +717,41 @@ def _reshape(res, n_cells: int, n_seeds: int):
 
 
 def _dispatch(runner, batch):
-    """Invoke a compiled runner with the expected donation warning scoped
-    out: the int32 scenario leaves can never alias the float results, and
-    XLA reports that once per compile — noise here, but a real diagnostic
-    in user code, so never filter it globally."""
-    with warnings.catch_warnings():
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable")
-        return runner(batch)
+    """Invoke a compiled runner (single indirection point for all four
+    grid runners — kept so chunked and single dispatch share one call
+    site). Donation was removed here (see :func:`_compile_runner`), so
+    no warning filtering is needed anymore; pytest.ini still escalates
+    any donation warning to an error to keep it that way."""
+    return runner(batch)
 
 
 def _run_chunked(flat: list[Scenario], runner, chunk_size: int | None,
-                 devices: int | None = None, prunner=None):
+                 devices: int | None = None):
     """Dispatch ``flat`` elements through ``runner`` in fixed-size chunks.
 
     ``chunk_size=None`` keeps the single-dispatch fast path. Otherwise the
     element list is padded (with replicas of the last element, sliced off
     afterwards) to a multiple of ``chunk_size`` and dispatched chunk by
     chunk — every chunk has identical shapes, so jit compiles exactly once.
-    With ``devices > 1`` each chunk is reshaped to ``[devices, B/devices]``
-    and run through the pmapped ``prunner`` instead. Chunking and sharding
-    are bit-for-bit neutral: element randomness depends only on the
-    element itself, never on its batch position.
+    ``runner`` is already topology-bound (see :func:`_compile_runner`);
+    with ``devices > 1`` the chunk size is rounded up to a multiple of the
+    device count so ``shard_map`` can split the batch axis evenly — uneven
+    batches are handled entirely by the same padding path. Chunking and
+    sharding are bit-for-bit neutral: element randomness depends only on
+    the element itself, never on its batch position.
     """
     B = len(flat)
     ndev = int(devices or 1)
     if ndev > 1:
-        avail = jax.local_device_count()
-        if ndev > avail:
-            raise ValueError(
-                f"devices={ndev} but only {avail} local JAX device(s); "
-                "set --xla_force_host_platform_device_count or lower it")
-        chunk_size = chunk_size or B
+        chunk_size = min(chunk_size or B, B)
         chunk_size = -(-chunk_size // ndev) * ndev
-    if (not chunk_size or chunk_size >= B) and ndev <= 1:
+    elif not chunk_size or chunk_size >= B:
         return _dispatch(runner, _stack(flat))
-    chunk_size = min(chunk_size, -(-B // ndev) * ndev) or B
     pad = (-B) % chunk_size
     padded = list(flat) + [flat[-1]] * pad
     outs = []
     for i in range(0, len(padded), chunk_size):
-        batch = _stack(padded[i:i + chunk_size])
-        if ndev > 1:
-            shard = jax.tree_util.tree_map(
-                lambda x: x.reshape((ndev, chunk_size // ndev)
-                                    + x.shape[1:]), batch)
-            out = _dispatch(prunner, shard)
-            out = jax.tree_util.tree_map(
-                lambda x: np.asarray(x).reshape((chunk_size,) + x.shape[2:]),
-                out)
-        else:
-            out = _dispatch(runner, batch)
+        out = _dispatch(runner, _stack(padded[i:i + chunk_size]))
         outs.append(jax.tree_util.tree_map(np.asarray, out))
     cat = jax.tree_util.tree_map(
         lambda *xs: np.concatenate(xs, axis=0), *outs)
@@ -717,16 +771,15 @@ def run_grid(cells, seeds=range(8), sampler: str = "exact",
     """
     seeds = list(seeds)
     unroll = _default_unroll(sampler) if unroll is None else unroll
+    ndev = _ndev(devices)
     flat = _product(cells, seeds)
     st = _Static(
         max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
         max_objects=max(int(s.n_objects) for s in flat),
         max_steps=max(int(s.steps) for s in flat),
     )
-    res = _run_chunked(
-        flat, _vault_batch(st, sampler, unroll), chunk_size, devices,
-        _vault_batch(st, sampler, unroll, True) if (devices or 1) > 1
-        else None)
+    res = _run_chunked(flat, _vault_batch(st, sampler, unroll, ndev),
+                       chunk_size, ndev)
     return _reshape(res, len(flat) // len(seeds), len(seeds))
 
 
@@ -813,7 +866,7 @@ def _repl_finalize(st: _Static, sc: Scenario, inv, carry) -> ScenarioResult:
 
 @functools.lru_cache(maxsize=None)
 def _repl_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
-                pmapped: bool = False):
+                devices: int = 1):
     """Scan-of-vmap replicated baseline (same scaffolding as the vault
     engine, so the regional-burst thinning sits behind a real cond)."""
     smp = SAMPLERS[sampler]
@@ -840,9 +893,7 @@ def _repl_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
         res = jax.vmap(functools.partial(_repl_finalize, st))(scb, inv, carry)
         return res._replace(alive_frac_trace=alive_tr.T)
 
-    if pmapped:
-        return jax.pmap(run)
-    return jax.jit(run, donate_argnums=(0,))
+    return _compile_runner(run, devices)
 
 
 def run_replicated_grid(cells, seeds=range(8), sampler: str = "exact",
@@ -850,15 +901,14 @@ def run_replicated_grid(cells, seeds=range(8), sampler: str = "exact",
                         devices: int | None = None) -> ScenarioResult:
     """Ceph-like replicated baseline, same grid semantics as run_grid."""
     seeds = list(seeds)
+    ndev = _ndev(devices)
     flat = _product(cells, seeds)
     st = _Static(max_groups=1,
                  max_objects=max(int(s.n_objects) for s in flat),
                  max_steps=max(int(s.steps) for s in flat))
     unroll = _default_unroll(sampler)
-    res = _run_chunked(
-        flat, _repl_batch(st, sampler, unroll), chunk_size, devices,
-        _repl_batch(st, sampler, unroll, pmapped=True) if (devices or 1) > 1
-        else None)
+    res = _run_chunked(flat, _repl_batch(st, sampler, unroll, ndev),
+                       chunk_size, ndev)
     return _reshape(res, len(flat) // len(seeds), len(seeds))
 
 
@@ -901,7 +951,7 @@ def _trace_single(max_steps: int, smp: Sampler, repair_interval_hours,
 
 
 @functools.lru_cache(maxsize=None)
-def _trace_batch(max_steps: int, sampler: str, pmapped: bool = False):
+def _trace_batch(max_steps: int, sampler: str, devices: int = 1):
     smp = SAMPLERS[sampler]
     vrun = jax.vmap(functools.partial(_trace_single, max_steps, smp),
                     in_axes=(0, 0))
@@ -909,9 +959,7 @@ def _trace_batch(max_steps: int, sampler: str, pmapped: bool = False):
     def run(batch):
         return vrun(batch[0], batch[1])
 
-    if pmapped:
-        return jax.pmap(run)
-    return jax.jit(run, donate_argnums=(0,))
+    return _compile_runner(run, devices)
 
 
 def trace_grid(cells, seeds=range(8), repair_interval_hours: float = 24.0,
@@ -922,16 +970,15 @@ def trace_grid(cells, seeds=range(8), repair_interval_hours: float = 24.0,
     with a shorter horizon than the padded maximum hold their last value
     for the remaining steps."""
     seeds = list(seeds)
+    ndev = _ndev(devices)
     flat = _product(cells, seeds)
     max_steps = max(int(s.steps) for s in flat)
-    runner = _trace_batch(max_steps, sampler)
-    prunner = (_trace_batch(max_steps, sampler, True)
-               if (devices or 1) > 1 else None)
+    runner = _trace_batch(max_steps, sampler, ndev)
     # _run_chunked stacks element lists as pytrees; pair each scenario with
     # its repair interval so the same chunking path applies.
     interval = np.float32(repair_interval_hours)
     paired = [(interval, s) for s in flat]
-    out = _run_chunked(paired, runner, chunk_size, devices, prunner)
+    out = _run_chunked(paired, runner, chunk_size, ndev)
     return np.asarray(out, np.int64).reshape(
         len(flat) // len(seeds), len(seeds), max_steps)
 
@@ -958,12 +1005,10 @@ def _targeted_single(st: _Static, smp: Sampler, sc: Scenario):
 
 
 @functools.lru_cache(maxsize=None)
-def _targeted_batch(st: _Static, sampler: str, pmapped: bool = False):
+def _targeted_batch(st: _Static, sampler: str, devices: int = 1):
     run = jax.vmap(functools.partial(_targeted_single, st,
                                      SAMPLERS[sampler]))
-    if pmapped:
-        return jax.pmap(run)
-    return jax.jit(run, donate_argnums=(0,))
+    return _compile_runner(run, devices)
 
 
 def targeted_grid(cells, seeds=range(8), sampler: str = "exact",
@@ -972,14 +1017,13 @@ def targeted_grid(cells, seeds=range(8), sampler: str = "exact",
     """Lost-object fraction under the greedy targeted attack (Fig. 6
     bottom), batched over cells × seeds: ``[n_cells, n_seeds]`` float."""
     seeds = list(seeds)
+    ndev = _ndev(devices)
     flat = _product(cells, seeds)
     st = _Static(
         max_groups=max(int(s.n_objects * s.n_chunks) for s in flat),
         max_objects=max(int(s.n_objects) for s in flat), max_steps=1)
-    runner = _targeted_batch(st, sampler)
-    prunner = (_targeted_batch(st, sampler, True)
-               if (devices or 1) > 1 else None)
-    out = _run_chunked(flat, runner, chunk_size, devices, prunner)
+    out = _run_chunked(flat, _targeted_batch(st, sampler, ndev),
+                       chunk_size, ndev)
     return np.asarray(out).reshape(len(flat) // len(seeds), len(seeds))
 
 

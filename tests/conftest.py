@@ -1,4 +1,3 @@
-import os
 import pathlib
 import subprocess
 import sys
@@ -7,24 +6,28 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 SRC = REPO / "src"
+sys.path.insert(0, str(SRC))
+
+from repro import config as CFG  # noqa: E402
 
 
-def run_py(code: str, devices: int = 1, timeout: int = 300) -> str:
+def run_py(code: str, devices: int = 1, timeout: int = 300,
+           cache_dir: str | None = None) -> str:
     """Run a python snippet in a subprocess with N host devices.
 
     Used by tests that need >1 device: the main pytest process must keep
     the default single-device jax (smoke tests measure that world), so
-    multi-device checks fork with XLA_FLAGS set pre-init.
+    multi-device checks fork with XLA_FLAGS set pre-init. The environment
+    (device-count flag + topology-keyed compilation-cache dir — entries
+    are not portable across host topologies) comes from repro.config;
+    ``cache_dir`` overrides the compilation-cache location for tests that
+    need a controlled cold/warm cache (e.g. the donation-replay
+    regression).
     """
-    env = dict(os.environ)
+    env = CFG.subprocess_env(devices)
     env["PYTHONPATH"] = str(SRC)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    # never share a persistent compilation cache across device counts:
-    # the cache key does not cover the host topology flag, and replaying
-    # a foreign-topology entry yields corrupted outputs
-    cache = env.get("JAX_COMPILATION_CACHE_DIR")
-    if cache:
-        env["JAX_COMPILATION_CACHE_DIR"] = f"{cache}-sub-d{devices}"
+    if cache_dir is not None:
+        env["JAX_COMPILATION_CACHE_DIR"] = cache_dir
     out = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         env=env, timeout=timeout,

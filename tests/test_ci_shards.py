@@ -1,0 +1,88 @@
+"""The CI shard partition stays sound and its drift guard actually guards.
+
+``scripts/check_shards.py`` re-derives both tier-1 shards from
+``.github/workflows/ci.yml`` and the test files on disk. These tests pin
+the two properties that make it a gate rather than a lint: the committed
+workflow passes, and each drift mode — a file collected by *neither*
+shard, by *both* shards, or a stale ``ENGINE_SHARD`` entry — fails with
+a message naming the offending file. The doctored workflows below are
+edited copies of the real one, so the parser is exercised on the exact
+YAML shapes CI uses (folded ``>-`` block, ``--ignore=$t`` loop).
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+WORKFLOW = ROOT / ".github" / "workflows" / "ci.yml"
+LOOP = 'for t in $ENGINE_SHARD; do ignores="$ignores --ignore=$t"; done'
+
+
+def _run(workflow: pathlib.Path) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_shards.py"),
+         "--workflow", str(workflow)],
+        capture_output=True, text=True)
+
+
+def _engine_files() -> list[str]:
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        import check_shards
+        return check_shards.parse_engine_shard(WORKFLOW.read_text())
+    finally:
+        sys.path.pop(0)
+
+
+def test_committed_workflow_partition_is_sound():
+    proc = _run(WORKFLOW)
+    assert proc.returncode == 0, proc.stderr
+    assert "each collected exactly once" in proc.stdout
+
+
+def test_engine_shard_parser_matches_workflow():
+    files = _engine_files()
+    assert "tests/test_scenarios.py" in files
+    assert len(files) == len(set(files))
+    assert all(f.startswith("tests/test_") for f in files)
+
+
+def test_file_dropped_from_both_shards_fails(tmp_path):
+    # replace the loop with explicit ignores that ALSO ignore a core file:
+    # that file is then run by neither shard — the drift this guard exists
+    # to catch
+    explicit = " ".join(f"--ignore={f}" for f in _engine_files())
+    text = WORKFLOW.read_text()
+    assert LOOP in text, "core-shard loop changed; update this test"
+    doctored = tmp_path / "ci.yml"
+    doctored.write_text(text.replace(
+        LOOP, f'ignores="{explicit} --ignore=tests/test_gf.py"'))
+    proc = _run(doctored)
+    assert proc.returncode == 1
+    assert "tests/test_gf.py" in proc.stderr
+    assert "NEITHER" in proc.stderr
+
+
+def test_file_collected_by_both_shards_fails(tmp_path):
+    engine = _engine_files()
+    explicit = " ".join(f"--ignore={f}" for f in engine[:-1])
+    doctored = tmp_path / "ci.yml"
+    doctored.write_text(WORKFLOW.read_text().replace(
+        LOOP, f'ignores="{explicit}"'))
+    proc = _run(doctored)
+    assert proc.returncode == 1
+    assert engine[-1] in proc.stderr
+    assert "BOTH" in proc.stderr
+
+
+def test_stale_engine_shard_entry_fails(tmp_path):
+    doctored = tmp_path / "ci.yml"
+    doctored.write_text(WORKFLOW.read_text().replace(
+        "tests/test_scenarios.py",
+        "tests/test_scenarios.py tests/test_gone.py", 1))
+    proc = _run(doctored)
+    assert proc.returncode == 1
+    assert "tests/test_gone.py" in proc.stderr
+    assert "stale" in proc.stderr

@@ -1,0 +1,62 @@
+"""Unit tests for repro.config — the one environment-setup path.
+
+These cover the pure string/env plumbing (no jax import, no subprocess):
+device-flag rewriting, topology-keyed cache dirs and their re-keying,
+subprocess environments and the shell-export CLI contract that
+``scripts/test.sh`` evals.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+
+from repro import config as CFG
+
+
+def test_device_flags_append_and_replace():
+    assert CFG.device_flags(4, "") == \
+        "--xla_force_host_platform_device_count=4"
+    # replaces an existing count instead of stacking a second flag
+    out = CFG.device_flags(8, "--xla_force_host_platform_device_count=2")
+    assert out.count("xla_force_host_platform_device_count") == 1
+    assert "=8" in out
+    # unrelated flags survive
+    out = CFG.device_flags(
+        2, "--xla_cpu_foo=1 --xla_force_host_platform_device_count=4")
+    assert "--xla_cpu_foo=1" in out and "=2" in out
+
+
+def test_cache_dir_keyed_by_topology():
+    env = {"REPRO_JAX_CACHE_BASE": "/tmp/cc"}
+    assert CFG.cache_dir(1, env) == "/tmp/cc-d1"
+    assert CFG.cache_dir(8, env) == "/tmp/cc-d8"
+
+
+def test_cache_base_strips_existing_topology_suffix():
+    # re-keying an already-keyed dir must not stack suffixes
+    env = {"JAX_COMPILATION_CACHE_DIR": "/tmp/cc-d8"}
+    assert CFG.cache_base(env) == "/tmp/cc"
+    assert CFG.cache_dir(2, env) == "/tmp/cc-d2"
+
+
+def test_subprocess_env_sets_flags_and_cache():
+    env = CFG.subprocess_env(4, {"PATH": "/bin",
+                                 "REPRO_JAX_CACHE_BASE": "/tmp/cc"})
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    assert env["JAX_COMPILATION_CACHE_DIR"] == "/tmp/cc-d4"
+    assert env["PATH"] == "/bin"
+
+
+def test_shell_exports_cli_round_trip():
+    # scripts/test.sh does: eval "$(python -m repro.config)"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.config"],
+        capture_output=True, text=True,
+        env={"PATH": "/usr/bin:/bin", "XLA_DEVICES": "2",
+             "REPRO_JAX_CACHE_BASE": "/tmp/cc",
+             "PYTHONPATH": CFG.__file__.rsplit("/repro/", 1)[0]})
+    assert out.returncode == 0, out.stderr
+    lines = out.stdout.splitlines()
+    assert any(l.startswith("export XLA_FLAGS=") and "=2" in l
+               for l in lines)
+    assert 'export JAX_COMPILATION_CACHE_DIR="/tmp/cc-d2"' in lines

@@ -154,7 +154,7 @@ def test_other_runners_chunking_bitexact():
 
 
 def test_device_axis_bitexact(subproc):
-    """pmap-sharded dispatch must be bit-identical to single-device."""
+    """shard_map-sharded dispatch must be bit-identical to single-device."""
     out = subproc("""
 import numpy as np
 from repro.core import scenarios as SC

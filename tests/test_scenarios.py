@@ -199,3 +199,109 @@ def test_grid_shapes_and_compat_wrappers():
     assert r.repair_traffic_units > 0
     rb = S.simulate_replicated_batched(SMALL_P, seeds=range(3))
     assert isinstance(rb, S.SimResult)
+
+
+# ------------------------------------------------- sharded (devices=) axis
+# devices=N compiles the SAME traced run into one jitted executable whose
+# batch axis is split over a shard_map mesh (scenarios._compile_runner).
+# The samplers are counter-based and per-element, so the sharded results
+# must be bit-identical — any drift is a sharding bug. Subprocess-driven:
+# the device count is an XLA pre-init flag (tests/conftest.py run_py).
+def test_sharded_dispatch_all_runners_bitexact(subproc):
+    out = subproc("""
+import numpy as np
+from repro.core import scenarios as SC
+cells = [dict(n_objects=8, n_chunks=2, k_outer=2, k_inner=8, r_inner=20,
+              n_nodes=2000, byz_fraction=0.25, churn_per_year=52.0,
+              step_hours=12.0, years=0.05, cache_ttl_hours=24.0)]
+def diff(tag, a, b):
+    fields = getattr(a, "_fields", None)
+    pairs = zip(fields, a, b) if fields else [(tag, a, b)]
+    for name, x, y in pairs:
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (tag, name)
+diff("vault", SC.run_grid(cells, seeds=range(4), sampler="arx"),
+     SC.run_grid(cells, seeds=range(4), sampler="arx", devices=2))
+diff("repl", SC.run_replicated_grid(cells, seeds=range(4), sampler="arx"),
+     SC.run_replicated_grid(cells, seeds=range(4), sampler="arx", devices=2))
+tc = [dict(k_inner=8, r_inner=20, byz_fraction=0.2, churn_per_year=52.0,
+           step_hours=12.0, years=0.05)]
+diff("trace", SC.trace_grid(tc, seeds=range(4), sampler="arx"),
+     SC.trace_grid(tc, seeds=range(4), sampler="arx", devices=2))
+gc = [dict(n_objects=30, n_chunks=4, k_outer=2, byz_fraction=1 / 3,
+           attack_frac=0.1, n_nodes=1000)]
+diff("targeted", SC.targeted_grid(gc, seeds=range(4), sampler="arx"),
+     SC.targeted_grid(gc, seeds=range(4), sampler="arx", devices=2))
+print("ALL_RUNNERS_SHARD_OK")
+""", devices=2)
+    assert "ALL_RUNNERS_SHARD_OK" in out
+
+
+def test_sharded_dispatch_uneven_batch_padding(subproc):
+    """B % devices != 0 exercises the chunker's padding path (replicas of
+    the last element, sliced off) — including chunk_size rounding."""
+    out = subproc("""
+import numpy as np
+from repro.core import scenarios as SC
+cells = [dict(n_objects=8, n_chunks=2, k_outer=2, k_inner=8, r_inner=20,
+              n_nodes=2000, byz_fraction=0.25, churn_per_year=52.0,
+              step_hours=12.0, years=0.05)]
+a = SC.run_grid(cells, seeds=range(3), sampler="arx")
+b = SC.run_grid(cells, seeds=range(3), sampler="arx", devices=2)
+c = SC.run_grid(cells, seeds=range(3), sampler="arx", devices=2,
+                chunk_size=3)  # rounds up to 4 -> padded chunks
+for name, x, y, z in zip(a._fields, a, b, c):
+    assert np.array_equal(np.asarray(x), np.asarray(y)), name
+    assert np.array_equal(np.asarray(x), np.asarray(z)), name
+print("UNEVEN_SHARD_OK")
+""", devices=2)
+    assert "UNEVEN_SHARD_OK" in out
+
+
+def test_devices_exceed_available_error_message():
+    import pytest
+
+    with pytest.raises(ValueError, match=r"local JAX device"):
+        SC.run_grid([SMALL], seeds=range(2), sampler="fast", devices=97)
+    with pytest.raises(ValueError, match=r"devices=97"):
+        SC.trace_grid([dict(k_inner=8, r_inner=20, years=0.05)],
+                      seeds=range(2), devices=97)
+
+
+def test_warm_cache_two_runners_bitexact(subproc, tmp_path):
+    """Persistent-cache replay regression: results must survive a warm
+    compilation cache with a second executable running in the process.
+
+    With ``donate_argnums`` on the runners this corrupted the FIRST
+    dispatch's outputs: a fresh CPU compile refuses the int32→float
+    aliasing ("donated buffers were not usable") and is correct, but the
+    deserialized cache entry honors the requested aliases, frees the
+    donated input while live outputs still point into it, and the second
+    executable's allocations scribble over them (random fields each run).
+    Donation is therefore banned in ``scenarios._compile_runner``; this
+    test runs the same two-runner snippet cold (writes the cache) and
+    warm (replays it) against an isolated cache dir and demands identical
+    bytes.
+    """
+    snippet = """
+import hashlib
+import numpy as np
+from repro.core import scenarios as SC
+cells = [dict(n_objects=8, n_chunks=2, k_outer=2, k_inner=8, r_inner=20,
+              n_nodes=2000, byz_fraction=0.25, churn_per_year=52.0,
+              step_hours=12.0, years=0.05)]
+a = SC.run_grid(cells, seeds=range(4), sampler="arx")
+b = SC.run_grid(cells, seeds=range(4), sampler="arx", devices=2)
+h = hashlib.sha256()
+for r in (a, b):
+    for name, x in zip(r._fields, r):
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(np.asarray(x)).tobytes())
+print("DIGEST", h.hexdigest())
+"""
+    cache = str(tmp_path / "jax-cache-d2")
+    cold = subproc(snippet, devices=2, cache_dir=cache)
+    warm = subproc(snippet, devices=2, cache_dir=cache)
+    d_cold = [l for l in cold.splitlines() if l.startswith("DIGEST")]
+    d_warm = [l for l in warm.splitlines() if l.startswith("DIGEST")]
+    assert d_cold and d_cold == d_warm, (
+        f"warm-cache replay diverged from cold run:\n{cold}\n{warm}")
