@@ -1,7 +1,8 @@
 """Cross-validation: protocol-level simulator vs batched group-level engine.
 
-Runs matched configurations — same churn/adversary/cache policies (one
-source of truth: ``repro.core.policies``), same code parameters, same
+Runs matched configurations — auto-discovered from the policy zoo
+registry (``policies.zoo_members()``; one source of truth, guarded by
+``scripts/check_policy_matrix.py``), same code parameters, same
 seeds-per-cell discipline — through BOTH simulation layers:
 
 * the group-level engine (``scenarios.run_grid``, 8 seeds, mean ± 95% CI),
@@ -29,6 +30,15 @@ the serving PR: the engine now retires cached copies when holders die,
 and ``tests/test_cross_validation.py::test_cache_holder_leak_closed``
 proves the old optimistic model over-credits while the fixed one agrees.)
 
+The four ISSUE-10 zoo members add their own known deltas: ``pareto_static``
+(the engine's protected-cohort mean-field is a churn *lower* bound, so
+protocol repair activity may exceed it — one-sided), ``iid_collude``
+(withholding retries are exact in the protocol but a closed-form extra-pull
+term in the engine — one-sided on traffic) and ``iid_eclipse_targeted``
+(composes both eclipse leaks — one-sided like ``iid_eclipse``);
+``diurnal_static`` integrates to the same daily-mean rate in both layers
+and rides the normal two-sided gates.
+
 Serving metrics (``read_rate > 0`` in every matched config) compare the
 engine's closed-form Zipf request load against the protocol's sampled
 end-to-end Get() batches: served traffic, hit rate, and failed-read
@@ -46,10 +56,18 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import SCALE, emit
+from repro.core import policies as P
 from repro.core import protocol_sim as PS
 from repro.core import scenarios as SC
 
 ENGINE_SEEDS = tuple(range(8))
+
+# Registered zoo members intentionally NOT cross-validated, as
+# ``{name: reason}``. Every entry needs a non-empty reason;
+# ``scripts/check_policy_matrix.py`` asserts that each registered policy
+# is either auto-discovered below or waived here, and that no waiver is
+# stale. Keep this a plain dict literal — the checker ast-parses it.
+EXCLUDED_ROWS: dict[str, str] = {}
 
 # quick/full scales, shared with tests/test_cross_validation.py so the
 # committed CSV and the enforcing test always validate the same configs
@@ -65,7 +83,19 @@ METRICS = ("repairs", "repair_traffic_units", "cache_hits", "lost_objects",
 
 def matched_configs(steps: int, n_objects: int,
                     n_nodes: int) -> dict[str, PS.ProtocolParams]:
-    """The matched-config suite: every policy axis the engine sweeps.
+    """The matched-config suite, auto-discovered from the policy zoo.
+
+    One row per ``policies.zoo_members()`` entry (minus ``EXCLUDED_ROWS``
+    waivers): each registered :class:`~repro.core.policies.ZooEntry`
+    carries its spec, its matched-config knob overrides (``StepFrac``
+    values resolve against ``steps`` here) and its gate contract
+    (``"two_sided"`` rows ride the blanket combined-CI gates in
+    ``tests/test_cross_validation.py``; ``"one_sided"`` rows — eclipse,
+    targeted, the composed eclipse+targeted, pareto, collude — are
+    documented abstraction leaks with dedicated bound tests). Registering
+    a new zoo member therefore *is* adding its cross-validation row;
+    ``scripts/check_policy_matrix.py`` enforces that nothing is silently
+    dropped.
 
     ``read_rate`` is on in every config so the serving metrics are
     cross-validated on the full churn/adversary/cache grid;
@@ -76,29 +106,13 @@ def matched_configs(steps: int, n_objects: int,
                 k_inner=6, r_inner=14, byz_fraction=0.1, churn_per_year=26.0,
                 step_hours=12.0, steps=steps, claim_every=2,
                 read_rate=40.0, zipf_alpha=1.1)
-    return {
-        "iid_static": PS.ProtocolParams(**base),
-        "regional_static": PS.ProtocolParams(
-            **base, churn_policy="regional", burst_prob=0.15, burst_mult=8.0),
-        "iid_adaptive": PS.ProtocolParams(
-            **base, adv_policy="adaptive", adapt_boost=2.0),
-        "iid_static_cache": PS.ProtocolParams(**base, cache_ttl_hours=48.0),
-        "iid_targeted": PS.ProtocolParams(
-            **base, adv_policy="targeted", attack_frac=0.25,
-            attack_step=steps // 2),
-        # protocol-only partition scenario vs the engine's mean-field
-        # approximation (policies.ADV_ECLIPSE). Documented deltas: the
-        # engine eclipses a deterministic whole-group share where the
-        # protocol's segment-boundary groups straddle the cut and keep
-        # partial repair, so the engine is the conservative bound —
-        # tests/test_cross_validation.py gates every metric of this row
-        # except lost_objects, which gets the one-sided bound (protocol
-        # losses must stay under the engine's upper CI band)
-        "iid_eclipse": PS.ProtocolParams(
-            **{**base, "churn_per_year": 80.0}, adv_policy="eclipse",
-            attack_frac=0.3, attack_step=steps // 4,
-            eclipse_steps=steps // 3),
-    }
+    configs = {}
+    for entry in P.zoo_members():
+        if entry.name in EXCLUDED_ROWS:
+            continue
+        kw = P.zoo_config_kwargs(entry, steps)
+        configs[entry.name] = PS.ProtocolParams(**{**base, **kw})
+    return configs
 
 
 def compare(configs: dict[str, PS.ProtocolParams], proto_seeds,

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Policy-matrix drift guard: every registered zoo policy is cross-validated.
+
+``benchmarks/cross_validate.py`` auto-discovers its matched-config matrix
+from the policy zoo registry (``policies.zoo_members()``), so *registering*
+a policy is what adds its cross-validation row. That coupling drifts in
+two ways:
+
+* the benchmark quietly stops auto-discovering — someone reverts
+  ``matched_configs`` to a hand-written dict and newly registered policies
+  silently fall out of the matrix;
+* a policy is waived via ``EXCLUDED_ROWS`` without a recorded reason, or
+  a waiver goes stale (names a policy that was since renamed or removed)
+  and would shadow a future policy of the same name.
+
+This script re-derives both sides from the *source text*: the
+``_register(ZooEntry(name=..., ...))`` literals in
+``src/repro/core/policies.py`` (they are kept ast-parseable by
+convention — a comment in the registry says so) and the ``EXCLUDED_ROWS``
+dict literal plus the ``zoo_members()`` call in
+``benchmarks/cross_validate.py``. It exits non-zero on any drift and
+deliberately has **no dependencies beyond the stdlib** — the docs CI job
+that runs it installs nothing, so it must not import the repo (which
+needs jax/numpy).
+
+Usage: ``python scripts/check_policy_matrix.py [--policies PATH]
+[--bench PATH]`` (defaults: src/repro/core/policies.py and
+benchmarks/cross_validate.py).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def registered_names(policies_path: pathlib.Path) -> list[str]:
+    """Zoo names from the ``_register(ZooEntry(name=...))`` literals."""
+    tree = ast.parse(policies_path.read_text())
+    names: list[str] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "_register"):
+            continue
+        for arg in node.args:
+            if not (isinstance(arg, ast.Call)
+                    and isinstance(arg.func, (ast.Name, ast.Attribute))):
+                continue
+            for kw in arg.keywords:
+                if (kw.arg == "name"
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, str)):
+                    names.append(kw.value.value)
+    if not names:
+        raise SystemExit(
+            f"check_policy_matrix: no _register(ZooEntry(name=...)) "
+            f"literals found in {policies_path} — registry moved or no "
+            "longer ast-parseable?")
+    return names
+
+
+def parse_bench(bench_path: pathlib.Path) -> tuple[dict[str, str], bool]:
+    """``(EXCLUDED_ROWS literal, does the module call zoo_members())``."""
+    tree = ast.parse(bench_path.read_text())
+    excluded: dict[str, str] | None = None
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == "EXCLUDED_ROWS":
+                try:
+                    excluded = ast.literal_eval(node.value)
+                except ValueError:
+                    raise SystemExit(
+                        "check_policy_matrix: EXCLUDED_ROWS is not a "
+                        "plain dict literal — keep it ast-parseable")
+    discovers = any(
+        isinstance(node, ast.Call)
+        and ((isinstance(node.func, ast.Attribute)
+              and node.func.attr == "zoo_members")
+             or (isinstance(node.func, ast.Name)
+                 and node.func.id == "zoo_members"))
+        for node in ast.walk(tree))
+    if excluded is None:
+        raise SystemExit(
+            f"check_policy_matrix: no EXCLUDED_ROWS dict in {bench_path}")
+    return excluded, discovers
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--policies",
+                    default=str(ROOT / "src" / "repro" / "core"
+                                / "policies.py"))
+    ap.add_argument("--bench",
+                    default=str(ROOT / "benchmarks" / "cross_validate.py"))
+    args = ap.parse_args(argv)
+
+    names = registered_names(pathlib.Path(args.policies))
+    excluded, discovers = parse_bench(pathlib.Path(args.bench))
+
+    errors: list[str] = []
+    if not discovers:
+        errors.append(
+            "benchmarks/cross_validate.py no longer calls zoo_members() — "
+            "the matrix is not auto-discovered, so registered policies can "
+            "silently drop out of cross-validation")
+    for n in {x for x in names if names.count(x) > 1}:
+        errors.append(f"{n}: registered more than once in the zoo")
+    for n, reason in sorted(excluded.items()):
+        if n not in names:
+            errors.append(
+                f"{n}: waived in EXCLUDED_ROWS but not a registered zoo "
+                "policy (stale waiver — remove it)")
+        if not (isinstance(reason, str) and reason.strip()):
+            errors.append(
+                f"{n}: EXCLUDED_ROWS waiver has no reason — every "
+                "exclusion must record why")
+
+    if errors:
+        print("check_policy_matrix: registry/matrix drift:",
+              file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    rows = [n for n in names if n not in excluded]
+    print(f"check_policy_matrix: OK — {len(names)} registered policies: "
+          f"{len(rows)} cross-validated + {len(excluded)} waived "
+          "with reasons")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

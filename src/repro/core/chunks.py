@@ -39,6 +39,31 @@ def fragment_hash(chash: bytes, index: int) -> int:
     )
 
 
+def payload_tag(payload: bytes) -> int:
+    """Integrity tag of a fragment payload.
+
+    ``fragment_hash`` above binds only ``(chash, index)`` — it places a
+    fragment on the ring but says nothing about its *bytes*.  The inner
+    code is deterministic (``inner_encode_fragment``), so a fragment's
+    honest payload is a pure function of its chunk and the creator can
+    record this tag at encode time (``SimNetwork.frag_tags``) for pullers
+    to verify rows against — the simulation stand-in for the paper's
+    verifiable-fragment property, at hash cost instead of algebraic
+    checks.  sha256-prefix, so any corruption flips it."""
+    return int.from_bytes(
+        hashlib.sha256(b"vault-frag-tag" + payload).digest()[:8], "big")
+
+
+def corrupt_payload(payload: bytes) -> bytes:
+    """Deterministically corrupted copy of a fragment payload — what a
+    colluding/withholding node (``policies.ADV_COLLUDE``) serves at pull
+    time: right length, right index, wrong bytes (first byte flipped), so
+    it survives every shape check and dies only at tag verification."""
+    if not payload:
+        return b"\xa5"
+    return bytes((payload[0] ^ 0xA5,)) + payload[1:]
+
+
 def split_blocks(data: bytes, k: int) -> np.ndarray:
     """Split ``data`` into k equal blocks (8-byte length header + padding)."""
     payload = len(data).to_bytes(LEN_HEADER, "big") + data

@@ -46,6 +46,13 @@ then the engine refuses to answer pre-check queries for them, so callers
 fall back to the exact dict walk. Bit-compatibility of the whole scheme
 against the scalar loop is enforced end-to-end by
 ``tests/test_protocol_golden.py``.
+
+The claim round is deliberately adversary-agnostic: colluding/withholding
+Byzantine nodes (``policies.ADV_COLLUDE``) hold valid selection proofs and
+broadcast well-formed claims, so they pass this audit layer
+indistinguishably from honest members — by design. Withholding is only
+observable (and charged) at fragment pull time, where ``SimNetwork.row_ok``
+rejects their corrupt payloads.
 """
 from __future__ import annotations
 

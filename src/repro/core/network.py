@@ -17,6 +17,8 @@ import numpy as np
 
 from repro.core import rateless
 from repro.core import selection as sel
+from repro.core.chunks import corrupt_payload as C_corrupt
+from repro.core.chunks import payload_tag as C_payload_tag
 from repro.core.vrf import RING, KeyPair, make_registry, node_id
 
 # --- geo latency model (one-way ms between the paper's 5 AWS regions) -----
@@ -67,7 +69,16 @@ class GroupView:
 class Node:
     """One VAULT peer. Byzantine nodes follow the protocol but store nothing
     (the paper's Fig. 6 adversary) — they answer claims, accept stores, and
-    return nothing on fragment reads."""
+    return nothing on fragment reads.
+
+    ``colluding`` Byzantine nodes (the BFT-DSN withholding adversary,
+    ``policies.ADV_COLLUDE``) go further: they *do* store fragments and
+    answer Locate()/claims indistinguishably from honest members — they
+    pass every audit — but serve deterministically corrupt payloads at
+    pull time (``chunks.corrupt_payload``). Pullers verify rows against
+    the creator-recorded tags (``SimNetwork.frag_tags``) and discard
+    them after paying the transfer. Set by the protocol loop at spawn;
+    ``session_end`` likewise (Pareto session churn, ``CHURN_PARETO``)."""
 
     def __init__(
         self, net: "SimNetwork", kp: KeyPair, region: int, byzantine: bool
@@ -77,6 +88,8 @@ class Node:
         self.nid = node_id(kp.pk)
         self.region = region
         self.byzantine = byzantine
+        self.colluding = False
+        self.session_end = float("inf")  # hours; finite only under pareto
         self.alive = True
         self.row = -1  # dense index into the network's alive table
         self.fragments: dict[tuple[bytes, int], bytes] = {}
@@ -114,7 +127,7 @@ class Node:
             self.claim_proofs[(meta.chash, index)] = proof
             self.claim_proofs_by_chash.setdefault(meta.chash, {})[index] = \
                 proof
-        if not self.byzantine:
+        if not self.byzantine or self.colluding:
             self.fragments[(meta.chash, index)] = payload
             self.fragments_by_chash.setdefault(meta.chash, {})[index] = \
                 payload
@@ -122,9 +135,17 @@ class Node:
 
     def serve_fragments(self, chash: bytes) -> dict[int, bytes]:
         net = self.net
-        if (self.byzantine or not self.alive
+        if (not self.alive
                 or (net._eclipse is not None and net.is_eclipsed(self.nid))):
             return {}
+        if self.byzantine:
+            if not self.colluding:
+                return {}
+            # withholding: right indices, corrupted bytes — the puller
+            # pays the transfer, then the tag check discards the row
+            frags = self.fragments_by_chash.get(chash)
+            return ({i: C_corrupt(p) for i, p in frags.items()}
+                    if frags else {})
         frags = self.fragments_by_chash.get(chash)
         return dict(frags) if frags else {}
 
@@ -213,6 +234,12 @@ class SimNetwork:
         self._locate_prev: dict[tuple, "sel.LocateRound"] = {}
         self.row_of: dict[int, int] = {}    # nid -> dense row
         self.alive_set: set[int] = set()    # alive nids (mirror of .alive)
+        # creator-recorded fragment integrity tags (chash, index) ->
+        # chunks.payload_tag of the honest bytes. Written by whoever
+        # *encodes* a fragment (the storing client, a repairer); checked
+        # by row_ok() at every pull so colluding holders can't slip
+        # corrupt rows into a decode. Pure accounting — no RNG.
+        self.frag_tags: dict[tuple[bytes, int], int] = {}
         # dead-node reaper bookkeeping: fail_node drops the node's dict
         # state immediately; the dense row tables are compacted lazily once
         # dead rows outnumber max(64, alive) — amortized O(1) per death.
@@ -244,6 +271,23 @@ class SimNetwork:
                 if node is not None and self.is_eclipsed(node.nid):
                     ecl[i] = True
         self.eclipsed_rows = ecl
+
+    # -- fragment integrity ---------------------------------------------------
+    def record_frag_tag(self, chash: bytes, index: int,
+                        payload: bytes) -> None:
+        """Record the creator-side integrity tag of an honestly encoded
+        fragment (see ``frag_tags``)."""
+        self.frag_tags[(chash, index)] = C_payload_tag(payload)
+
+    def row_ok(self, chash: bytes, index: int, payload: bytes) -> bool:
+        """Verify a pulled fragment row against its creator-recorded tag.
+
+        Rows with no recorded tag are trusted (pre-tag stores, e.g. test
+        scaffolding that bypasses the client path); a recorded tag must
+        match exactly — colluders' corrupt rows fail here and are
+        discarded *after* their transfer was paid."""
+        tag = self.frag_tags.get((chash, index))
+        return tag is None or tag == C_payload_tag(payload)
 
     def add_node(self, byzantine: bool = False, seed: bytes | None = None) -> Node:
         kp = KeyPair.generate(seed)

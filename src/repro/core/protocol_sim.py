@@ -44,6 +44,27 @@ Correspondence to the engine's abstraction, and the known deltas
   refill-Byzantine probability is ``βf / (βf + (1 − f))`` for population
   share ``f`` and boost ``β`` — the engine's ``βf``
   (``policies.refill_byz_probability``) to first order in ``f``.
+* **Diurnal churn** — the per-step failure probability is recomputed every
+  step from the sinusoidally modulated rate (``policies.diurnal_p_fail``,
+  midpoint-sampled); both layers integrate the same factor, so daily-mean
+  rates match exactly and the cross-validation gate stays two-sided.
+* **Pareto sessions** — under ``CHURN_PARETO`` the failure coin is replaced
+  by deterministic session expiry: every arrival draws a Pareto(α) lifetime
+  from a dedicated RNG stream (mean matched to ``churn_per_year``) and
+  departs when it ends. The engine's mean-field form
+  (``policies.pareto_p_fail``) keeps the protected-cohort *lower bound* on
+  churn, so protocol loss/traffic can only exceed it — a one-sided gate
+  (documented abstraction leak, like eclipse).
+* **Collusion / withholding** — ``ADV_COLLUDE`` Byzantine nodes *do* store
+  fragments and pass Locate()/claims audits, but serve deterministically
+  corrupt payloads at pull time; pullers verify rows against
+  creator-recorded tags (``SimNetwork.frag_tags``), pay the wasted
+  transfer, and retry on honest holders — the GF(256) decode never sees a
+  corrupt row. Everything except repair-traffic accounting is
+  bit-identical to the matched static run (pinned by a differential test).
+* **Eclipse + targeted** — ``ADV_ECLIPSE_TARGETED`` (the composed zoo
+  member) runs the partition window *and* the greedy kill at
+  ``attack_step``, sharing the ``attack_frac`` budget knob.
 * **Repair accounting** — a repaired fragment costs ``K_inner`` fragment
   transfers on a cold pull and one on a warm chunk-cache hit (repair.py
   docstring); ``repair_traffic_units`` converts bytes to object-size units
@@ -92,6 +113,10 @@ from repro.core.vrf import RING
 # ``net.rng``, so a ``read_rate=0`` run is bit-identical to one predating
 # the serving layer (pinned by tests/test_protocol_golden.py)
 _SERVE_STREAM = 0x5E17
+# dedicated stream for Pareto session-length draws (``CHURN_PARETO``):
+# session lifetimes never touch ``rng``, so every non-pareto run is
+# bit-identical to one predating session churn
+_SESSION_STREAM = 0x5E55
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +128,17 @@ class ProtocolParams:
     Units: ``churn_per_year`` in failures per node-year, ``step_hours`` /
     ``cache_ttl_hours`` in hours, ``object_bytes`` in bytes,
     ``attack_frac`` as a fraction of ``n_nodes``.
+
+    ``policy=`` is the preferred way to pick the churn/adversary point:
+    any ``policies.PolicySpec`` (combinators / ``compose``), registered
+    zoo name, or plain policy name resolves through ``policies.resolve``
+    and its knobs are applied over the matching fields below.
+
+    .. deprecated:: PR 10
+        ``churn_policy=`` / ``adv_policy=`` (and passing policy knobs
+        while relying on the defaults of the other axis) remain supported
+        shims with unchanged behavior; when ``policy=`` is given it wins
+        over both id fields and over any knob field its spec carries.
     """
 
     n_nodes: int = 120
@@ -125,12 +161,31 @@ class ProtocolParams:
     attack_frac: float = 0.0
     attack_step: int = 0
     eclipse_steps: int = 0  # partition window length (eclipse policy)
+    diurnal_amplitude: float = 0.6  # rate modulation depth (diurnal churn)
+    pareto_alpha: float = 1.5  # session-length tail index (pareto churn)
     read_rate: float = 0.0  # client Get() requests per step (serving layer)
     zipf_alpha: float = 1.1  # object-popularity skew (policies.zipf_weights)
     region_cap: float = 0.0  # per-region link budget, object units/step; 0=∞
     claim_every: int = 1  # persistence-claim broadcast period (steps)
     vrf: str = "hash"  # selection-proof registry backend (vrf.make_registry)
     seed: int = 0
+    policy: object = None  # PolicySpec / zoo name / policy name (resolver)
+
+    def __post_init__(self):
+        # Lower ``policy=`` onto the legacy id/knob fields exactly once.
+        # Idempotent by construction (``resolve`` is deterministic), so
+        # ``dataclasses.replace`` — which re-runs this — is safe.
+        if self.policy is None:
+            return
+        low = P.resolve(self.policy)
+        object.__setattr__(self, "churn_policy", low.churn)
+        object.__setattr__(self, "adv_policy", low.adversary)
+        kn = low.knob_dict()
+        for k in P.POLICY_KNOBS:
+            if k in kn:
+                object.__setattr__(self, k, kn.pop(k))
+        if kn:  # a spec knob with no matching field is a bug, not a no-op
+            raise TypeError(f"unknown policy knobs: {sorted(kn)}")
 
     @property
     def code_params(self) -> C.CodeParams:
@@ -151,6 +206,8 @@ class ProtocolParams:
             burst_prob=self.burst_prob, burst_mult=self.burst_mult,
             adapt_boost=self.adapt_boost, attack_frac=self.attack_frac,
             attack_step=self.attack_step, eclipse_steps=self.eclipse_steps,
+            diurnal_amplitude=self.diurnal_amplitude,
+            pareto_alpha=self.pareto_alpha,
             read_rate=self.read_rate, zipf_alpha=self.zipf_alpha,
             region_cap=self.region_cap,
         )
@@ -209,12 +266,30 @@ def rush_picker(net: SimNetwork, boost: float):
     return pick
 
 
-def _spawn(net: SimNetwork, rng, byz_p: float, counter: list[int]) -> Node:
-    """Add one node with a deterministic keypair seed and Byzantine coin."""
+def _spawn(net: SimNetwork, rng, byz_p: float, counter: list[int],
+           colluding: bool = False, session=None) -> Node:
+    """Add one node with a deterministic keypair seed and Byzantine coin.
+
+    ``colluding=True`` flags Byzantine arrivals as withholding colluders
+    (``policies.ADV_COLLUDE``). ``session``, when given, is the Pareto
+    session context ``(session_rng, mean_hours, alpha, adaptive)``
+    (``CHURN_PARETO``): the node's lifetime is drawn from the dedicated
+    session stream — never from ``rng``, so non-pareto runs are
+    bit-identical — except adaptive Byzantine nodes, which never churn
+    voluntarily (``policies.byz_churn_probability``) and keep an
+    infinite session."""
     counter[0] += 1
-    return net.add_node(
+    node = net.add_node(
         byzantine=bool(rng.random() < byz_p),
         seed=counter[0].to_bytes(8, "little"))
+    if colluding and node.byzantine:
+        node.colluding = True
+    if session is not None:
+        srng, mean_h, alpha, adaptive = session
+        if not (node.byzantine and adaptive):
+            node.session_end = net.now + float(P.pareto_session_from_uniform(
+                srng.random(), mean_h, alpha, xp=np))
+    return node
 
 
 def _census(net: SimNetwork, registry: dict, k_inner: int):
@@ -259,11 +334,13 @@ def _burst_coin(net: SimNetwork, rng, p: ProtocolParams, p_fail: float):
 
 
 def _respawn(net: SimNetwork, rng, p: ProtocolParams, failed: list[int],
-             counter: list[int]) -> int:
+             counter: list[int], session=None) -> int:
     """Replace ``failed`` nodes with fresh arrivals (population constant)."""
+    colluding = P.adv_policy_id(p.adv_policy) in P.ADV_COLLUDE_FAMILY
     for nid in failed:
         net.fail_node(nid)
-        _spawn(net, rng, p.byz_fraction, counter)
+        _spawn(net, rng, p.byz_fraction, counter, colluding=colluding,
+               session=session)
     return len(failed)
 
 
@@ -323,6 +400,19 @@ def _churn_step_vec(net: SimNetwork, rng, p: ProtocolParams, client_nid: int,
     dead = us < pf
     failed = [n.nid for n, d in zip(elig, dead) if d]
     return _respawn(net, rng, p, failed, counter)
+
+
+def _churn_step_pareto(net: SimNetwork, rng, p: ProtocolParams,
+                       client_nid: int, counter: list[int],
+                       session) -> int:
+    """Session-expiry churn (``CHURN_PARETO``): a node departs when its
+    Pareto-drawn session ends — deterministic given the session stream,
+    no per-step failure coin — and its replacement draws a fresh session.
+    The ring walk is the sorted-nid order, so the failure list is
+    deterministic; respawn Byzantine coins still come from ``rng``."""
+    failed = [n.nid for n in net.alive_nodes()
+              if n.nid != client_nid and n.session_end <= net.now]
+    return _respawn(net, rng, p, failed, counter, session=session)
 
 
 def _targeted_attack(net: SimNetwork, rng, p: ProtocolParams,
@@ -586,7 +676,14 @@ def _serve_tick(net: SimNetwork, p: ProtocolParams, serve_rng, oids,
                                   nbytes / frag_len0 * frag_units, True,
                                   {warm.region: nbytes}))
                 continue
-            rows, _holders = gather_available(net, chash, p.r_inner)
+            # corrupt rows (colluding holders) are filtered by the gather
+            # and NOT charged on the serve path: the engine's closed-form
+            # serving model has no withholding term, so keeping the read
+            # path cost-free under collusion keeps both layers' serving
+            # metrics matched — the withholding cost lands in repair
+            # traffic on both layers instead
+            rows, _holders, _corrupt = gather_available(net, chash,
+                                                        p.r_inner)
             if len(rows) < p.k_inner:
                 continue  # chunk unreadable this tick
             try:
@@ -669,9 +766,21 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
     vec = engine == "vectorized"
     rng = np.random.default_rng(p.seed)
     net = SimNetwork(seed=p.seed, vrf=p.vrf, cache_lookups=vec)
+    churn_id = P.churn_policy_id(p.churn_policy)
+    adv_id = P.adv_policy_id(p.adv_policy)
+    colluding = adv_id in P.ADV_COLLUDE_FAMILY
+    session = None
+    if churn_id == P.CHURN_PARETO:
+        # mean session matches the i.i.d. churn rate; lifetimes draw from
+        # a dedicated stream so every other policy is bit-unaffected
+        session = (np.random.default_rng((p.seed, _SESSION_STREAM)),
+                   float(P.pareto_session_mean_hours(p.churn_per_year,
+                                                     xp=np)),
+                   p.pareto_alpha, adv_id == P.ADV_ADAPTIVE)
     counter = [0]
     for _ in range(p.n_nodes):
-        _spawn(net, rng, p.byz_fraction, counter)
+        _spawn(net, rng, p.byz_fraction, counter, colluding=colluding,
+               session=session)
     client_node = next(n for n in net.alive_nodes() if not n.byzantine)
     client = VaultClient(net, client_node, batch=vec)
 
@@ -689,7 +798,6 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
         for (chash, _i), frag in node.fragments.items():
             frag_len.setdefault(chash, len(frag))
 
-    adv_id = P.adv_policy_id(p.adv_policy)
     pick = (rush_picker(net, p.adapt_boost)
             if adv_id == P.ADV_ADAPTIVE else None)
     # bootstrap: top groups up to R (client stores may undershoot when the
@@ -699,8 +807,7 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
     pool = R.SolvePool() if vec else None
     _repair_tick(net, p, registry, frag_len, pick, batch=vec, pool=pool)
 
-    p_fail = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
-    p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
+    p_fail_base = float(P.p_fail_step(p.churn_per_year, p.step_hours, xp=np))
 
     serve_on = p.read_rate > 0 and p.n_objects > 0
     serve_rng = zipf_w = None
@@ -729,12 +836,23 @@ def run_protocol(p: ProtocolParams, engine: str = "vectorized",
     for t in range(p.steps):
         net.now += p.step_hours
         net.region_load[:] = 0.0  # per-tick link budgets (repair + serving)
-        if adv_id == P.ADV_ECLIPSE:
+        if adv_id in P.ADV_ECLIPSE_FAMILY:
             in_window = p.attack_step <= t < p.attack_step + p.eclipse_steps
             net.eclipse = segment if in_window else None
-        churn = _churn_step_vec if vec else _churn_step
-        churn(net, rng, p, client_node.nid, p_fail, p_fail_b, counter)
-        if adv_id == P.ADV_TARGETED and t == p.attack_step:
+        # per-step failure probability: identical to p_fail_base except
+        # under diurnal modulation (the where() is value-identical for
+        # every other policy, so pre-existing goldens are bit-stable)
+        p_fail = float(P.diurnal_p_fail(
+            churn_id, p.churn_per_year, p.diurnal_amplitude, t,
+            p.step_hours, p_fail_base, xp=np))
+        p_fail_b = float(P.byz_churn_probability(adv_id, p_fail, xp=np))
+        if churn_id == P.CHURN_PARETO:
+            _churn_step_pareto(net, rng, p, client_node.nid, counter,
+                               session)
+        else:
+            churn = _churn_step_vec if vec else _churn_step
+            churn(net, rng, p, client_node.nid, p_fail, p_fail_b, counter)
+        if adv_id in P.ADV_TARGETED_FAMILY and t == p.attack_step:
             _targeted_attack(net, rng, p, registry, p.k_inner)
         if p.claim_every and t % p.claim_every == 0:
             nodes = list(net.alive_nodes())

@@ -269,11 +269,25 @@ def _pull_and_decode(
     SolvePool memo shortcut) lives in :func:`decode_from_available`;
     traffic, per-region link charges, holders and RTT draws are accounted
     here and are unchanged by the pool path.
+
+    Withholding hook (``policies.ADV_COLLUDE``): every gathered row is
+    verified against its creator-recorded tag (``SimNetwork.row_ok``)
+    *at pull time* — colluding members' corrupt rows are charged to
+    traffic and the holder's region links (the transfer happened) but
+    never enter the decode, and they don't claim their index, so a
+    colluder can't shadow an honest same-index row. The decode then sees
+    exactly the honest row set a serve-nothing Byzantine run yields —
+    withholding can add cost, never decode success.
     """
     available: list[tuple[int, bytes, Node]] = []
     seen: set[int] = set()
+    corrupt_bytes = 0
     for m in members:
         for idx, payload in m.serve_fragments(chash).items():
+            if not net.row_ok(chash, idx, payload):
+                corrupt_bytes += len(payload)
+                net.region_load[m.region] += len(payload)
+                continue
             if idx not in seen:
                 seen.add(idx)
                 available.append((idx, payload, m))
@@ -288,6 +302,9 @@ def _pull_and_decode(
     for _, payload, m in available[:n_pull]:
         traffic += len(payload)
         net.region_load[m.region] += len(payload)
+    # wasted colluder transfers ride the traffic lane; holders (and so
+    # the RTT draws) stay the honest fan-out set
+    traffic += corrupt_bytes
     rtts = net.rtts(requester, holders) if holders else np.zeros(1)
     return chunk, traffic, float(np.max(rtts))
 
@@ -362,6 +379,7 @@ def repair_group(
         if warm is not None:
             chunk = warm.cached_chunk(chash)
             frag = C.inner_encode_fragment(chunk, chash, meta.k_inner, index)
+            net.record_frag_tag(chash, index, frag)
             stats.traffic_bytes += len(frag)
             net.region_load[warm.region] += len(frag)
             stats.cache_hits += 1
@@ -378,6 +396,7 @@ def repair_group(
             lat += pull_lat
             new_member.groups.setdefault(chash, GroupView(meta=meta))
             frag = C.inner_encode_fragment(chunk, chash, meta.k_inner, index)
+            net.record_frag_tag(chash, index, frag)
         new_member.store_fragment(meta, index, frag, membership, proof)
         if cache_ttl > 0 and warm is None:
             new_member.cache_chunk(chash, chunk, cache_ttl)

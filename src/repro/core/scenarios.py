@@ -18,9 +18,15 @@ live in ``repro.core.policies`` (shared verbatim with the protocol-level
 simulator ``repro.core.protocol_sim``, which is cross-validated against
 this engine); see that module's docstring for the full catalogue:
 
-* churn: ``"iid"`` (paper §6.1) and ``"regional"`` correlated bursts;
+* churn: ``"iid"`` (paper §6.1), ``"regional"`` correlated bursts,
+  ``"diurnal"`` time-of-day rate modulation, and ``"pareto"``
+  heavy-tailed session lengths (protected-cohort mean-field here;
+  real session draws in the protocol layer);
 * adversary: ``"static"`` (Fig. 6), ``"adaptive"`` re-join (BFT-DSN
-  style), ``"targeted"`` greedy kill (A.3 cost model, time-resolved);
+  style), ``"targeted"`` greedy kill (A.3 cost model, time-resolved),
+  ``"eclipse"`` ring partition (mean-field), ``"collude"``
+  withholding (wasted-pull traffic, closed-form), and the composed
+  ``"eclipse_targeted"`` product;
 * cache: the ``cache_ttl_hours`` knob (0 disables), identical to the
   reference semantics (repair.py docstring / Fig. 4), with churn-aware
   holder retirement (a copy goes cold when all its holders die);
@@ -102,10 +108,14 @@ HOURS_PER_YEAR = P.HOURS_PER_YEAR
 CHURN_IID = P.CHURN_IID
 CHURN_REGIONAL = P.CHURN_REGIONAL
 CHURN_POLICIES = P.CHURN_POLICIES
+CHURN_DIURNAL = P.CHURN_DIURNAL
+CHURN_PARETO = P.CHURN_PARETO
 ADV_STATIC = P.ADV_STATIC
 ADV_ADAPTIVE = P.ADV_ADAPTIVE
 ADV_TARGETED = P.ADV_TARGETED
 ADV_ECLIPSE = P.ADV_ECLIPSE
+ADV_COLLUDE = P.ADV_COLLUDE
+ADV_ECLIPSE_TARGETED = P.ADV_ECLIPSE_TARGETED
 ADVERSARY_POLICIES = P.ADVERSARY_POLICIES
 N_REGIONS = P.N_REGIONS
 
@@ -150,6 +160,8 @@ class Scenario(NamedTuple):
     region_cap: np.float32
     cache_churn: np.int32
     seed: np.int32
+    diurnal_amplitude: np.float32
+    pareto_alpha: np.float32
 
 
 class ScenarioResult(NamedTuple):
@@ -183,10 +195,12 @@ def make_scenario(
     byz_fraction: float = 0.0, churn_per_year: float = 4.0,
     cache_ttl_hours: float = 0.0, step_hours: float = 6.0,
     years: float = 1.0, steps: int | None = None,
+    policy=None,
     churn_policy: int | str = CHURN_IID, adv_policy: int | str = ADV_STATIC,
     burst_prob: float = 0.05, burst_mult: float = 20.0,
     adapt_boost: float = 2.0, attack_frac: float = 0.0, attack_step: int = 0,
-    eclipse_steps: int = 0, frags_per_node: int = 1, replication: int = 3,
+    eclipse_steps: int = 0, diurnal_amplitude: float = 0.6,
+    pareto_alpha: float = 1.5, frags_per_node: int = 1, replication: int = 3,
     read_rate: float = 0.0, zipf_alpha: float = 1.1,
     region_cap: float = 0.0, cache_churn: bool = True,
     seed: int = 0,
@@ -204,16 +218,34 @@ def make_scenario(
     count, which wins); ``cache_ttl_hours`` enables the chunk cache
     (0 = off).
 
-    Policies (shared definitions: ``repro.core.policies``): ``churn_policy``
-    ``"iid"``/``"regional"`` (ids accepted) with ``burst_prob`` per-step
-    burst probability and ``burst_mult`` rate multiplier;
-    ``adv_policy`` ``"static"``/``"adaptive"``/``"targeted"``/``"eclipse"``
-    with ``adapt_boost`` refill bias, ``attack_frac`` of ``n_nodes`` as
-    kill budget at step ``attack_step`` (for ``eclipse``: the cut ring
+    Policies (shared definitions: ``repro.core.policies``): prefer the
+    single ``policy=`` argument — a :class:`policies.PolicySpec` built
+    from the combinators (``P.compose(P.eclipse(0.3), P.targeted_kill
+    (0.25))``), a registered zoo name (``"iid_eclipse_targeted"``), or a
+    plain policy name. It lowers through :func:`policies.resolve` to the
+    same static ids + knob scalars, so compositions share the compiled
+    executable with everything else. When given, ``policy`` sets
+    ``churn_policy``/``adv_policy`` and the knob kwargs it carries
+    (explicit knob kwargs it does *not* carry keep their values).
+
+    .. deprecated:: PR 10
+       The per-axis kwargs below remain supported and delegate through
+       the same resolver (no behavior change), but new call sites should
+       pass ``policy=``.
+
+    ``churn_policy`` ``"iid"``/``"regional"``/``"diurnal"``/``"pareto"``
+    (ids accepted) with ``burst_prob`` per-step burst probability,
+    ``burst_mult`` rate multiplier, ``diurnal_amplitude`` rate-modulation
+    depth, ``pareto_alpha`` session-tail index; ``adv_policy``
+    ``"static"``/``"adaptive"``/``"targeted"``/``"eclipse"``/
+    ``"collude"``/``"eclipse_targeted"`` with ``adapt_boost`` refill
+    bias, ``attack_frac`` of ``n_nodes`` as kill budget at step
+    ``attack_step`` (for the ``eclipse`` family: also the cut ring
     fraction, window ``[attack_step, attack_step + eclipse_steps)`` —
-    the mean-field approximation of the protocol-level partition), and
-    ``frags_per_node`` cost amortization (A.3). ``replication`` sizes the
-    Ceph-like baseline of
+    the mean-field approximation of the protocol-level partition; the
+    composed ``eclipse_targeted`` spends the same ``attack_frac`` on
+    both), and ``frags_per_node`` cost amortization (A.3).
+    ``replication`` sizes the Ceph-like baseline of
     :func:`run_replicated_grid`. ``seed`` is normally overridden by the
     grid runners' ``seeds`` axis.
 
@@ -230,6 +262,20 @@ def make_scenario(
     Domain guard: ``r_inner, replication < 256`` (fast-sampler
     ``pow_int`` domain).
     """
+    if policy is not None:
+        low = P.resolve(policy)
+        churn_policy, adv_policy = low.churn, low.adversary
+        kn = low.knob_dict()
+        burst_prob = kn.pop("burst_prob", burst_prob)
+        burst_mult = kn.pop("burst_mult", burst_mult)
+        adapt_boost = kn.pop("adapt_boost", adapt_boost)
+        attack_frac = kn.pop("attack_frac", attack_frac)
+        attack_step = kn.pop("attack_step", attack_step)
+        eclipse_steps = kn.pop("eclipse_steps", eclipse_steps)
+        diurnal_amplitude = kn.pop("diurnal_amplitude", diurnal_amplitude)
+        pareto_alpha = kn.pop("pareto_alpha", pareto_alpha)
+        if kn:  # a spec knob with no matching kwarg is a bug, not a no-op
+            raise TypeError(f"unknown policy knobs: {sorted(kn)}")
     churn_policy = P.churn_policy_id(churn_policy)
     adv_policy = P.adv_policy_id(adv_policy)
     if r_inner >= 256 or replication >= 256:
@@ -259,6 +305,8 @@ def make_scenario(
         read_rate=np.float32(read_rate), zipf_alpha=np.float32(zipf_alpha),
         region_cap=np.float32(region_cap),
         cache_churn=np.int32(bool(cache_churn)), seed=np.int32(seed),
+        diurnal_amplitude=np.float32(diurnal_amplitude),
+        pareto_alpha=np.float32(pareto_alpha),
     )
 
 
@@ -269,7 +317,8 @@ def from_simparams(p, **overrides) -> Scenario:
         k_inner=p.k_inner, r_inner=p.r_inner, n_nodes=p.n_nodes,
         byz_fraction=p.byz_fraction, churn_per_year=p.churn_per_year,
         cache_ttl_hours=p.cache_ttl_hours, step_hours=p.step_hours,
-        years=p.years, seed=p.seed,
+        years=p.years, seed=p.seed, churn_policy=p.churn_policy,
+        diurnal_amplitude=p.diurnal_amplitude,
     )
     kw.update(overrides)
     return make_scenario(**kw)
@@ -330,7 +379,12 @@ def _vault_init(st: _Static, smp: Sampler, sc: Scenario):
     inv = _Inv(
         base=base,
         active=active,
-        p_fail=P.p_fail_step(sc.churn_per_year, sc.step_hours),
+        # pareto churn swaps in the protected-cohort mean-field hazard
+        # (policies.pareto_p_fail, abstraction leak #5); every other
+        # policy gets the plain i.i.d. probability value-identically
+        p_fail=P.pareto_p_fail(
+            sc.churn_policy, sc.churn_per_year, sc.pareto_alpha,
+            sc.step_hours, P.p_fail_step(sc.churn_per_year, sc.step_hours)),
         refill_p=P.refill_byz_probability(
             sc.adv_policy, sc.byz_fraction, sc.adapt_boost),
         frag_units=1.0 / (sc.k_outer * sc.k_inner),
@@ -365,9 +419,14 @@ def _vault_churn(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
     kt = smp.fold(inv.base, t + 1)
     kc, kb, kp, kr, ka, kxh, kxb = smp.streams(kt, 7)
     honest, byz = state[0], state[1]
+    # diurnal churn recomputes this step's probability from the modulated
+    # rate; every other policy passes inv.p_fail through value-identically
+    p_fail = P.diurnal_p_fail(sc.churn_policy, sc.churn_per_year,
+                              sc.diurnal_amplitude, t, sc.step_hours,
+                              inv.p_fail)
     # adaptive adversary: byzantine members never leave voluntarily
-    p_fail_b = P.byz_churn_probability(sc.adv_policy, inv.p_fail)
-    h = honest - smp.binom(kc, honest, inv.p_fail)
+    p_fail_b = P.byz_churn_probability(sc.adv_policy, p_fail)
+    h = honest - smp.binom(kc, honest, p_fail)
     b = byz - smp.binom(kb, byz, p_fail_b)
     burst, region = _burst_draw(smp, sc, kp)
     return h, b, burst, region, (kxh, kxb), kr, ka
@@ -387,8 +446,10 @@ def _burst_thin(st: _Static, smp: Sampler, sc: Scenario, inv: _Inv,
 
 
 def _vault_attack(smp: Sampler, sc: Scenario, h, alive, ka):
-    """Per-element targeted greedy kill (only traced inside the cond)."""
-    attack = sc.adv_policy == ADV_TARGETED
+    """Per-element targeted greedy kill (only traced inside the cond).
+    Family predicate: fires for ``targeted`` and the composed
+    ``eclipse_targeted`` product alike."""
+    attack = P.targeted_flag(sc.adv_policy)
     kill = _targeted_kill(smp, sc, ka, h, alive)
     return jnp.where(attack & kill, jnp.minimum(h, sc.k_inner - 1.0), h)
 
@@ -422,11 +483,21 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
                             sc.eclipse_steps)
            & P.eclipse_groups(gidx_e, sc.attack_frac, inv.n_groups))
     deficit = jnp.where(ecl, 0.0, deficit)
+    # collusion withholding (policies.ADV_COLLUDE): every byzantine member
+    # of a repairing group serves one corrupt row per decode gather that
+    # is pulled, integrity-checked, and discarded — wasted transfers hit
+    # the traffic lane only (b here is the pre-refill byzantine count the
+    # gather actually sees). Charged as a separate additive term (exactly
+    # zero for other policies) so the pre-existing traffic expressions
+    # keep their fp summation order bit-identically.
+    wasted_pulls = jnp.where(deficit > 0.0,
+                             P.collusion_extra_pulls(sc.adv_policy, b), 0.0)
     new_b = smp.binom(kr, deficit, inv.refill_p)
     h = h + (deficit - new_b)
     b = b + new_b
 
-    t_plain = deficit.sum() * sc.k_inner * inv.frag_units
+    t_plain = (deficit.sum() * sc.k_inner * inv.frag_units
+               + wasted_pulls.sum() * inv.frag_units)
     if with_cache:
         has_cache = sc.cache_ttl_hours > 0.0
         # churn-aware cache: holders of cached copies die like any other
@@ -444,8 +515,11 @@ def _vault_repair(st: _Static, smp: Sampler, with_cache: bool, sc: Scenario,
                 & (cache_h >= 1.0))
         hit_frags = jnp.where(warm, deficit, jnp.maximum(deficit - 1.0, 0.0))
         miss_pulls = jnp.where(~warm & (deficit > 0), 1.0, 0.0)
+        # colluder waste only on the miss path (warm repairs pull the
+        # cached chunk from an honest holder — no group gather)
         t_cached = (hit_frags.sum() * inv.frag_units
-                    + miss_pulls.sum() * inv.chunk_units)
+                    + miss_pulls.sum() * inv.chunk_units
+                    + (miss_pulls * wasted_pulls).sum() * inv.frag_units)
         refresh = has_cache & (miss_pulls > 0)
         new_cache = jnp.where(refresh, now, cache_t)
         # a miss-path repairer re-caches the decoded chunk: one new holder
@@ -667,7 +741,7 @@ def _vault_batch(st: _Static, sampler: str, unroll: int = _UNROLL,
                 lambda args: burst_thin(scb, inv, *args),
                 lambda args: (args[0], args[1]),
                 (h, b, burst, region, kx))
-            hit_now = (scb.adv_policy == ADV_TARGETED) & (t == scb.attack_step)
+            hit_now = P.targeted_flag(scb.adv_policy) & (t == scb.attack_step)
             h = jax.lax.cond(
                 hit_now.any(),
                 lambda args: jnp.where(hit_now[:, None],

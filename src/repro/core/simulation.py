@@ -47,6 +47,11 @@ class SimParams:
     step_hours: float = 6.0
     years: float = 1.0
     seed: int = 0
+    # churn policy for the reference path: "iid" (default, bit-stable) or
+    # "diurnal" (sinusoidally modulated rate, policies.diurnal_p_fail);
+    # richer policies live in the batched engine / protocol simulator
+    churn_policy: int | str = "iid"
+    diurnal_amplitude: float = 0.6
 
     @property
     def frag_units(self) -> float:
@@ -90,14 +95,20 @@ def simulate_vault(p: SimParams) -> SimResult:
     # holders churn like any node, and a copy is warm only while ≥1 holder
     # survives (matches the batched engine's churn-aware cache model)
     cache_h = np.full(n_groups, p.r_inner if has_cache else 0)
-    p_fail = P.p_fail_step(p.churn_per_year, p.step_hours, xp=np)
+    churn_id = P.churn_policy_id(p.churn_policy)
+    p_fail_base = P.p_fail_step(p.churn_per_year, p.step_hours, xp=np)
     steps = int(round(p.years * HOURS_PER_YEAR / p.step_hours))
     traffic = 0.0
     repairs = 0
     cache_hits = 0
     now = 0.0
-    for _ in range(steps):
+    for t in range(steps):
         now += p.step_hours
+        # per-step rate: identical to p_fail_base except under diurnal
+        # modulation (value-identical where(), keeping iid runs bit-stable)
+        p_fail = float(P.diurnal_p_fail(
+            churn_id, p.churn_per_year, p.diurnal_amplitude, t,
+            p.step_hours, p_fail_base, xp=np))
         # --- churn: binomial thinning of members (honest & byzantine churn)
         lost_h = rng.binomial(honest, p_fail)
         lost_b = rng.binomial(byz, p_fail)

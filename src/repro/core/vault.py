@@ -24,32 +24,54 @@ MAX_ROUNDS_FACTOR = 6  # fragment-index rounds per required member
 
 def gather_available(
     net: SimNetwork, chash: bytes, r_inner: int,
-) -> tuple[list[tuple[int, bytes, Node]], list[Node]]:
+) -> tuple[list[tuple[int, bytes, Node]],
+           list[Node], list[tuple[int, bytes, Node]]]:
     """DHT walk + parallel fragment gather for one chunk. RNG-free.
 
     Walks the same candidate window as Alg. 1 QUERY and returns
-    ``(rows, holders)``: ``rows`` is the distinct fragment payloads in
-    discovery order as ``(index, payload, holder)`` — the first (nearest)
-    holder of each index wins — shaped for
+    ``(rows, holders, corrupt)``: ``rows`` is the distinct *verified*
+    fragment payloads in discovery order as ``(index, payload, holder)``
+    — the first (nearest) holder of each index wins — shaped for
     ``repair.decode_from_available``; ``holders`` is every candidate that
-    served anything, in walk order (the QUERY path's RTT fan-out set).
+    served anything, in walk order (the QUERY path's RTT fan-out set);
+    ``corrupt`` is the rows that failed ``SimNetwork.row_ok`` tag
+    verification (colluding holders, ``policies.ADV_COLLUDE``) — already
+    transferred, so callers charge their bytes, but never decoded.
+    Corrupt rows do NOT claim their index (a colluder can't shadow an
+    honest holder of the same fragment further down the walk), and
+    corrupt-only candidates do NOT join ``holders`` — the RTT fan-out
+    set, and with it every downstream RNG draw, is exactly the set a
+    serve-nothing Byzantine run yields, which is what makes the
+    collude-vs-static differential test exact.
     Shared by the client QUERY path and the serving layer
     (``protocol_sim._serve_tick``).
     """
     cands = net.candidates(C.hash_point(chash), min(4 * r_inner, net.n_nodes))
     rows: list[tuple[int, bytes, Node]] = []
     holders: list[Node] = []
+    corrupt: list[tuple[int, bytes, Node]] = []
     seen: set[int] = set()
     for cand in cands:
         served = cand.serve_fragments(chash)
         if not served:
             continue
-        holders.append(cand)
+        # a candidate joins the fan-out set iff it served ≥1 *verified*
+        # row (duplicate indices included — the pre-tag behavior for
+        # honest holders, who always verify)
+        contributed = False
         for idx, payload in served.items():
+            if not net.row_ok(chash, idx, payload):
+                # every corrupt transfer is charged (parallel pulls pay
+                # all holders), even when an honest row has the index
+                corrupt.append((idx, payload, cand))
+                continue
+            contributed = True
             if idx not in seen:
                 seen.add(idx)
                 rows.append((idx, payload, cand))
-    return rows, holders
+        if contributed:
+            holders.append(cand)
+    return rows, holders, corrupt
 
 
 @dataclasses.dataclass
@@ -162,6 +184,9 @@ class VaultClient:
             frag = code.encode(blocks, [i], backend=self.backend)[0].tobytes()
             coding += time.perf_counter() - t0
             members[picked.nid] = self.net.now
+            # the encoder knows the honest bytes: record the integrity tag
+            # pullers verify rows against (collusion/withholding defense)
+            self.net.record_frag_tag(chash, i, frag)
             picked.store_fragment(meta, i, frag, dict(members), picked_proof)
             stored.append((picked, i, frag))
             sent += len(frag)
@@ -222,7 +247,8 @@ class VaultClient:
         anchor = C.hash_point(chash)
         cands = self.net.candidates(anchor, min(4 * params.r_inner, self.net.n_nodes))
         lookup_rtt = float(np.max(self.net.rtts(self.node, cands[:8]))) if cands else 0.0
-        rows, holders = gather_available(self.net, chash, params.r_inner)
+        rows, holders, _corrupt = gather_available(
+            self.net, chash, params.r_inner)
         frags = {idx: payload for idx, payload, _ in rows}
         if len(frags) < params.k_inner:
             raise InsufficientFragments(

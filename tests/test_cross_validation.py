@@ -29,7 +29,18 @@ criteria:
 * the eclipse config is CI-gated on every metric except ``lost_objects``,
   where the engine's clean-bisection approximation is a documented
   one-sided bound: protocol losses must not exceed the engine's upper
-  band (see ``test_eclipse_loss_one_sided_bound``).
+  band (see ``test_eclipse_loss_one_sided_bound``);
+* the ISSUE-10 zoo rows: ``diurnal_static`` rides the blanket two-sided
+  gates (same daily-mean rate in both layers); ``pareto_static``,
+  ``iid_collude`` and ``iid_eclipse_targeted`` are registered
+  ``gate="one_sided"`` and get dedicated bound tests at the bottom —
+  including the *inverted* direction of the composed eclipse+targeted
+  leak, where the protocol is strictly worse than the engine.
+
+The matrix itself is auto-discovered from ``policies.zoo_members()``
+(``test_matrix_auto_discovers_zoo``); which rows land in which gate tier
+is driven by each entry's registered ``gate`` field, so registering a new
+zoo member automatically enrolls it here.
 
 Everything is seeded (engine cells and protocol replicas), so this test is
 deterministic — it either always passes or always fails for a given code
@@ -44,14 +55,50 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.cross_validate import (  # noqa: E402
-    ENGINE_SEEDS, QUICK_KW, QUICK_PROTO_SEEDS, compare, matched_configs)
+    ENGINE_SEEDS, EXCLUDED_ROWS, QUICK_KW, QUICK_PROTO_SEEDS, compare,
+    matched_configs)
+from repro.core import policies as P  # noqa: E402
 
 
 @pytest.fixture(scope="module")
 def rows():
     configs = matched_configs(**QUICK_KW)
-    configs.pop("iid_targeted")
+    # Entries registered gate="one_sided" are documented abstraction
+    # leaks with dedicated bound tests below — except iid_eclipse, whose
+    # per-metric exceptions are historically woven into the blanket tests
+    # (leak #4), and iid_targeted, which keeps its original exclusion
+    # (stretch config — engine abstraction gap documented in the
+    # benchmark docstring).
+    for entry in P.zoo_members():
+        if entry.gate == "one_sided" and entry.name != "iid_eclipse":
+            configs.pop(entry.name, None)
     return compare(configs, proto_seeds=QUICK_PROTO_SEEDS)
+
+
+@pytest.fixture(scope="module")
+def one_sided_rows():
+    """The three ISSUE-10 one-sided zoo rows, plus iid_static as the
+    differential baseline for the collude invariants (same engine grid,
+    same protocol seeds, one compare() pass)."""
+    configs = matched_configs(**QUICK_KW)
+    keep = ("iid_static", "pareto_static", "iid_collude",
+            "iid_eclipse_targeted")
+    return compare({k: configs[k] for k in keep},
+                   proto_seeds=QUICK_PROTO_SEEDS)
+
+
+def test_matrix_auto_discovers_zoo():
+    """Every registered zoo member is a matrix row (or an explicit
+    waiver), and the four ISSUE-10 members are present by name."""
+    configs = matched_configs(**QUICK_KW)
+    for entry in P.zoo_members():
+        assert entry.name in configs or entry.name in EXCLUDED_ROWS, \
+            entry.name
+    for name in ("diurnal_static", "pareto_static", "iid_collude",
+                 "iid_eclipse_targeted"):
+        assert name in configs
+    for name, reason in EXCLUDED_ROWS.items():
+        assert reason.strip(), f"waiver for {name!r} needs a reason"
 
 
 def _get(rows, config, metric):
@@ -70,6 +117,7 @@ def test_covers_required_policy_axes(rows):
     assert any("adaptive" in n for n in names)  # static + adaptive adversary
     assert any("static" in n for n in names)
     assert any("eclipse" in n for n in names)   # partition window
+    assert any("diurnal" in n for n in names)   # modulated-rate churn
 
 
 def test_loss_within_engine_ci(rows):
@@ -244,3 +292,82 @@ def test_cache_holder_leak_closed():
     fixed_h = float(np.mean(np.asarray(eng.cache_hits[0], np.float64)))
     optim_h = float(np.mean(np.asarray(eng.cache_hits[1], np.float64)))
     assert fixed_h <= optim_h, (fixed_h, optim_h)
+
+
+# --------------------------------------------- ISSUE-10 one-sided zoo rows
+def _combined(r) -> float:
+    return float(np.hypot(r["engine_ci95"], r["protocol_ci95"]))
+
+
+def test_pareto_one_sided_bound(one_sided_rows):
+    """Abstraction leak #5: the engine's Pareto mean-field keeps every
+    session *protected* for its full x_m scale (policies.pareto_p_fail),
+    so the engine's per-step churn — and with it repair activity — is a
+    strict LOWER bound on the protocol's real heavy-tailed sessions,
+    where short-lived nodes die and respawn into fresh protected cohorts
+    faster than the mean-field credits. Gate exactly that direction plus
+    a deterministic sanity ceiling."""
+    for metric in ("repairs", "repair_traffic_units"):
+        r = _get(one_sided_rows, "pareto_static", metric)
+        assert (r["protocol_mean"]
+                >= r["engine_mean"] - _combined(r)), r
+        assert r["protocol_mean"] <= 2.0 * r["engine_mean"], r
+    # the understated churn never binds on durability at this config
+    lost = _get(one_sided_rows, "pareto_static", "lost_objects")
+    assert lost["protocol_mean"] <= lost["engine_mean"] + 1.0, lost
+    # membership statistics still agree within the combined CI
+    hon = _get(one_sided_rows, "pareto_static", "final_honest_mean")
+    assert hon["abs_diff"] <= _combined(hon), hon
+
+
+def test_collude_differential_and_one_sided_traffic(one_sided_rows):
+    """Withholding changes ONLY the traffic bill, in both layers.
+
+    Corrupt-only candidates never join the pull fan-out set and corrupt
+    rows never reach a decode, so a collude run is RNG-identical to its
+    matched static run in every field except repair traffic — the
+    protocol invariant (vault.gather_available) mirrored by the engine's
+    additive-zero wasted-pulls term. Assert exact equality on the
+    RNG-dependent metrics, strict traffic increase, and the one-sided
+    traffic gate (the engine charges every deficit repair the full
+    Byzantine count, the conservative reading of parallel pulls)."""
+    for metric in ("repairs", "lost_objects", "final_honest_mean",
+                   "cache_hits", "reads_failed", "hit_rate"):
+        co = _get(one_sided_rows, "iid_collude", metric)
+        st = _get(one_sided_rows, "iid_static", metric)
+        assert co["protocol_mean"] == st["protocol_mean"], (metric, co, st)
+        assert co["engine_mean"] == st["engine_mean"], (metric, co, st)
+    co = _get(one_sided_rows, "iid_collude", "repair_traffic_units")
+    st = _get(one_sided_rows, "iid_static", "repair_traffic_units")
+    assert co["protocol_mean"] > st["protocol_mean"], (co, st)
+    assert co["engine_mean"] > st["engine_mean"], (co, st)
+    assert co["protocol_mean"] <= co["engine_mean"] + _combined(co), co
+
+
+def test_eclipse_targeted_inverted_one_sided_bound(one_sided_rows):
+    """The composed adversary INVERTS the eclipse leak direction.
+
+    Each component leak is conservative on its own (engine over-predicts
+    eclipse loss, leak #4), but composed, the targeted kill lands while
+    the partition blocks recovery: at protocol level the killed groups
+    inside the cut cannot be repaired around for the whole window, a
+    compounding the engine's independent mean-field product cannot see.
+    Measured at the QUICK config the protocol therefore loses MORE
+    objects than the engine's upper band — so the one-sided gate points
+    the other way (engine as the optimistic floor), with a deterministic
+    ceiling; repairs are one-sided low (the engine keeps repairing
+    groups the protocol already lost), and the serving metrics still
+    agree within the combined CI."""
+    lost = _get(one_sided_rows, "iid_eclipse_targeted", "lost_objects")
+    assert (lost["protocol_mean"]
+            >= lost["engine_mean"] - _combined(lost)), lost
+    assert lost["protocol_mean"] <= (
+        lost["engine_mean"] + 3.0 * max(_combined(lost), 0.1)), lost
+    rep = _get(one_sided_rows, "iid_eclipse_targeted", "repairs")
+    assert rep["protocol_mean"] <= rep["engine_mean"] + _combined(rep), rep
+    alive = _get(one_sided_rows, "iid_eclipse_targeted", "alive_frac_final")
+    assert (alive["protocol_mean"]
+            <= alive["engine_mean"] + _combined(alive)), alive
+    for metric in ("served_traffic_units", "reads_failed"):
+        r = _get(one_sided_rows, "iid_eclipse_targeted", metric)
+        assert r["within_combined_ci"], r

@@ -1,0 +1,215 @@
+"""Property tests for the policy combinator API (ISSUE 10 tentpole).
+
+The contract under test, in order of importance:
+
+* **Identity** — lowering a combinator spec through ``policy=`` produces a
+  *bit-identical* engine cell / protocol config to the legacy
+  ``churn_policy=``/``adv_policy=`` kwargs it replaces, for every
+  pre-combinator policy (this is what keeps the golden suites green).
+* **Round-trip** — every registered zoo spec survives
+  ``resolve(resolve(spec))`` unchanged, and every zoo/plain name resolves.
+* **Composition algebra** — later-wins per axis, knob merge later-wins per
+  key, and the adversary product table (eclipse × targeted →
+  eclipse_targeted, symmetric and absorbing) behave as documented.
+* **Rejection** — axis-ambiguous ints and unknown names/knobs raise.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core import policies as P  # noqa: E402
+from repro.core import protocol_sim as PS  # noqa: E402
+from repro.core import scenarios as SC  # noqa: E402
+
+BASE = dict(n_objects=2, n_chunks=3, k_outer=2, k_inner=4, r_inner=8,
+            n_nodes=100, byz_fraction=0.1, churn_per_year=30.0,
+            step_hours=12.0, steps=6)
+
+
+def _cells_equal(a, b) -> bool:
+    """Bit-wise equality of two Scenario NamedTuples (all leaves)."""
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+# ------------------------------------------------------------------ identity
+LEGACY = [
+    # (spec, legacy make_scenario kwargs)
+    (P.compose(P.iid(), P.static()), {}),
+    (P.regional(burst_prob=0.2, burst_mult=10.0),
+     dict(churn_policy="regional", burst_prob=0.2, burst_mult=10.0)),
+    (P.adaptive(boost=3.0),
+     dict(adv_policy="adaptive", adapt_boost=3.0)),
+    (P.targeted_kill(budget=0.25, attack_step=3),
+     dict(adv_policy="targeted", attack_frac=0.25, attack_step=3)),
+    (P.eclipse(frac=0.3, window=2, attack_step=1),
+     dict(adv_policy="eclipse", attack_frac=0.3, eclipse_steps=2,
+          attack_step=1)),
+    (P.compose(P.regional(burst_prob=0.2), P.adaptive()),
+     dict(churn_policy="regional", adv_policy="adaptive", burst_prob=0.2)),
+]
+
+
+@pytest.mark.parametrize("spec,kwargs", LEGACY,
+                         ids=[s.name for s, _ in LEGACY])
+def test_spec_lowering_is_bit_identical_to_kwargs(spec, kwargs):
+    """policy= and the legacy kwargs build the same Scenario, leaf for
+    leaf — the combinator layer is pure construction-time sugar."""
+    via_spec = SC.make_scenario(**BASE, policy=spec)
+    via_kwargs = SC.make_scenario(**BASE, **kwargs)
+    assert _cells_equal(via_spec, via_kwargs)
+
+
+def test_string_and_none_shims_resolve_through_registry():
+    """Pre-existing call sites pass names (or nothing): all of them must
+    keep resolving, now through the one registry."""
+    for name in ("iid", "regional"):
+        assert P.resolve(name).churn == P.CHURN_POLICIES[name]
+    for name in ("static", "adaptive", "targeted", "eclipse"):
+        assert P.resolve(name).adversary == P.ADVERSARY_POLICIES[name]
+    low = P.resolve(None)
+    assert (low.churn, low.adversary) == (P.CHURN_IID, P.ADV_STATIC)
+    # per-axis int shims are unchanged
+    assert P.churn_policy_id(P.CHURN_REGIONAL) == P.CHURN_REGIONAL
+    assert P.adv_policy_id("eclipse") == P.ADV_ECLIPSE
+
+
+def test_protocol_params_policy_lowering_matches_kwargs():
+    """ProtocolParams(policy=) lowers onto the same fields the legacy
+    kwargs set; to_scenario_kwargs therefore builds the same cell."""
+    small = dict(n_nodes=60, n_objects=2, steps=4)
+    via_spec = PS.ProtocolParams(
+        **small, policy=P.eclipse(frac=0.3, window=2, attack_step=1))
+    via_kwargs = PS.ProtocolParams(
+        **small, adv_policy="eclipse", attack_frac=0.3, eclipse_steps=2,
+        attack_step=1)
+    ks, kk = via_spec.to_scenario_kwargs(), via_kwargs.to_scenario_kwargs()
+    kk["churn_policy"] = P.churn_policy_id(kk["churn_policy"])
+    kk["adv_policy"] = P.adv_policy_id(kk["adv_policy"])
+    assert ks == kk
+
+
+# ----------------------------------------------------------------- round-trip
+def test_every_registered_spec_round_trips():
+    for entry in P.zoo_members():
+        low = P.resolve(entry.spec)
+        assert isinstance(low, P.LoweredPolicy)
+        # LoweredPolicy passthrough: resolving a lowering is the identity
+        assert P.resolve(low) is low
+        # name resolution agrees with spec resolution
+        assert P.resolve(entry.name) == low
+        # lowered ids are registered, knob keys are valid
+        assert low.churn in P.CHURN_POLICIES.values()
+        assert low.adversary in P.ADVERSARY_POLICIES.values()
+        assert set(low.knob_dict()) <= set(P.POLICY_KNOBS)
+
+
+def test_lowered_policy_is_hashable_and_stable():
+    a = P.resolve(P.compose(P.eclipse(frac=0.3), P.targeted_kill(0.2)))
+    b = P.resolve(P.compose(P.eclipse(frac=0.3), P.targeted_kill(0.2)))
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+
+
+# ---------------------------------------------------------------- composition
+def test_compose_later_wins_per_axis():
+    s = P.compose(P.iid(), P.regional(burst_prob=0.3))
+    assert P.resolve(s).churn == P.CHURN_REGIONAL
+    s = P.compose(P.adaptive(), P.static())
+    assert P.resolve(s).adversary == P.ADV_STATIC
+    # unset axes pass through untouched
+    s = P.compose(P.diurnal(0.5), P.collude())
+    low = P.resolve(s)
+    assert (low.churn, low.adversary) == (P.CHURN_DIURNAL, P.ADV_COLLUDE)
+
+
+def test_compose_knobs_merge_later_wins():
+    s = P.compose(P.eclipse(frac=0.1, window=5),
+                  P.targeted_kill(budget=0.4))
+    kn = P.resolve(s).knob_dict()
+    assert kn["attack_frac"] == 0.4  # shared budget knob: later wins
+    assert kn["eclipse_steps"] == 5  # untouched by the later spec
+
+
+def test_compose_product_table_symmetric_and_absorbing():
+    et = P.ADV_ECLIPSE_TARGETED
+    assert P.resolve(P.compose(P.eclipse(), P.targeted_kill())).adversary \
+        == et
+    assert P.resolve(P.compose(P.targeted_kill(), P.eclipse())).adversary \
+        == et
+    # absorbing: composing the product with either component stays product
+    prod = P.compose(P.eclipse(), P.targeted_kill())
+    assert P.resolve(P.compose(prod, P.eclipse())).adversary == et
+    assert P.resolve(P.compose(prod, P.targeted_kill())).adversary == et
+    # non-product adversary pairs still later-win
+    assert P.resolve(P.compose(P.eclipse(), P.collude())).adversary \
+        == P.ADV_COLLUDE
+
+
+def test_compose_single_is_identity():
+    s = P.regional(burst_prob=0.2)
+    assert P.resolve(P.compose(s)) == P.resolve(s)
+
+
+# ------------------------------------------------------------------ rejection
+def test_plain_ints_are_rejected_as_axis_ambiguous():
+    with pytest.raises(TypeError):
+        P.resolve(P.ADV_TARGETED)
+    with pytest.raises(KeyError):
+        P.resolve("no_such_policy")
+    with pytest.raises(TypeError):
+        P._spec("bad", not_a_knob=1.0)
+
+
+def test_unknown_spec_knob_raises_at_config_time():
+    bad = P.PolicySpec(name="bad", churn=P.CHURN_IID,
+                       knobs=(("not_a_knob", 1.0),))
+    with pytest.raises(TypeError):
+        SC.make_scenario(**BASE, policy=bad)
+    with pytest.raises(TypeError):
+        PS.ProtocolParams(n_nodes=60, policy=bad)
+
+
+# ------------------------------------------------------------------- zoo shape
+def test_zoo_registry_shape_and_guards():
+    entries = P.zoo_members()
+    names = [e.name for e in entries]
+    assert len(names) == len(set(names))
+    # the four ISSUE-10 members are registered, on top of the legacy six
+    for required in ("diurnal_static", "pareto_static", "iid_collude",
+                     "iid_eclipse_targeted"):
+        assert required in names
+    assert len(names) >= 10
+    for e in entries:
+        assert e.gate in ("two_sided", "one_sided")
+    with pytest.raises(ValueError):
+        P._register(P.ZooEntry(name="iid_static", spec=P.iid()))
+    with pytest.raises(ValueError):
+        P._register(P.ZooEntry(name="x_bad_gate", spec=P.iid(),
+                               gate="sideways"))
+    assert "x_bad_gate" not in [e.name for e in P.zoo_members()]
+
+
+def test_stepfrac_resolves_with_integer_arithmetic():
+    assert P.StepFrac(1, 3).resolve(30) == 10
+    assert P.StepFrac(1, 2).resolve(31) == 15  # floor, like steps // 2
+    kw = P.zoo_config_kwargs(P.zoo_entry("iid_eclipse"), 30)
+    assert kw["attack_step"] == 7 and kw["eclipse_steps"] == 10
+    assert kw["policy"] is P.zoo_entry("iid_eclipse").spec
+
+
+def test_replace_keeps_protocol_policy_lowering_idempotent():
+    import dataclasses
+
+    p = PS.ProtocolParams(
+        n_nodes=60, policy=P.compose(P.eclipse(frac=0.3, window=4,
+                                               attack_step=3),
+                                     P.targeted_kill(budget=0.25)))
+    q = dataclasses.replace(p, seed=7)  # re-runs __post_init__
+    assert q.adv_policy == p.adv_policy == P.ADV_ECLIPSE_TARGETED
+    assert (q.attack_frac, q.eclipse_steps, q.attack_step) == \
+        (p.attack_frac, p.eclipse_steps, p.attack_step)

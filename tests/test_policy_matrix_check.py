@@ -1,0 +1,101 @@
+"""``scripts/check_policy_matrix.py`` really fails on a doctored registry.
+
+Stdlib-only guard for the guard: the checker must pass on the repo as
+committed, and must exit non-zero (with a pointed message) when
+
+* the benchmark stops calling ``zoo_members()`` (auto-discovery reverted),
+* an ``EXCLUDED_ROWS`` waiver has an empty reason,
+* a waiver names a policy that is not registered (stale), or
+* the registry literals stop being ast-discoverable.
+
+Mirrors ``tests/test_ci_shards.py`` for ``check_shards.py``.
+"""
+import pathlib
+import re
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "scripts"))
+
+import check_policy_matrix as CPM  # noqa: E402
+
+POLICIES = ROOT / "src" / "repro" / "core" / "policies.py"
+BENCH = ROOT / "benchmarks" / "cross_validate.py"
+
+
+def test_repo_as_committed_passes(capsys):
+    assert CPM.main([]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "registered policies" in out
+
+
+def test_registered_names_found_in_real_registry():
+    names = CPM.registered_names(POLICIES)
+    for required in ("iid_static", "diurnal_static", "pareto_static",
+                     "iid_collude", "iid_eclipse_targeted"):
+        assert required in names
+    assert len(names) >= 10
+
+
+def _doctored(tmp_path, src: pathlib.Path, pattern: str, repl: str,
+              count_required: int = 1) -> str:
+    text = src.read_text()
+    doctored, n = re.subn(pattern, repl, text)
+    assert n >= count_required, f"doctoring pattern missed: {pattern}"
+    out = tmp_path / src.name
+    out.write_text(doctored)
+    return str(out)
+
+
+def test_fails_when_auto_discovery_reverted(tmp_path, capsys):
+    bench = _doctored(tmp_path, BENCH, r"zoo_members", "hand_written_rows")
+    assert CPM.main(["--bench", bench]) == 1
+    assert "auto-discovered" in capsys.readouterr().err
+
+
+def test_fails_on_unexplained_waiver(tmp_path, capsys):
+    bench = _doctored(
+        tmp_path, BENCH,
+        r"EXCLUDED_ROWS: dict\[str, str\] = \{\}",
+        'EXCLUDED_ROWS: dict[str, str] = {"iid_collude": ""}')
+    assert CPM.main(["--bench", bench]) == 1
+    assert "no reason" in capsys.readouterr().err
+
+
+def test_fails_on_stale_waiver(tmp_path, capsys):
+    bench = _doctored(
+        tmp_path, BENCH,
+        r"EXCLUDED_ROWS: dict\[str, str\] = \{\}",
+        'EXCLUDED_ROWS: dict[str, str] = '
+        '{"renamed_long_ago": "was too slow"}')
+    assert CPM.main(["--bench", bench]) == 1
+    assert "stale waiver" in capsys.readouterr().err
+
+
+def test_fails_when_registry_not_parseable(tmp_path):
+    policies = _doctored(tmp_path, POLICIES, r"_register\(",
+                         "_register_dynamically(")
+    with pytest.raises(SystemExit, match="no _register"):
+        CPM.registered_names(pathlib.Path(policies))
+
+
+def test_fails_on_duplicate_registration(tmp_path, capsys):
+    # append a second iid_static literal: ast sees the name twice
+    out = tmp_path / "policies.py"
+    out.write_text(POLICIES.read_text()
+                   + '\n_register(ZooEntry(\n    name="iid_static",\n'
+                   '    spec=compose(iid(), static())))\n')
+    assert CPM.main(["--policies", str(out)]) == 1
+    assert "more than once" in capsys.readouterr().err
+
+
+def test_waived_policy_is_accepted_with_reason(tmp_path, capsys):
+    bench = _doctored(
+        tmp_path, BENCH,
+        r"EXCLUDED_ROWS: dict\[str, str\] = \{\}",
+        'EXCLUDED_ROWS: dict[str, str] = '
+        '{"iid_collude": "example: waived for a documented reason"}')
+    assert CPM.main(["--bench", bench]) == 0
+    assert "1 waived" in capsys.readouterr().out

@@ -1,0 +1,212 @@
+"""Per-member invariants for the ISSUE-10 policy zoo, on both tiers.
+
+One test family per new zoo member, checking the property that *defines*
+the member rather than replaying goldens:
+
+* **diurnal** — the rate factor averages to exactly 1 over whole days
+  (the modulation integrates to the same yearly rate as ``iid``), and
+  ``amplitude=0`` is bit-identical to ``iid`` through the engine.
+* **pareto** — the engine's protected-cohort hazard sits strictly below
+  the i.i.d. hazard for α > 1 (Jensen) and equals it as α → 1; the
+  inverse-CDF session draw reproduces the target mean and respects the
+  x_m floor; the protocol's session-based churn runs and actually
+  diverges from the i.i.d. coin.
+* **collude** — withholding never increases decode success: on BOTH
+  tiers a collude run is identical to its matched static run in every
+  durability and serving field, and strictly more expensive in repair
+  traffic only.
+* **eclipse+targeted** — with a zero-length window the composed product
+  collapses bit-wise onto plain ``targeted`` on both tiers (the family
+  lowering adds no behavior of its own).
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from repro.core import policies as P  # noqa: E402
+from repro.core import protocol_sim as PS  # noqa: E402
+from repro.core import scenarios as SC  # noqa: E402
+
+# one static shape for every engine cell in this file (jit cache reuse)
+ENGINE_BASE = dict(n_objects=2, n_chunks=3, k_outer=2, k_inner=4,
+                   r_inner=8, n_nodes=120, byz_fraction=0.2,
+                   churn_per_year=40.0, step_hours=12.0, steps=8,
+                   read_rate=20.0, zipf_alpha=1.1)
+ENGINE_SEEDS = (0, 1, 2)
+
+PROTO_BASE = dict(n_nodes=60, n_objects=2, n_chunks=3, k_outer=2,
+                  k_inner=3, r_inner=6, byz_fraction=0.2,
+                  churn_per_year=40.0, step_hours=12.0, steps=6,
+                  claim_every=2, read_rate=20.0, seed=3)
+
+
+def _grid(*cells):
+    return SC.run_grid([dict(ENGINE_BASE, **c) for c in cells],
+                       seeds=ENGINE_SEEDS, sampler="fast")
+
+
+def _cell_equal(res, i, j, skip=()):
+    """Bit-wise equality of two cells of one ScenarioResult."""
+    for field, leaf in zip(res._fields, res):
+        if field in skip:
+            continue
+        a, b = np.asarray(leaf[i]), np.asarray(leaf[j])
+        assert np.array_equal(a, b), field
+    return True
+
+
+# -------------------------------------------------------------- diurnal
+def test_diurnal_factor_integrates_to_unit_mean():
+    """Whole days of midpoint-sampled factors average to exactly 1 — the
+    modulated rate matches the iid yearly rate by construction."""
+    for step_hours, n_days in ((6.0, 2), (12.0, 3), (8.0, 1)):
+        steps = int(n_days * 24 / step_hours)
+        t = np.arange(steps, dtype=np.float64)
+        f = P.diurnal_rate_factor(t, step_hours, 0.6, xp=np)
+        assert abs(float(f.mean()) - 1.0) < 1e-9, (step_hours, n_days)
+        assert float(f.max()) > 1.0 and float(f.min()) < 1.0
+
+
+def test_diurnal_p_fail_passthrough_and_zero_amplitude():
+    base = float(P.p_fail_step(40.0, 12.0, xp=np))
+    # non-diurnal policies: pass-through is value-identical
+    for cp in (P.CHURN_IID, P.CHURN_REGIONAL, P.CHURN_PARETO):
+        got = float(P.diurnal_p_fail(cp, 40.0, 0.6, 3, 12.0, base, xp=np))
+        assert got == base, cp
+    # diurnal with amplitude 0: the modulated rate IS the base rate
+    got = float(P.diurnal_p_fail(P.CHURN_DIURNAL, 40.0, 0.0, 3, 12.0,
+                                 base, xp=np))
+    assert got == base
+    # endpoint sampling would alias to zero here; the midpoint must not
+    hot = float(P.diurnal_p_fail(P.CHURN_DIURNAL, 40.0, 0.6, 0, 12.0,
+                                 base, xp=np))
+    assert hot != base
+
+
+def test_diurnal_amplitude_zero_is_iid_bitwise_engine():
+    res = _grid(dict(churn_policy="iid"),
+                dict(churn_policy="diurnal", diurnal_amplitude=0.0))
+    _cell_equal(res, 0, 1)
+
+
+# --------------------------------------------------------------- pareto
+def test_pareto_hazard_below_iid_jensen():
+    base = float(P.p_fail_step(40.0, 12.0, xp=np))
+    for alpha in (1.2, 1.5, 3.0):
+        pp = float(P.pareto_p_fail(P.CHURN_PARETO, 40.0, alpha, 12.0,
+                                   base, xp=np))
+        assert pp < base, alpha
+    # α → 1 recovers the i.i.d. hazard; other policies pass through
+    near = float(P.pareto_p_fail(P.CHURN_PARETO, 40.0, 1.0 + 1e-6, 12.0,
+                                 base, xp=np))
+    assert abs(near - base) < 1e-6
+    assert float(P.pareto_p_fail(P.CHURN_IID, 40.0, 1.5, 12.0, base,
+                                 xp=np)) == base
+
+
+def test_pareto_session_draw_mean_and_floor():
+    mean_h = float(P.pareto_session_mean_hours(26.0, xp=np))
+    u = (np.arange(200_000, dtype=np.float64) + 0.5) / 200_000
+    draws = P.pareto_session_from_uniform(u, mean_h, 1.5, xp=np)
+    # inverse-CDF quadrature reproduces the target mean (heavy tail:
+    # midpoint truncation keeps this a couple of percent low)
+    assert abs(float(draws.mean()) - mean_h) / mean_h < 0.05
+    # the x_m protected floor: no session shorter than the scale
+    xm = float(P.pareto_xm_hours(mean_h, 1.5, xp=np))
+    assert float(draws.min()) >= xm - 1e-9
+
+
+def test_pareto_protocol_sessions_diverge_from_iid():
+    # crank the rate so x_m (the no-death session floor: mean·(α−1)/α,
+    # ≈ 6 steps at the base rate) fits inside this short run
+    fast = {**PROTO_BASE, "churn_per_year": 400.0}
+    iid = PS.run_protocol(PS.ProtocolParams(**fast, policy="iid"))
+    par = PS.run_protocol(
+        PS.ProtocolParams(**fast, policy=P.pareto_sessions(1.5)))
+    assert par.repairs > 0  # sessions expire, churn really happens
+    assert np.all(par.alive_frac_trace >= 0.0)
+    # the deterministic session clock is a different churn process from
+    # the per-step coin — the runs must not coincide
+    assert not np.array_equal(iid.honest_trace, par.honest_trace)
+
+
+# -------------------------------------------------------------- collude
+_DURABILITY = ("repairs", "cache_hits", "lost_objects", "lost_fraction",
+               "final_honest_mean", "honest_min", "members_max")
+_SERVING = ("reads_issued", "reads_hit", "reads_miss", "reads_degraded",
+            "reads_failed", "served_traffic_units")
+
+
+def test_collude_engine_traffic_only_differential():
+    res = _grid(dict(adv_policy="static"), dict(adv_policy="collude"))
+    # everything except the traffic bill is bit-identical
+    _cell_equal(res, 0, 1, skip=("repair_traffic_units",))
+    st = np.asarray(res.repair_traffic_units[0], np.float64)
+    co = np.asarray(res.repair_traffic_units[1], np.float64)
+    assert np.all(co >= st)
+    assert np.any(co > st)  # wasted colluder pulls really get charged
+
+
+def test_collude_protocol_traffic_only_differential():
+    st = PS.run_protocol(PS.ProtocolParams(**PROTO_BASE, policy="static"))
+    co = PS.run_protocol(
+        PS.ProtocolParams(**PROTO_BASE, policy=P.collude()))
+    # withholding never increases decode success: every durability and
+    # serving field matches the static run exactly (corrupt rows never
+    # reach a decode, corrupt-only candidates never join the fan-out)
+    for field in _DURABILITY + _SERVING:
+        assert getattr(co, field) == getattr(st, field), field
+    assert np.array_equal(co.honest_trace, st.honest_trace)
+    assert np.array_equal(co.byz_trace, st.byz_trace)
+    assert np.array_equal(co.alive_frac_trace, st.alive_frac_trace)
+    assert co.loss_events == st.loss_events
+    # ... and the integrity-checked-and-discarded pulls cost extra
+    assert co.repair_traffic_units > st.repair_traffic_units
+
+
+# ---------------------------------------------------- eclipse + targeted
+_ET_KW = dict(attack_frac=0.25, attack_step=3)
+
+
+def test_eclipse_targeted_zero_window_is_targeted_engine():
+    res = _grid(dict(adv_policy="targeted", **_ET_KW),
+                dict(policy=P.compose(P.eclipse(frac=0.25, window=0,
+                                                attack_step=3),
+                                      P.targeted_kill(budget=0.25,
+                                                      attack_step=3))))
+    # the product id only adds the window; window 0 must collapse onto
+    # plain targeted bit-for-bit (family-flag lowering, no retrace)
+    _cell_equal(res, 0, 1)
+
+
+def test_eclipse_targeted_zero_window_is_targeted_protocol():
+    tg = PS.run_protocol(PS.ProtocolParams(
+        **PROTO_BASE, adv_policy="targeted", **_ET_KW))
+    pp = PS.ProtocolParams(
+        **PROTO_BASE, policy=P.compose(
+            P.eclipse(frac=0.25, window=0, attack_step=3),
+            P.targeted_kill(budget=0.25, attack_step=3)))
+    # distinct lowered id (the product), identical behavior at window 0
+    assert P.adv_policy_id(pp.adv_policy) == P.ADV_ECLIPSE_TARGETED
+    et = PS.run_protocol(pp)
+    for field in _DURABILITY + _SERVING + ("repair_traffic_units",):
+        assert getattr(et, field) == getattr(tg, field), field
+    assert np.array_equal(et.honest_trace, tg.honest_trace)
+    assert np.array_equal(et.byz_trace, tg.byz_trace)
+
+
+def test_eclipse_targeted_window_hurts():
+    """Opening the window on top of the kill can only cost durability:
+    eclipsed groups can neither repair nor serve through the cut."""
+    res = _grid(
+        dict(policy=P.compose(P.eclipse(frac=0.3, window=0, attack_step=3),
+                              P.targeted_kill(budget=0.25, attack_step=3))),
+        dict(policy=P.compose(P.eclipse(frac=0.3, window=4, attack_step=3),
+                              P.targeted_kill(budget=0.25, attack_step=3))))
+    closed = np.asarray(res.lost_objects[0], np.float64).mean()
+    open_ = np.asarray(res.lost_objects[1], np.float64).mean()
+    assert open_ >= closed
